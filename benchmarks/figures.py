@@ -1,0 +1,210 @@
+"""One benchmark per paper table/figure (§V).
+
+fig2  — p99 end-to-end latency vs offered load (endpoint vs NE-AIaaS)
+fig3  — ASP violation probability vs offered load (served-and-failed)
+fig4  — interruption probability vs user speed (teardown vs MBB)
+table1— R1–R10 pass/fail harness driven against the implementation
+
+Each returns (rows, derived) where rows are CSV-ready dicts and ``derived``
+captures the paper's qualitative claim check (used by tests + EXPERIMENTS).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.sim import (LatencyModel, SimConfig, simulate_endpoint,  # noqa: E402
+                       simulate_neaiaas, simulate_mobility)
+
+ELL99_MS = 400.0
+T_MAX_MS = 1000.0
+LOADS = (0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95)
+SPEEDS = (0, 15, 30, 60, 90, 120)
+
+
+def fig2_p99_vs_load(n_requests: int = 20_000):
+    model = LatencyModel(SimConfig(n_requests=n_requests))
+    rows = []
+    for rho in LOADS:
+        e = simulate_endpoint(rho, model, ell99=ELL99_MS, t_max=T_MAX_MS)
+        n = simulate_neaiaas(rho, model, ell99=ELL99_MS, t_max=T_MAX_MS)
+        rows.append({"rho": rho, "endpoint_p99_ms": round(e.p99_ms, 1),
+                     "neaiaas_p99_ms": round(n.p99_ms, 1),
+                     "endpoint_wq_ms": round(e.decomposition["wq"], 1),
+                     "neaiaas_wq_ms": round(n.decomposition["wq"], 1)})
+    hi = rows[-1]
+    derived = {
+        "claim": "NE-AIaaS delays tail collapse under load",
+        "endpoint_p99_at_0.95": hi["endpoint_p99_ms"],
+        "neaiaas_p99_at_0.95": hi["neaiaas_p99_ms"],
+        "tail_ratio": round(hi["endpoint_p99_ms"] / hi["neaiaas_p99_ms"], 2),
+        "holds": hi["endpoint_p99_ms"] > 1.5 * hi["neaiaas_p99_ms"],
+    }
+    return rows, derived
+
+
+def fig3_violation_vs_load(n_requests: int = 20_000):
+    model = LatencyModel(SimConfig(n_requests=n_requests))
+    rows = []
+    for rho in LOADS:
+        e = simulate_endpoint(rho, model, ell99=ELL99_MS, t_max=T_MAX_MS)
+        n = simulate_neaiaas(rho, model, ell99=ELL99_MS, t_max=T_MAX_MS)
+        rows.append({"rho": rho,
+                     "endpoint_violation": round(e.violation_prob, 4),
+                     "neaiaas_violation": round(n.violation_prob, 4),
+                     "neaiaas_admitted_frac": round(n.admitted_frac, 3)})
+    hi = rows[-1]
+    derived = {
+        "claim": "NE-AIaaS keeps served-and-failed violations low at load",
+        "endpoint_viol_at_0.95": hi["endpoint_violation"],
+        "neaiaas_viol_at_0.95": hi["neaiaas_violation"],
+        "holds": (hi["endpoint_violation"] > 0.15
+                  and hi["neaiaas_violation"] < 0.05),
+    }
+    return rows, derived
+
+
+def fig4_interruption_vs_speed(n_sessions: int = 40):
+    rows = []
+    for v in SPEEDS:
+        t = simulate_mobility(v, "teardown", n_sessions=n_sessions)
+        b = simulate_mobility(v, "mbb", n_sessions=n_sessions)
+        rows.append({"speed_kmh": v,
+                     "teardown_interruption": round(t.interruption_prob, 3),
+                     "mbb_interruption": round(b.interruption_prob, 3),
+                     "handovers_per_session": round(t.handovers_per_session, 2)})
+    hi = rows[-1]
+    derived = {
+        "claim": "make-before-break keeps interruption ≈ 0 across speeds",
+        "teardown_at_120kmh": hi["teardown_interruption"],
+        "mbb_at_120kmh": hi["mbb_interruption"],
+        "holds": (hi["teardown_interruption"] > 0.5
+                  and hi["mbb_interruption"] <= 0.05),
+    }
+    return rows, derived
+
+
+def table1_requirements():
+    """R1–R10 pass/fail, each exercised against the real implementation."""
+    from repro.core import Orchestrator, default_asp, FailureCause, SessionError
+    from repro.core.asp import MobilityClass
+    from repro.core.clock import VirtualClock
+    from repro.core.discovery import discover
+    from repro.core.failures import Timers
+
+    rows = []
+
+    def check(req, desc, fn):
+        t0 = time.perf_counter()
+        try:
+            ok = bool(fn())
+        except Exception as e:  # a requirement harness must not crash
+            ok = False
+            desc += f" ({type(e).__name__}: {e})"
+        rows.append({"req": req, "passes": ok, "definition": desc,
+                     "us": round((time.perf_counter() - t0) * 1e6, 1)})
+
+    clock = VirtualClock()
+    orch = Orchestrator(clock=clock)
+    asp = default_asp(mobility=MobilityClass.VEHICULAR)
+
+    def r1():
+        cands = discover(asp, orch.catalog, orch.sites, orch.predictors,
+                         "zone-a", analytics=orch.analytics)
+        ranked = [c for c in cands if c.admissible]
+        annotated = all(c.prediction is not None for c in ranked)
+        constrained = any(not c.admissible and c.exclusion_reason
+                          for c in cands)
+        return ranked and annotated and constrained
+    check("R1", "discoverability: ASP -> ranked admissible (model,site) "
+                "with explicit constraints", r1)
+
+    session_box = {}
+
+    def r2():
+        s = orch.establish(asp, "ue-r2", "zone-a")
+        session_box["s"] = s
+        return s.committed()
+    check("R2", "policy-consistent admission: joint compute+QoS feasibility",
+          r2)
+
+    def r3():
+        # exhaust QoS flows and verify compute side rolls back atomically
+        from repro.core.qos import QoSFlowManager, PREMIUM
+        from repro.core.twophase import TwoPhaseCoordinator
+        qos = QoSFlowManager(clock, premium_flows_per_path=0)
+        coord = TwoPhaseCoordinator(clock, orch.sites, qos, Timers())
+        site = orch.sites["edge-a"]
+        before = site.slots_in_use()
+        try:
+            coord.prepare(orch.catalog.get("edge-tiny"), "edge-a", "zone-a",
+                          PREMIUM, slots=1, cache_bytes=1e6)
+            return False
+        except SessionError as e:
+            return (e.cause is FailureCause.QOS_SCARCITY
+                    and site.slots_in_use() == before)
+    check("R3", "atomic binding: commit both or rollback (no partial "
+                "allocation)", r3)
+
+    def r4():
+        s = session_box["s"]
+        return s.binding.qfi > 0 and s.binding.steering_handle
+    check("R4", "enforceable transport granularity: objectives bound at "
+                "QFI granularity", r4)
+
+    def r5():
+        s = session_box["s"]
+        for _ in range(12):
+            orch.serve(s, prompt_tokens=128, gen_tokens=16)
+        rep = orch.compliance(s)
+        return rep is not None and rep.z.n >= 12
+    check("R5", "compute-aware QoS: execution-side terms measured via "
+                "boundary telemetry", r5)
+
+    def r6():
+        s = session_box["s"]
+        out = orch.migrations.migrate(s, "zone-a")
+        return out.migrated and out.interruption_ms == 0.0 and s.committed()
+    check("R6", "mobility continuity: bounded interruption via "
+                "make-before-break", r6)
+
+    def r7():
+        s = orch.establish(asp, "ue-r7", "zone-a")
+        orch.policy.revoke(s.authz_ref)
+        try:
+            orch.serve(s)
+            return False
+        except SessionError as e:
+            return e.cause is FailureCause.CONSENT_VIOLATION
+    check("R7", "consent binding: revocation => ServeDisabled (Eq. 6)", r7)
+
+    def r8():
+        s = session_box["s"]
+        rec = orch.policy.charging(s.charging_ref)
+        return rec.session_id == s.session_id and rec.tokens > 0
+    check("R8", "session accounting: usage attributable to the AIS", r8)
+
+    def r9():
+        causes = {c.value for c in FailureCause}
+        from repro.core.failures import REMEDIATION
+        distinct = len({v for v in REMEDIATION.values()}) == len(REMEDIATION)
+        return len(causes) == 9 and distinct
+    check("R9", "diagnosable failures: 9 distinct cause classes with "
+                "distinct remediations (Eq. 12)", r9)
+
+    def r10():
+        # composition only: CAPIF/MEC/QoS/NWDAF roles exist as separate
+        # modules with no monolithic coupling (import-level check)
+        import repro.core.analytics, repro.core.qos  # noqa: F401
+        import repro.core.sites, repro.core.catalog  # noqa: F401
+        return True
+    check("R10", "minimal new primitives: composition of exposure/edge/QoS/"
+                 "analytics planes", r10)
+
+    derived = {"claim": "all ten NE-AIaaS requirements pass",
+               "passes": sum(1 for r in rows if r["passes"]),
+               "holds": all(r["passes"] for r in rows)}
+    return rows, derived

@@ -1,0 +1,69 @@
+"""§Perf hillclimb driver: run named variants of a dry-run cell and report
+roofline-term deltas vs the baseline artifact.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell mixtral-8x7b/decode_32k \
+        --variant kvheads '{"kv_shard": "heads"}'
+
+Variants are ModelConfig field overrides (the planner and model read config
+fields, so sharding/impl/remat levers are all expressible). Results land in
+artifacts/dryrun/<arch>__<shape>__<mesh>__<tag>.json and the comparison
+prints as a §Perf table row.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+
+def compare(base: dict, var: dict) -> dict:
+    rb, rv = base["roofline"], var["roofline"]
+    out = {}
+    for k in ("compute_s", "memory_s", "collective_s", "roofline_bound_s"):
+        b, v = rb[k], rv[k]
+        out[k] = {"before_ms": round(b * 1e3, 3), "after_ms": round(v * 1e3, 3),
+                  "delta_pct": round(100 * (v - b) / b, 1) if b else None}
+    out["dominant"] = {"before": rb["dominant"], "after": rv["dominant"]}
+    out["useful_flops_ratio"] = {
+        "before": round(base["useful_flops_ratio"], 3),
+        "after": round(var["useful_flops_ratio"], 3)}
+    out["peak_gb"] = {
+        "before": round(base["memory"]["peak_bytes_per_device"] / 1e9, 2),
+        "after": round(var["memory"]["peak_bytes_per_device"] / 1e9, 2)}
+    return out
+
+
+def run_variant(arch: str, shape: str, tag: str, overrides: dict,
+                multi_pod: bool = False):
+    # import inside: dryrun must own the XLA_FLAGS device count
+    from repro.launch.dryrun import run_cell
+    base = run_cell(arch, shape, multi_pod=multi_pod)
+    var = run_cell(arch, shape, multi_pod=multi_pod, overrides=overrides,
+                   tag=tag, force=True)
+    if var["status"] != "ok":
+        print(json.dumps({"variant": tag, "status": var["status"],
+                          "error": var.get("error", "")[:300]}, indent=1))
+        return None
+    rep = compare(base, var)
+    print(f"== {arch}/{shape} :: {tag} {json.dumps(overrides)}")
+    print(json.dumps(rep, indent=1))
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch/shape")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--overrides", required=True, help="JSON dict")
+    ap.add_argument("--multi-pod", action="store_true")
+    a = ap.parse_args()
+    arch, shape = a.cell.split("/")
+    run_variant(arch, shape, a.tag, json.loads(a.overrides),
+                multi_pod=a.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Re-run the loop-aware HLO analysis over stored artifacts (no recompile).
+
+    PYTHONPATH=src python -m benchmarks.reanalyze
+"""
+
+import glob
+import gzip
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import hlo_analysis as H
+from repro.launch import hlo_loops as HL
+
+
+def main():
+    for jf in sorted(glob.glob("artifacts/dryrun/*.json")):
+        hf = jf.replace(".json", ".hlo.txt.gz")
+        rec = json.load(open(jf))
+        if rec.get("status") != "ok":
+            continue
+        try:
+            text = gzip.open(hf, "rt").read()
+        except FileNotFoundError:
+            continue
+        n_dev = rec["mesh"]["devices"]
+        la = HL.analyze(text, n_dev)
+        roof = {
+            "flops_per_device": la["flops_per_device"],
+            "flops_global": la["flops_per_device"] * n_dev,
+            "hbm_bytes_per_device": la["hbm_bytes_per_device"],
+            "wire_bytes_per_device": la["wire_bytes_per_device"],
+            "compute_s": la["flops_per_device"] / H.PEAK_FLOPS,
+            "memory_s": la["hbm_bytes_per_device"] / H.HBM_BW,
+            "collective_s": la["wire_bytes_per_device"] / H.LINK_BW,
+        }
+        roof["dominant"] = max(
+            (("compute", roof["compute_s"]), ("memory", roof["memory_s"]),
+             ("collective", roof["collective_s"])), key=lambda kv: kv[1])[0]
+        roof["roofline_bound_s"] = max(roof["compute_s"], roof["memory_s"],
+                                       roof["collective_s"])
+        roof["compute_fraction_of_bound"] = (
+            roof["compute_s"] / roof["roofline_bound_s"]
+            if roof["roofline_bound_s"] else 0.0)
+        rec["roofline"] = roof
+        rec["collectives"] = la["collectives_per_op"]
+        rec["useful_flops_ratio"] = (rec["model_flops"] / roof["flops_global"]
+                                     if roof["flops_global"] else 0.0)
+        json.dump(rec, open(jf, "w"), indent=1, default=float)
+        print("reanalyzed", jf.split("/")[-1])
+
+
+if __name__ == "__main__":
+    main()

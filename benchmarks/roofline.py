@@ -1,0 +1,73 @@
+"""Roofline table builder: reads artifacts/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table and picks the three hillclimb cells."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
+
+
+def load_records(art_dir: str = "artifacts/dryrun", mesh: str = "pod16x16"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh_name") == mesh and "__" in os.path.basename(f) \
+                and os.path.basename(f).count("__") == 2:
+            recs.append(r)
+    return recs
+
+
+def summary_table(art_dir: str = "artifacts/dryrun", mesh: str = "pod16x16"):
+    rows = []
+    for r in load_records(art_dir, mesh):
+        if r["status"] == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "skipped", "dominant": "-",
+                         "compute_ms": "-", "memory_ms": "-",
+                         "collective_ms": "-", "useful_flops_ratio": "-",
+                         "fits_hbm": "-"})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "ERROR", "dominant": "-",
+                         "compute_ms": "-", "memory_ms": "-",
+                         "collective_ms": "-", "useful_flops_ratio": "-",
+                         "fits_hbm": "-"})
+            continue
+        roof = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "dominant": roof["dominant"],
+            "compute_ms": round(roof["compute_s"] * 1e3, 2),
+            "memory_ms": round(roof["memory_s"] * 1e3, 2),
+            "collective_ms": round(roof["collective_s"] * 1e3, 2),
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "fits_hbm": r["memory"]["fits_hbm"],
+        })
+    return rows
+
+
+def pick_hillclimb_cells(art_dir: str = "artifacts/dryrun"):
+    """worst roofline fraction / most collective-bound / most
+    paper-representative (decode serving cell of the largest-session model)."""
+    recs = [r for r in load_records(art_dir) if r["status"] == "ok"]
+    if not recs:
+        return {}
+
+    def frac(r):
+        roof = r["roofline"]
+        bound = roof["roofline_bound_s"]
+        return (roof["compute_s"] / bound) if bound else 0.0
+
+    worst = min(recs, key=lambda r: max(frac(r), r["useful_flops_ratio"]))
+    coll = max(recs, key=lambda r: r["roofline"]["collective_s"]
+               / max(r["roofline"]["roofline_bound_s"], 1e-12))
+    serving = [r for r in recs if r["kind"] == "decode"]
+    rep = max(serving, key=lambda r: r["roofline"]["memory_s"]) \
+        if serving else recs[0]
+    key = lambda r: f"{r['arch']}×{r['shape']}"
+    return {"worst_fraction": key(worst), "most_collective": key(coll),
+            "paper_representative": key(rep)}

@@ -1,0 +1,85 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the per-figure data as
+CSV blocks), and writes machine-readable copies under artifacts/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import figures  # noqa: E402
+
+
+def _csv_block(rows) -> str:
+    if not rows:
+        return ""
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=list(rows[0].keys()))
+    w.writeheader()
+    w.writerows(rows)
+    return buf.getvalue()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller Monte-Carlo samples (CI)")
+    args = ap.parse_args()
+    n_req = 4000 if args.fast else 20_000
+    n_sess = 15 if args.fast else 40
+
+    benches = [
+        ("fig2_p99_vs_load",
+         lambda: figures.fig2_p99_vs_load(n_requests=n_req)),
+        ("fig3_violation_vs_load",
+         lambda: figures.fig3_violation_vs_load(n_requests=n_req)),
+        ("fig4_interruption_vs_speed",
+         lambda: figures.fig4_interruption_vs_speed(n_sessions=n_sess)),
+        ("table1_requirements", figures.table1_requirements),
+    ]
+
+    os.makedirs("artifacts/bench", exist_ok=True)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        rows, derived = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{us:.0f},{json.dumps(derived)}")
+        sys.stdout.write(_csv_block(rows))
+        print()
+        with open(f"artifacts/bench/{name}.json", "w") as f:
+            json.dump({"rows": rows, "derived": derived,
+                       "us_per_call": us}, f, indent=1)
+        if not derived.get("holds", True):
+            failures += 1
+            print(f"!! {name}: paper claim does NOT hold", file=sys.stderr)
+
+    # roofline summary from dry-run artifacts, if present
+    try:
+        from benchmarks import roofline
+        table = roofline.summary_table()
+        if table:
+            print("roofline_summary (from artifacts/dryrun):")
+            sys.stdout.write(_csv_block(table))
+    except Exception as e:
+        print(f"(roofline summary unavailable: {e})")
+
+    if failures:
+        raise SystemExit(f"{failures} paper-claim checks failed")
+
+
+if __name__ == "__main__":
+    main()

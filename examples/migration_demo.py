@@ -1,0 +1,81 @@
+"""Make-before-break migration with REAL state transfer.
+
+    PYTHONPATH=src python examples/migration_demo.py
+
+A vehicular session decodes on an edge engine; mid-generation the session is
+migrated to another site (KV cache exported → fingerprint-verified →
+imported; target committed BEFORE source release), and generation continues
+bit-identically. Also demonstrates the abort path: an injected transfer
+failure leaves the source binding committed (the session never leaves the
+Committed(t) domain).
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import Orchestrator, default_asp
+from repro.core.asp import MobilityClass
+from repro.core.clock import VirtualClock
+from repro.serving.server import AIaaSServer
+from repro.serving import state_transfer
+
+
+def main():
+    clock = VirtualClock()
+    orch = Orchestrator(clock=clock)
+    server = AIaaSServer(orch, "edge-tiny", slots=4, max_len=128)
+    asp = default_asp(mobility=MobilityClass.VEHICULAR)
+    session = orch.establish(asp, invoker="car-7", zone="zone-a")
+    src_site = session.binding.site_id
+    print(f"session {session.session_id} committed at {src_site}")
+
+    # start generating on the source engine
+    eng_src = server.fleet.engine_for(src_site)
+    prompt = np.arange(16, dtype=np.int32)
+    pre = eng_src.prefill_session(session.session_id, prompt)
+    toks = [pre["first_token"]]
+    for _ in range(5):
+        toks.append(eng_src.decode_round()[session.session_id])
+    print(f"generated on source: {toks}")
+
+    # oracle: what the NEXT 5 tokens would be without migration
+    import jax
+    oracle = state_transfer.transfer(
+        eng_src,
+        type(eng_src)(eng_src.cfg, params=eng_src.params, slots=2,
+                      max_len=128),
+        session.session_id, verify=False)  # no-op probe, keep source intact
+    # (transfer() imports into the probe engine; re-import doesn't disturb src)
+
+    # make-before-break migration through the control plane
+    out = orch.migrations.migrate(session, "zone-a")
+    print(f"migration: migrated={out.migrated} {out.from_site} → {out.to_site} "
+          f"interruption={out.interruption_ms:.1f}ms "
+          f"transfer={out.transfer_ms:.2f}ms")
+    assert session.committed(), "never left the committed domain"
+
+    dst = server.fleet.engine_for(session.binding.site_id)
+    cont = [dst.decode_round()[session.session_id] for _ in range(5)]
+    print(f"continued on target:   {cont}")
+    src_cont = [eng_src.decode_round()[session.session_id] for _ in range(5)]
+    print(f"source would have said: {src_cont}")
+    assert cont == src_cont, "migration changed the generation!"
+    print("bit-identical continuation ✓ (make-before-break preserved state)")
+
+    # abort path: injected failure keeps the source committed
+    from repro.core.failures import FailureCause, SessionError
+
+    def always_fail(session_, src_, dst_):
+        raise SessionError(FailureCause.STATE_TRANSFER_FAILURE, "injected")
+
+    orch.migrations.transfer_fn = always_fail
+    out2 = orch.migrations.migrate(session, "zone-a")
+    print(f"\ninjected failure: migrated={out2.migrated} "
+          f"cause={out2.cause.value} — still committed: {session.committed()}")
+
+
+if __name__ == "__main__":
+    main()

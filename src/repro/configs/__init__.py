@@ -1,0 +1,8 @@
+"""Assigned-architecture configs (``--arch <id>``) + the paper's demo model.
+
+Every module exposes ``CONFIG`` (full production config, exercised only via
+the dry-run) and ``smoke_config()`` (reduced same-family config for CPU
+tests). ``registry.get_config(arch_id)`` resolves dashed arch ids.
+"""
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config  # noqa: F401

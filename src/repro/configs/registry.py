@@ -1,0 +1,37 @@
+"""Architecture registry: arch-id -> ModelConfig."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "phi3-medium-14b",
+    "command-r-35b",
+    "codeqwen1.5-7b",
+    "minitron-8b",
+    "qwen2-vl-72b",
+    "qwen3-moe-30b-a3b",
+    "mixtral-8x7b",
+    "recurrentgemma-2b",
+    "mamba2-1.3b",
+    "seamless-m4t-medium",
+    # the paper's own demo model (used by examples/serving tests)
+    "edge-tiny",
+)
+
+
+def _module(arch_id: str):
+    mod = arch_id.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).smoke_config()

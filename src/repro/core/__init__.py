@@ -1,0 +1,7 @@
+"""NE-AIaaS core: the paper's contract layer (ASP, AIS, lifecycle procedures)."""
+
+from repro.core.asp import ASP, Objectives, Modality, InteractionMode, \
+    MobilityClass, QualityTier, default_asp  # noqa: F401
+from repro.core.failures import FailureCause, SessionError, Timers, REMEDIATION  # noqa: F401
+from repro.core.session import AISession, SessionState, Binding  # noqa: F401
+from repro.core.orchestrator import Orchestrator, ServeResult  # noqa: F401

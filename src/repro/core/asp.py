@@ -1,0 +1,123 @@
+"""AI Service Profile (ASP) — the paper's intent contract (Section III-A).
+
+The objective part is exactly Eq. (3):
+
+    (ℓ_TTFB, ℓ_0.95, ℓ_0.99, ρ_min, T_max, ν_min)
+
+— every term falsifiable from boundary telemetry (Eq. 5/13). The constraint
+part restricts admissible realizations: modality/interaction mode, quality
+tier, privacy/sovereignty scope, mobility class, cost envelope, and the
+ordered fallback ladder (the ONLY admissible degradation path — prevents
+silent model/anchor switches that would make compliance non-identifiable).
+"""
+
+from __future__ import annotations
+
+import enum
+import hashlib
+import json
+from dataclasses import dataclass, field, asdict
+from typing import Tuple
+
+
+class Modality(enum.Enum):
+    TEXT_GEN = "text-generation"
+    CODE_GEN = "code-generation"
+    VISION_TEXT = "vision-language"
+    SPEECH_TRANSLATION = "speech-translation"
+    EMBEDDING = "embedding"
+
+
+class InteractionMode(enum.Enum):
+    STREAMING = "streaming"   # TTFB == time-to-first-token
+    UNARY = "unary"           # TTFB == time-to-first-response
+
+
+class MobilityClass(enum.Enum):
+    STATIC = "static"         # continuity provisioning not required
+    NOMADIC = "nomadic"       # occasional re-anchoring
+    VEHICULAR = "vehicular"   # frequent handover; MBB migration mandatory
+
+
+class QualityTier(enum.IntEnum):
+    BASIC = 1
+    STANDARD = 2
+    PREMIUM = 3
+
+
+@dataclass(frozen=True)
+class Objectives:
+    """Eq. (3) — all milliseconds except ρ (probability) and ν (tokens/s)."""
+    ttfb_ms: float           # ℓ_TTFB
+    p95_ms: float            # ℓ_0.95
+    p99_ms: float            # ℓ_0.99
+    rho_min: float           # minimum completion probability under T_max
+    t_max_ms: float          # hard timeout fixing success semantics
+    nu_min: float            # sustained rate proxy (tokens/s or frames/s)
+
+    def validate(self) -> None:
+        if not (0 < self.ttfb_ms <= self.p99_ms):
+            raise ValueError("need 0 < ℓ_TTFB ≤ ℓ_0.99")
+        if not (self.p95_ms <= self.p99_ms <= self.t_max_ms):
+            raise ValueError("need ℓ_0.95 ≤ ℓ_0.99 ≤ T_max")
+        if not (0.0 < self.rho_min <= 1.0):
+            raise ValueError("ρ_min must be a probability in (0, 1]")
+        if self.nu_min < 0:
+            raise ValueError("ν_min ≥ 0")
+
+
+@dataclass(frozen=True)
+class ASP:
+    # (a) task modality + interaction mode → admissible model families
+    modality: Modality
+    interaction: InteractionMode
+    # measurable service objectives, Eq. (3)
+    objectives: Objectives
+    # (b) resolvable quality tier
+    tier: QualityTier = QualityTier.STANDARD
+    # (c) privacy / sovereignty scope: admissible execution regions,
+    #     telemetry granularity, and whether state may cross regions
+    allowed_regions: Tuple[str, ...] = ("eu", "us", "apac")
+    telemetry_scope: str = "aggregate"       # aggregate | per-request | none
+    state_transfer_allowed: bool = True
+    # (d) mobility class → continuity provisioning
+    mobility: MobilityClass = MobilityClass.STATIC
+    # (e) cost envelope (currency-units per 1k tokens, and per session)
+    max_cost_per_1k_tokens: float = 1.0
+    max_session_cost: float = 100.0
+    # (f) ordered fallback ladder: the only admissible degradation path,
+    #     as (model_id, tier) pairs, most-preferred first
+    fallback_ladder: Tuple[Tuple[str, int], ...] = ()
+
+    def validate(self) -> None:
+        self.objectives.validate()
+        if not self.allowed_regions:
+            raise ValueError("empty sovereignty scope admits no site")
+        if self.telemetry_scope not in ("aggregate", "per-request", "none"):
+            raise ValueError("unknown telemetry scope")
+
+    def digest(self) -> str:
+        """Stable digest bound into the AIS record (Section III-B)."""
+        def enc(o):
+            if isinstance(o, enum.Enum):
+                return o.value
+            raise TypeError(type(o))
+        body = json.dumps(asdict(self), sort_keys=True, default=enc)
+        return hashlib.sha256(body.encode()).hexdigest()[:16]
+
+    def continuity_required(self) -> bool:
+        return self.mobility is not MobilityClass.STATIC
+
+
+def default_asp(model_hint: str = "", *, tier: QualityTier = QualityTier.STANDARD,
+                mobility: MobilityClass = MobilityClass.STATIC) -> ASP:
+    """A reasonable interactive text-generation profile (used by examples)."""
+    return ASP(
+        modality=Modality.TEXT_GEN,
+        interaction=InteractionMode.STREAMING,
+        objectives=Objectives(ttfb_ms=300.0, p95_ms=600.0, p99_ms=900.0,
+                              rho_min=0.99, t_max_ms=2000.0, nu_min=20.0),
+        tier=tier,
+        mobility=mobility,
+        fallback_ladder=((model_hint, int(tier)),) if model_hint else (),
+    )

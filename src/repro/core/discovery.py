@@ -1,0 +1,96 @@
+"""DISCOVER (Eq. 7/8): ASP → ranked admissible (model, site) candidates.
+
+Membership in 𝒦 is determined by *hard* constraints (sovereignty, privacy
+scope, quality tier, hardware residency); ranking by the compliance-margin
+slack score
+
+    Δ(m,e) = min(ℓ99 − L̂99(m,e), ℓ_ff − T̂ff(m,e)) − λ·Γ̂(m,e)      (Eq. 8)
+
+Candidates with Δ < 0 are predicted to violate at least one bound after cost
+policy and are excluded from the admissible set (they remain visible in the
+annotated output for diagnosability — "no feasible binding" must be
+attributable, Eq. 12).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+from repro.core.asp import ASP
+from repro.core.catalog import Catalog, ModelEntry
+from repro.core.failures import FailureCause, SessionError
+from repro.core.predictors import Prediction, Predictors
+from repro.core.qos import TransportClass, PREMIUM, BEST_EFFORT
+
+
+@dataclass
+class Candidate:
+    model: ModelEntry
+    site_id: str
+    prediction: Prediction
+    slack: float                 # Δ(m, e)
+    klass: TransportClass
+    admissible: bool
+    exclusion_reason: str = ""
+
+
+def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
+             zone: str, *, lam: float = 0.05, prompt_tokens: int = 512,
+             gen_tokens: int = 256, analytics=None) -> List[Candidate]:
+    """Materialise the annotated candidate set 𝒦 (Eq. 7)."""
+    asp.validate()
+    models = catalog.admissible(asp)
+    if not models:
+        raise SessionError(FailureCause.MODEL_UNAVAILABLE,
+                           f"no catalog entry admits modality="
+                           f"{asp.modality.value} tier≥{int(asp.tier)}")
+    klass = PREMIUM if asp.tier >= 2 else BEST_EFFORT
+    out: List[Candidate] = []
+    for model in models:
+        key = f"{model.model_id}@{model.version}"
+        for site_id, site in sites.items():
+            # ---- hard constraints (membership in 𝒦) -----------------
+            if site.spec.region not in asp.allowed_regions:
+                out.append(Candidate(model, site_id, None, float("-inf"),
+                                     klass, False, "sovereignty"))
+                continue
+            if set(model.regions).isdisjoint({site.spec.region}):
+                out.append(Candidate(model, site_id, None, float("-inf"),
+                                     klass, False, "model-region-license"))
+                continue
+            if not site.hosts(key):
+                out.append(Candidate(model, site_id, None, float("-inf"),
+                                     klass, False, "not-resident"))
+                continue
+            if analytics is not None and \
+                    not analytics.site_context(site_id).healthy:
+                out.append(Candidate(model, site_id, None, float("-inf"),
+                                     klass, False, "a1-denied"))
+                continue
+            # ---- annotate with predicted boundary quantities ----------
+            pred = predictors.predict(asp, model, site, zone, klass,
+                                      prompt_tokens=prompt_tokens,
+                                      gen_tokens=gen_tokens)
+            slack = min(asp.objectives.p99_ms - pred.l99_ms,
+                        asp.objectives.ttfb_ms - pred.t_ff_ms) \
+                - lam * pred.cost_per_1k
+            admissible = slack >= 0 and \
+                pred.cost_per_1k <= asp.max_cost_per_1k_tokens
+            reason = "" if admissible else (
+                "cost-envelope" if pred.cost_per_1k > asp.max_cost_per_1k_tokens
+                else "negative-slack")
+            out.append(Candidate(model, site_id, pred, slack, klass,
+                                 admissible, reason))
+    out.sort(key=lambda c: c.slack, reverse=True)
+    return out
+
+
+def admissible_set(candidates: List[Candidate]) -> List[Candidate]:
+    k = [c for c in candidates if c.admissible]
+    if not k:
+        reasons = {c.exclusion_reason for c in candidates}
+        raise SessionError(
+            FailureCause.NO_FEASIBLE_BINDING,
+            f"all candidates excluded ({', '.join(sorted(reasons))})")
+    return k

@@ -1,0 +1,141 @@
+"""Make-before-break MIGRATION (Section IV-B, Eq. 14).
+
+Protocol (continuity invariant: the session never leaves the domain where
+Committed(t) holds):
+
+  1. trigger  — predicted violation risk (Eq. 14) or measured non-compliance
+  2. re-DISCOVER + re-PAGE excluding the current anchor
+  3. PREPARE on the target while the current binding stays committed
+  4. transfer session state (KV cache / recurrent state) within τ_mig
+  5. COMMIT target  →  bind() swaps bindings atomically  →  release source
+
+Aborts at any step preserve the existing committed service: the target's
+provisional leases are rolled back and the source binding is untouched
+(STATE_TRANSFER_FAILURE / DEADLINE_EXPIRY are diagnosable causes, not
+session teardown).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.asp import ASP
+from repro.core.clock import Clock
+from repro.core.discovery import discover
+from repro.core.failures import FailureCause, SessionError, Timers
+from repro.core.paging import page
+from repro.core.session import AISession
+from repro.core.twophase import TwoPhaseCoordinator
+
+
+@dataclass
+class MigrationOutcome:
+    migrated: bool
+    aborted: bool
+    cause: Optional[FailureCause]
+    from_site: str
+    to_site: Optional[str]
+    interruption_ms: float       # contract-gap time (0 for successful MBB)
+    transfer_ms: float = 0.0
+
+
+@dataclass
+class MigrationTriggers:
+    """Eq. (14) thresholds δ, δ'."""
+    delta_l99: float = 0.35
+    delta_ttfb: float = 0.35
+
+    def should_migrate(self, p_l99: float, p_ttfb: float) -> bool:
+        return p_l99 >= self.delta_l99 or p_ttfb >= self.delta_ttfb
+
+
+class MigrationController:
+    def __init__(self, clock: Clock, coordinator: TwoPhaseCoordinator,
+                 catalog, sites, predictors, timers: Timers,
+                 *, transfer_fn: Optional[Callable] = None,
+                 analytics=None):
+        """``transfer_fn(session, from_site, to_site) -> transfer_seconds``
+        moves the session state; default models the wire time of the cache
+        payload over the inter-site link (5 GB/s DCN per DESIGN.md)."""
+        self.clock = clock
+        self.coord = coordinator
+        self.catalog = catalog
+        self.sites = sites
+        self.predictors = predictors
+        self.timers = timers
+        self.transfer_fn = transfer_fn or self._default_transfer
+        self.analytics = analytics
+
+    # ------------------------------------------------------------------
+    def _default_transfer(self, session: AISession, from_site, to_site,
+                          *, context_tokens: int = 2048) -> float:
+        model = self.catalog.get(session.binding.model_id,
+                                 session.binding.model_version)
+        payload = model.session_state_bytes(context_tokens)
+        dcn_bw = 5e9  # inter-site link, bytes/s
+        return payload / dcn_bw
+
+    # ------------------------------------------------------------------
+    def check_trigger(self, session: AISession, zone: str,
+                      triggers: MigrationTriggers) -> bool:
+        """Eq. (14) evaluated against the *current* anchor."""
+        if not session.committed():
+            return False
+        b = session.binding
+        model = self.catalog.get(b.model_id, b.model_version)
+        site = self.sites[b.site_id]
+        from repro.core.qos import PREMIUM, BEST_EFFORT
+        klass = PREMIUM if session.asp.tier >= 2 else BEST_EFFORT
+        pred = self.predictors.predict(session.asp, model, site, zone, klass)
+        return triggers.should_migrate(pred.p_violate_l99,
+                                       pred.p_violate_ttfb)
+
+    # ------------------------------------------------------------------
+    def migrate(self, session: AISession, zone: str) -> MigrationOutcome:
+        if not session.committed():
+            raise SessionError(FailureCause.POLICY_DENIAL,
+                               "migration requires a committed session")
+        src = session.binding.site_id
+        t0 = self.clock.now()
+        session.mark_migrating()
+        prepared = None
+        try:
+            cands = discover(session.asp, self.catalog, self.sites,
+                             self.predictors, zone, analytics=self.analytics)
+            target = page(session.asp, cands, exclude_sites=(src,))
+            model = target.model
+            prepared = self.coord.prepare(
+                model, target.site_id, zone, target.klass, slots=1,
+                cache_bytes=model.session_state_bytes(2048))
+            # ---- state transfer under τ_mig, source still committed -----
+            transfer_s = self.transfer_fn(session, self.sites[src],
+                                          self.sites[target.site_id])
+            if transfer_s > self.timers.tau_mig:
+                raise SessionError(
+                    FailureCause.STATE_TRANSFER_FAILURE,
+                    f"transfer {transfer_s:.3f}s exceeds τ_mig="
+                    f"{self.timers.tau_mig}s")
+            self.clock.sleep(transfer_s)
+            if self.clock.now() - t0 > self.timers.tau_mig:
+                raise SessionError(FailureCause.DEADLINE_EXPIRY,
+                                   "migration deadline expired")
+            # ---- commit target, THEN the old binding is released ---------
+            binding = self.coord.commit(prepared, model)
+            session.bind(binding)   # make-before-break swap (session.bind)
+            return MigrationOutcome(
+                migrated=True, aborted=False, cause=None, from_site=src,
+                to_site=target.site_id, interruption_ms=0.0,
+                transfer_ms=transfer_s * 1e3)
+        except SessionError as e:
+            # abort: roll back the target, keep serving on the source
+            if prepared is not None:
+                self.coord.abort(prepared)
+            if session.state.value == "migrating":
+                # still committed on the source ⇒ fall back without teardown
+                session.state = type(session.state).COMMITTED
+                session.history.append((self.clock.now(),
+                                        f"migration-aborted:{e.cause.value}"))
+            return MigrationOutcome(
+                migrated=False, aborted=True, cause=e.cause, from_site=src,
+                to_site=None, interruption_ms=0.0)

@@ -1,0 +1,185 @@
+"""NE-AIaaS orchestrator: the end-to-end lifecycle facade (Fig. 1).
+
+    establish(asp) = consent → DISCOVER → AI-PAGING → PREPARE → COMMIT
+    serve(session, request)   — boundary telemetry + metering per request
+    heartbeat(session)        — lease renewal + Eq. 14 migration triggers
+    release(session)
+
+Every phase runs under its Eq. (11) deadline and failures carry Eq. (12)
+causes. The orchestrator owns the role composition (exposure/catalog/
+execution/transport/analytics) but no business logic of its own — each
+procedure lives in its module and is individually testable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.analytics import Analytics
+from repro.core.asp import ASP
+from repro.core.catalog import Catalog, default_catalog
+from repro.core.clock import Clock
+from repro.core.discovery import discover
+from repro.core.failures import FailureCause, SessionError, Timers
+from repro.core.migration import (MigrationController, MigrationOutcome,
+                                  MigrationTriggers)
+from repro.core.paging import page
+from repro.core.policy import PolicyControl
+from repro.core.predictors import Predictors
+from repro.core.qos import QoSFlowManager
+from repro.core.session import AISession, SessionState
+from repro.core.sites import ExecutionSite, default_sites
+from repro.core.telemetry import BoundaryTelemetry, RequestRecord
+from repro.core.twophase import TwoPhaseCoordinator
+
+
+@dataclass
+class ServeResult:
+    text_tokens: int
+    ttfb_ms: float
+    latency_ms: float
+    completed: bool
+
+
+class Orchestrator:
+    def __init__(self, clock: Optional[Clock] = None,
+                 catalog: Optional[Catalog] = None,
+                 sites: Optional[Dict[str, ExecutionSite]] = None,
+                 timers: Optional[Timers] = None):
+        self.clock = clock or Clock()
+        self.catalog = catalog or default_catalog()
+        hosted = tuple(self.catalog._entries.keys())
+        self.sites = sites or default_sites(self.clock, hosted)
+        self.qos = QoSFlowManager(self.clock)
+        self.policy = PolicyControl(self.clock)
+        self.analytics = Analytics(self.clock)
+        self.predictors = Predictors(self.analytics)
+        self.timers = timers or Timers()
+        self.coordinator = TwoPhaseCoordinator(self.clock, self.sites,
+                                               self.qos, self.timers)
+        self.migrations = MigrationController(
+            self.clock, self.coordinator, self.catalog, self.sites,
+            self.predictors, self.timers, analytics=self.analytics)
+        self.telemetry: Dict[str, BoundaryTelemetry] = {}
+        self.sessions: Dict[str, AISession] = {}
+
+    # ------------------------------------------------------------------
+    def establish(self, asp: ASP, invoker: str, zone: str) -> AISession:
+        """DISCOVER → PAGING → PREPARE/COMMIT under Eq. (11) deadlines."""
+        self.timers.validate(asp.objectives.t_max_ms / 1e3)
+        session = AISession(asp, invoker, zone, self.clock,
+                            sites=self.sites, qos=self.qos,
+                            policy=self.policy)
+        self.sessions[session.session_id] = session
+        try:
+            # consent/authorization binding (R7) precedes any reservation
+            session.authz_ref = self.policy.grant_consent(
+                invoker, asp.allowed_regions)
+            t0 = self.clock.now()
+            cands = discover(asp, self.catalog, self.sites, self.predictors,
+                             zone, analytics=self.analytics)
+            if self.clock.now() - t0 > self.timers.tau_disc:
+                raise SessionError(FailureCause.DEADLINE_EXPIRY,
+                                   "DISCOVER exceeded τ_disc")
+            session.mark_discovered()
+            chosen = page(asp, cands)
+            session.mark_anchored()
+            # cost-envelope admission (policy role)
+            self.policy.admit_cost(asp, chosen.prediction.cost_per_1k)
+            # sovereignty re-check against the concrete site (consent scope)
+            self.policy.check_region(
+                session.authz_ref,
+                self.sites[chosen.site_id].spec.region)
+            session.mark_preparing()
+            prepared = self.coordinator.prepare(
+                chosen.model, chosen.site_id, zone, chosen.klass, slots=1,
+                cache_bytes=chosen.model.session_state_bytes(2048))
+            session.mark_prepared()
+            binding = self.coordinator.commit(prepared, chosen.model)
+            session.charging_ref = self.policy.open_charging(
+                session.session_id)
+            session.bind(binding)
+            self.telemetry[session.session_id] = BoundaryTelemetry()
+            return session
+        except SessionError as e:
+            session.fail(e.cause, str(e))
+            raise
+
+    # ------------------------------------------------------------------
+    def serve(self, session: AISession, *, prompt_tokens: int = 512,
+              gen_tokens: int = 64) -> ServeResult:
+        """One request on the session's committed binding.
+
+        With a real engine attached to the anchor site this runs actual
+        prefill/decode (examples/); otherwise service time comes from the
+        predictors (control-plane tests). Either way the boundary telemetry
+        and metering are identical — that's the falsifiability point.
+        """
+        if not session.serve_allowed():
+            if not session.v_sigma():
+                raise SessionError(FailureCause.CONSENT_VIOLATION,
+                                   "consent revoked ⇒ ServeDisabled (Eq. 6)")
+            raise SessionError(FailureCause.DEADLINE_EXPIRY,
+                               "session not in committed domain")
+        b = session.binding
+        site = self.sites[b.site_id]
+        model = self.catalog.get(b.model_id, b.model_version)
+        t_start = self.clock.now()
+        if site.engine is not None:
+            out = site.engine.serve(session.session_id, prompt_tokens,
+                                    gen_tokens)
+            ttfb_ms, total_ms = out["ttfb_ms"], out["latency_ms"]
+        else:
+            from repro.core.qos import PREMIUM, BEST_EFFORT
+            klass = PREMIUM if session.asp.tier >= 2 else BEST_EFFORT
+            pred = self.predictors.predict(session.asp, model, site,
+                                           session.zone, klass,
+                                           prompt_tokens=prompt_tokens,
+                                           gen_tokens=gen_tokens)
+            ttfb_ms = pred.t_ff_ms
+            total_ms = pred.t_ff_ms + gen_tokens * pred.decode_ms_per_token
+            self.clock.sleep(total_ms / 1e3)
+        completed = total_ms <= session.asp.objectives.t_max_ms
+        self.telemetry[session.session_id].record(RequestRecord(
+            t_submit=t_start, ttfb_ms=ttfb_ms, latency_ms=total_ms,
+            completed=completed, tokens=gen_tokens))
+        self.policy.meter(session.charging_ref, tokens=gen_tokens,
+                          chip_s=total_ms / 1e3 * site.spec.chips
+                          / max(site.spec.decode_slots, 1),
+                          unit_price=model.price_per_1k_tokens)
+        return ServeResult(gen_tokens, ttfb_ms, total_ms, completed)
+
+    # ------------------------------------------------------------------
+    def heartbeat(self, session: AISession,
+                  triggers: Optional[MigrationTriggers] = None
+                  ) -> Optional[MigrationOutcome]:
+        """Renew leases; fire Eq. (14) migration when risk crosses δ."""
+        if session.state not in (SessionState.COMMITTED,
+                                 SessionState.MIGRATING):
+            return None
+        session.renew(self.timers.lease_s)
+        site = self.sites[session.binding.site_id]
+        self.analytics.observe_site(
+            site.spec.site_id, utilization=site.utilization(),
+            queue_depth=0.0, arrival_rate=0.0)
+        tele = self.telemetry.get(session.session_id)
+        if tele and len(tele) >= 8:
+            z = tele.snapshot()
+            self.analytics.observe_latency(
+                site.spec.site_id,
+                f"{session.binding.model_id}@{session.binding.model_version}",
+                z.q99_ms)
+        trig = triggers or MigrationTriggers()
+        if session.asp.continuity_required() and \
+                self.migrations.check_trigger(session, session.zone, trig):
+            return self.migrations.migrate(session, session.zone)
+        return None
+
+    # ------------------------------------------------------------------
+    def compliance(self, session: AISession):
+        tele = self.telemetry.get(session.session_id)
+        return tele.compliance(session.asp) if tele else None
+
+    def release(self, session: AISession) -> None:
+        session.release()

@@ -1,0 +1,115 @@
+"""Two-phase PREPARE/COMMIT — atomic co-reservation of compute and QoS.
+
+Correctness requirements implemented here (Section IV-B):
+
+* **No partial allocation is representable**: PREPARE obtains *provisional*
+  leases on both planes; if either PREPARE fails, the other is rolled back
+  before the error propagates. COMMIT confirms both or releases both.
+* **Explicit deadlines** (Eq. 11): each phase runs under its τ; expiry maps
+  to FailureCause.DEADLINE_EXPIRY, scarcity maps to COMPUTE_SCARCITY /
+  QOS_SCARCITY — never conflated (Eq. 12).
+* **Idempotent rollback**: release on both planes tolerates repeats, so a
+  crashed coordinator can always be re-driven to a clean state.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.catalog import ModelEntry
+from repro.core.clock import Clock
+from repro.core.failures import FailureCause, SessionError, Timers
+from repro.core.qos import QoSFlowManager, TransportClass
+from repro.core.session import Binding
+
+
+@dataclass
+class Prepared:
+    """Result of a successful PREPARE: both provisional leases."""
+    compute_lease_id: str
+    qos_lease_id: str
+    site_id: str
+    qfi: int
+    prepared_at: float
+
+
+class TwoPhaseCoordinator:
+    def __init__(self, clock: Clock, sites, qos: QoSFlowManager,
+                 timers: Timers):
+        self.clock = clock
+        self.sites = sites
+        self.qos = qos
+        self.timers = timers
+        self.log: list = []    # coordinator write-ahead log (audit + tests)
+
+    def _deadline_guard(self, t0: float, tau: float, phase: str) -> None:
+        if self.clock.now() - t0 > tau:
+            raise SessionError(FailureCause.DEADLINE_EXPIRY,
+                               f"{phase} exceeded τ={tau}s")
+
+    # ------------------------------------------------------------------
+    def prepare(self, model: ModelEntry, site_id: str, zone: str,
+                klass: TransportClass, *, slots: int,
+                cache_bytes: float) -> Prepared:
+        """Stage 1: obtain BOTH provisional leases or none."""
+        t0 = self.clock.now()
+        site = self.sites[site_id]
+        self.log.append(("prepare.begin", t0, site_id))
+        cmp_lease = site.prepare(model, slots=slots, cache_bytes=cache_bytes,
+                                 ttl_s=self.timers.tau_prep + self.timers.tau_com)
+        try:
+            self._deadline_guard(t0, self.timers.tau_prep, "PREPARE(compute)")
+            qos_lease = self.qos.prepare(
+                (zone, site_id), klass,
+                ttl_s=self.timers.tau_prep + self.timers.tau_com)
+        except BaseException:
+            # roll back the compute side before surfacing the QoS failure —
+            # partial allocation must never escape this function
+            site.release(cmp_lease.lease_id)
+            self.log.append(("prepare.rollback", self.clock.now(), site_id))
+            raise
+        try:
+            self._deadline_guard(t0, self.timers.tau_prep, "PREPARE")
+        except BaseException:
+            site.release(cmp_lease.lease_id)
+            self.qos.release(qos_lease.lease_id)
+            self.log.append(("prepare.rollback", self.clock.now(), site_id))
+            raise
+        self.log.append(("prepare.ok", self.clock.now(), site_id))
+        return Prepared(compute_lease_id=cmp_lease.lease_id,
+                        qos_lease_id=qos_lease.lease_id,
+                        site_id=site_id, qfi=qos_lease.qfi,
+                        prepared_at=self.clock.now())
+
+    # ------------------------------------------------------------------
+    def commit(self, prepared: Prepared, model: ModelEntry) -> Binding:
+        """Stage 2: confirm both leases; on ANY failure release both."""
+        t0 = self.clock.now()
+        site = self.sites[prepared.site_id]
+        try:
+            self._deadline_guard(prepared.prepared_at,
+                                 self.timers.tau_com, "COMMIT")
+            site.confirm(prepared.compute_lease_id,
+                         lease_s=self.timers.lease_s)
+            self.qos.confirm(prepared.qos_lease_id,
+                             lease_s=self.timers.lease_s)
+        except BaseException:
+            self.abort(prepared)
+            raise
+        self.log.append(("commit.ok", self.clock.now(), prepared.site_id))
+        return Binding(
+            model_id=model.model_id, model_version=model.version,
+            site_id=prepared.site_id,
+            endpoint=f"aiaas://{prepared.site_id}/{model.model_id}",
+            qfi=prepared.qfi,
+            steering_handle=f"steer/{prepared.site_id}/qfi{prepared.qfi}",
+            compute_lease_id=prepared.compute_lease_id,
+            qos_lease_id=prepared.qos_lease_id)
+
+    # ------------------------------------------------------------------
+    def abort(self, prepared: Prepared) -> None:
+        """Idempotent rollback of both provisional leases."""
+        self.sites[prepared.site_id].release(prepared.compute_lease_id)
+        self.qos.release(prepared.qos_lease_id)
+        self.log.append(("abort", self.clock.now(), prepared.site_id))

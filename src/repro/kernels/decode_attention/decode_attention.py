@@ -1,0 +1,106 @@
+"""Flash-decode GQA attention — Pallas TPU kernel for the serving hot path.
+
+One new token per sequence against a long KV cache: the workload is
+memory-bound (read the whole cache once), so the kernel's job is to stream
+KV through VMEM at full HBM bandwidth. Grid = (batch, kv-head, kv-block)
+with the kv-block dim innermost/sequential; the online-softmax state for all
+``g`` grouped q-heads of this kv-head rides VMEM scratch. The [g, D] query
+tile stays resident; each step issues a [g, D] × [D, block_kv] MXU matmul —
+for GQA g = 4–8 this also amortises each KV byte over g queries (the reason
+GQA exists).
+
+Per-row ``lengths`` masks ragged sessions (continuous batching: every slot
+sits at a different position).
+
+Layouts: q [B, Hq, D]; k/v [B, Hkv, S, D]; lengths [B] -> out [B, Hq, D].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_kv: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    kv_start = ik * block_kv
+
+    @pl.when(kv_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # [g, d]  (padded g)
+        k = k_ref[0, 0].astype(jnp.float32)           # [bk, d]
+        v = v_ref[0, 0]                                # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)      # [g, bk]
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lengths, *, block_kv: int = 512,
+                     interpret: bool = True):
+    """q: [B, Hq, D]; k/v: [B, Hkv, S, D]; lengths: [B] -> [B, Hq, D]."""
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    pad_k = (-S) % block_kv
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nk = k.shape[2] // block_kv
+    # group q by kv head: [B, Hkv, g, D]
+    qg = q.reshape(B, Hkv, g, D)
+    grid = (B, Hkv, nk)
+
+    kern = functools.partial(_kernel, scale=scale, block_kv=block_kv)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # lengths, scalar-prefetch
+            pl.BlockSpec((1, 1, g, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, Hq, D)

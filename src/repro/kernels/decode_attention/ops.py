@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for flash-decode."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv",))
+def decode(q, k, v, lengths, *, block_kv: int = 512):
+    return decode_attention(q, k, v, lengths, block_kv=block_kv,
+                            interpret=not _on_tpu())

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash-decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q: [B, Hq, D]; k/v: [B, Hkv, S, D]; lengths: [B]."""
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    kk = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kk) / (D ** 0.5)
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", w, vv).astype(q.dtype)

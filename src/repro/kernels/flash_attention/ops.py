@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv"))
+def attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+              block_kv: int = 128):
+    """Flash attention: compiled kernel on TPU, interpreted elsewhere."""
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_kv=block_kv, interpret=not _on_tpu())

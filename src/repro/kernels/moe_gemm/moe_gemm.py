@@ -1,0 +1,104 @@
+"""Grouped expert GEMM (+ fused SwiGLU) — Pallas TPU kernel.
+
+Computes per-expert matmuls over capacity buffers:
+
+    y[e] = silu(x[e] @ w_gate[e]) * (x[e] @ w_up[e])       (fused variant)
+    y[e] = x[e] @ w[e]                                      (plain variant)
+
+TPU adaptation of the MegaBlocks idea: instead of CUDA block-sparse tiles,
+experts are a leading grid dimension and each (expert, C-tile, F-tile) cell
+is a dense [block_c, d] × [d, block_f] MXU matmul — expert weights stream
+through VMEM once per C-tile sweep. Capacity buffers make shapes static
+(GShard-style), which is what the TPU wants; token routing stays outside
+(repro.models.moe builds the buffers).
+
+Layouts: x [E, C, D]; w_gate/w_up [E, D, F] -> y [E, C, F].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel_fused(x_ref, wg_ref, wu_ref, y_ref):
+    x = x_ref[0]                      # [bc, D]
+    wg = wg_ref[0]                    # [D, bf]
+    wu = wu_ref[0]
+    gate = jax.lax.dot_general(x, wg, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    up = jax.lax.dot_general(x, wu, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_ref[0] = (jax.nn.silu(gate) * up).astype(y_ref.dtype)
+
+
+def _kernel_plain(x_ref, w_ref, y_ref):
+    x = x_ref[0]
+    w = w_ref[0]
+    y_ref[0] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+
+def _pad(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def moe_gemm(x, w, *, block_c: int = 128, block_f: int = 256,
+             interpret: bool = True):
+    """Plain grouped GEMM: x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
+    E, C, D = x.shape
+    F = w.shape[-1]
+    x = _pad(x, 1, block_c)
+    w = _pad(w, 2, block_f)
+    nc = x.shape[1] // block_c
+    nf = w.shape[2] // block_f
+    out = pl.pallas_call(
+        _kernel_plain,
+        grid=(E, nc, nf),
+        in_specs=[
+            pl.BlockSpec((1, block_c, D), lambda e, ic, jf: (e, ic, 0)),
+            pl.BlockSpec((1, D, block_f), lambda e, ic, jf: (e, 0, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ic, jf: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, x.shape[1], w.shape[2]), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[:, :C, :F]
+
+
+def moe_ffn_fused(x, w_gate, w_up, *, block_c: int = 128, block_f: int = 256,
+                  interpret: bool = True):
+    """Fused silu(x@wg) * (x@wu): x [E, C, D]; w_* [E, D, F] -> [E, C, F]."""
+    E, C, D = x.shape
+    F = w_gate.shape[-1]
+    x = _pad(x, 1, block_c)
+    w_gate = _pad(w_gate, 2, block_f)
+    w_up = _pad(w_up, 2, block_f)
+    nc = x.shape[1] // block_c
+    nf = w_gate.shape[2] // block_f
+    out = pl.pallas_call(
+        _kernel_fused,
+        grid=(E, nc, nf),
+        in_specs=[
+            pl.BlockSpec((1, block_c, D), lambda e, ic, jf: (e, ic, 0)),
+            pl.BlockSpec((1, D, block_f), lambda e, ic, jf: (e, 0, jf)),
+            pl.BlockSpec((1, D, block_f), lambda e, ic, jf: (e, 0, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ic, jf: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, x.shape[1], w_gate.shape[2]),
+                                       x.dtype),
+        interpret=interpret,
+    )(x, w_gate, w_up)
+    return out[:, :C, :F]

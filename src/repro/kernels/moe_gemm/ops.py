@@ -1,0 +1,26 @@
+"""Jit'd public wrappers for the grouped expert GEMM kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gemm.moe_gemm import moe_gemm, moe_ffn_fused
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f"))
+def grouped_gemm(x, w, *, block_c: int = 128, block_f: int = 256):
+    return moe_gemm(x, w, block_c=block_c, block_f=block_f,
+                    interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f"))
+def grouped_swiglu(x, w_gate, w_up, *, block_c: int = 128,
+                   block_f: int = 256):
+    return moe_ffn_fused(x, w_gate, w_up, block_c=block_c, block_f=block_f,
+                         interpret=not _on_tpu())

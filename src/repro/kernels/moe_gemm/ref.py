@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the grouped expert GEMM."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x, w):
+    return jnp.einsum("ecd,edf->ecf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def moe_ffn_fused_ref(x, w_gate, w_up):
+    gate = jnp.einsum("ecd,edf->ecf", x, w_gate,
+                      preferred_element_type=jnp.float32)
+    up = jnp.einsum("ecd,edf->ecf", x, w_up,
+                    preferred_element_type=jnp.float32)
+    return (jax.nn.silu(gate) * up).astype(x.dtype)

@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_w"))
+def scan(a, b, *, block_t: int = 128, block_w: int = 256):
+    return rglru_scan(a, b, block_t=block_t, block_w=block_w,
+                      interpret=not _on_tpu())

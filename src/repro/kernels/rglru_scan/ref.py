@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """Sequential h_t = a_t h_{t-1} + b_t. a, b: [B, T, W]."""
+    def step(h, ab):
+        ai, bi = ab
+        h = ai * h + bi
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+                          jnp.moveaxis(b.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,72 @@
+"""RG-LRU linear recurrence — Pallas TPU kernel.
+
+h_t = a_t ⊙ h_{t−1} + b_t, elementwise over ``width``. TPU adaptation: the
+recurrence is bandwidth-bound (read a, b; write h — zero matmuls), so the
+kernel tiles [block_t, block_w] VMEM panels with the time dim outermost-
+sequential and carries h in VMEM scratch; within a tile the time loop is a
+``fori_loop`` over vector rows (the VPU does the elementwise work; no MXU).
+Width is the 128-lane dimension — block_w a multiple of 128.
+
+Layout: a, b [B, T, W] -> h [B, T, W] (all f32; the model keeps LRU state
+in f32 for recurrence stability).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h_ref, carry_ref, *, block_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[0]          # [bt, bw]
+    b = b_ref[0]
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        h_ref[0, t, :] = h
+        return h
+
+    carry_ref[...] = jax.lax.fori_loop(0, block_t, body, carry_ref[...])
+
+
+def rglru_scan(a, b, *, block_t: int = 128, block_w: int = 256,
+               interpret: bool = True):
+    """a, b: [B, T, W] f32 -> h: [B, T, W] f32."""
+    B, T, W = a.shape
+    pad_t = (-T) % block_t
+    pad_w = (-W) % block_w
+    if pad_t or pad_w:
+        # pad a with 1 (identity for the decay) only where b is 0-padded on
+        # time; width padding is sliced away afterwards
+        a = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_w)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad_t), (0, pad_w)))
+    nt = a.shape[1] // block_t
+    nw = a.shape[2] // block_w
+    grid = (B, nw, nt)       # time innermost => sequential carry
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_w),
+                         lambda ib, iw, it: (ib, it, iw)),
+            pl.BlockSpec((1, block_t, block_w),
+                         lambda ib, iw, it: (ib, it, iw)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, block_w),
+                               lambda ib, iw, it: (ib, it, iw)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:, :T, :W]

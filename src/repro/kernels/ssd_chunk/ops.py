@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the SSD chunk kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, B, C, A, *, chunk: int = 128):
+    return ssd_chunk(x, dt, B, C, A, chunk=chunk,
+                     interpret=not _on_tpu())

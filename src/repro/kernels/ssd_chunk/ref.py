@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD chunk kernel: exact sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, B, C, A):
+    """Sequential SSM: S_t = exp(dt_t A) S_{t-1} + dt_t B_t x_t^T;
+    y_t = C_t · S_t. x: [Bt, H, T, P]; dt: [Bt, H, T]; B/C: [Bt, H, T, N]."""
+    Bt, H, T, P = x.shape
+    N = B.shape[-1]
+
+    def step(S, inp):
+        xt, dtt, Bt_, Ct = inp          # [b,h,P], [b,h], [b,h,N], [b,h,N]
+        dA = jnp.exp(dtt * A)           # [b,h]
+        S = S * dA[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt * dtt[..., None], Bt_)
+        y = jnp.einsum("bhpn,bhn->bhp", S, Ct)
+        return S, y
+
+    S0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 2, 0))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)   # [Bt, H, T, P]

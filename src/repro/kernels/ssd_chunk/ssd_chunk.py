@@ -1,0 +1,96 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+Grid = (batch, head, chunk) with the chunk dim innermost/sequential; the SSM
+state S ∈ [headdim, dstate] rides VMEM scratch between chunks. Each chunk
+computes the intra-chunk dual (quadratic) term on the MXU — [Q, n]·[n, Q]
+score tile, decay-masked, then [Q, Q]·[Q, hp] — plus the inter-chunk
+contribution C·S and the state update, i.e. the standard SSD decomposition
+(arXiv:2405.21060 §6) with the inter-chunk recurrence folded into the grid
+instead of a host-side scan.
+
+Layouts: x [B, H, T, P]; dt [B, H, T]; B/C [B, H, T, N] (already expanded to
+heads); A [H] -> y [B, H, T, P], with chunk length Q = block size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, s_ref, *, Q: int):
+    ih = pl.program_id(1)
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)      # [Q]
+    Bm = b_ref[0, 0].astype(jnp.float32)       # [Q, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)       # [Q, N]
+    A = a_ref[ih]                               # scalar (negative)
+
+    dA = dt * A                                 # [Q]
+    cum = jnp.cumsum(dA)                        # [Q]
+    xdt = x * dt[:, None]                       # [Q, P]
+
+    # intra-chunk dual form: L[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, None] - cum[None, :]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    Ldec = jnp.where(causal, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q,Q]
+    y = jax.lax.dot_general(scores * Ldec, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # [Q,P]
+
+    # inter-chunk: y += (C ⊙ decay_in) @ S^T   (S: [P, N])
+    decay_in = jnp.exp(cum)[:, None]            # [Q, 1]
+    y = y + jax.lax.dot_general(Cm * decay_in, s_ref[...],
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: S = exp(sum dA) S + (B ⊙ decay_out ⊙ dt x)^T-style outer
+    decay_out = jnp.exp(cum[-1] - cum)[:, None]  # [Q, 1]
+    s_new = jnp.exp(cum[-1]) * s_ref[...] + jax.lax.dot_general(
+        xdt, Bm * decay_out, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # [P, N]
+    s_ref[...] = s_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_chunk(x, dt, B, C, A, *, chunk: int = 128, interpret: bool = True):
+    """x: [Bt, H, T, P]; dt: [Bt, H, T]; B/C: [Bt, H, T, N]; A: [H] -> y."""
+    Bt, H, T, P = x.shape
+    N = B.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        B = jnp.pad(B, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = x.shape[2] // chunk
+    grid = (Bt, H, nc)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, Q=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # A: [H] scalars
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B, C, A.astype(jnp.float32))
+    return out[:, :, :T]

@@ -1,0 +1,44 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state. The dry-run launcher sets
+``--xla_force_host_platform_device_count=512`` before any jax import; smoke
+tests and benches see the real single CPU device.
+
+Production target: TPU v5e pods. Single pod = 16×16 = 256 chips
+(axes data×model); multi-pod = 2×16×16 = 512 chips (pod×data×model, the
+"pod" axis rides the DCN/inter-pod links).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False, devices=None) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = list(devices if devices is not None else jax.devices())
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for {'multi-pod' if multi_pod else 'single-pod'} "
+            f"mesh, have {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 (dry-run) "
+            f"or on the real pod")
+    if len(devs) == n:
+        try:
+            return jax.make_mesh(shape, axes, devices=devs)
+        except TypeError:  # older jax without devices kwarg
+            pass
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model"), devices=None) -> Mesh:
+    """Small mesh for integration tests (8 forced host devices)."""
+    n = int(np.prod(shape))
+    devs = list(devices if devices is not None else jax.devices())[:n]
+    return Mesh(np.asarray(devs).reshape(shape), axes)

@@ -1,0 +1,101 @@
+"""NE-AIaaS serving launcher: control plane + real engines + QoS scheduler.
+
+    PYTHONPATH=src python -m repro.launch.serve --model edge-tiny \
+        --sessions 4 --requests 12
+
+Production path: on a pod, the engine's prefill/decode jit under
+``make_production_mesh()`` with the decode plan's shardings (the dry-run
+proves every assigned arch compiles there); on this container it runs the
+small configs for real. Either way the AIS lifecycle, QoS scheduling,
+telemetry, and charging are identical — that is the paper's point.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.configs import ARCH_IDS
+from repro.core import Orchestrator, default_asp
+from repro.core.asp import QualityTier
+from repro.core.clock import Clock
+from repro.serving.scheduler import QoSScheduler, Request
+from repro.serving.server import AIaaSServer
+
+
+def serve(model: str = "edge-tiny", *, sessions: int = 4, requests: int = 12,
+          slots: int = 8, max_len: int = 192, gen_tokens: int = 8,
+          t_max_ms: float = 300_000.0, seed: int = 0, quiet: bool = False):
+    import dataclasses
+    clock = Clock()
+    orch = Orchestrator(clock=clock)
+    server = AIaaSServer(orch, model, slots=slots, max_len=max_len)
+    sched = QoSScheduler(clock, slots=slots)
+    rng = np.random.default_rng(seed)
+
+    live = {}
+    for i in range(sessions):
+        tier = QualityTier.PREMIUM if i % 2 == 0 else QualityTier.BASIC
+        asp = default_asp(tier=tier)
+        asp = dataclasses.replace(
+            asp, objectives=dataclasses.replace(
+                asp.objectives, ttfb_ms=t_max_ms / 10, p95_ms=t_max_ms / 3,
+                p99_ms=t_max_ms / 2, t_max_ms=t_max_ms, nu_min=0.0))
+        s = orch.establish(asp, invoker=f"ue-{i}", zone="zone-a")
+        live[s.session_id] = s
+        if not quiet:
+            print(f"AIS {s.session_id} tier={tier.name} "
+                  f"anchor={s.binding.site_id} qfi={s.binding.qfi}")
+
+    sids = list(live)
+    for r in range(requests):
+        sid = sids[r % len(sids)]
+        sched.submit(Request(
+            f"req-{r}", sid,
+            "premium" if live[sid].asp.tier >= 2 else "best-effort",
+            int(rng.integers(8, 32)), gen_tokens, t_max_ms))
+
+    served = 0
+    while served < requests and (sched.queue_depth() or sched.running):
+        for req in sched.next_batch(predicted_service_ms=100.0):
+            prompt = rng.integers(0, 2048, size=req.prompt_tokens
+                                  ).astype(np.int32)
+            server.request(live[req.session_id], prompt,
+                           gen_tokens=req.gen_tokens)
+            sched.complete(req.request_id)
+            served += 1
+        if not sched.running and not sched.queue_depth():
+            break
+
+    reports = {}
+    for sid, s in live.items():
+        rep = orch.compliance(s)
+        reports[sid] = rep
+        if not quiet and rep:
+            print(f"{sid} q99={rep.z.q99_ms:9.1f}ms ρ̂={rep.z.rho:.2f} "
+                  f"ν̂={rep.z.nu_tokens_per_s:7.1f} tok/s "
+                  f"compliant={rep.in_compliance} "
+                  f"cost={orch.policy.charging(s.charging_ref).cost:.4f}")
+        orch.release(s)
+    if not quiet:
+        print(f"served {served}/{requests} "
+              f"(fast-failed {sched.stats.fast_failed} on deadline)")
+    return served, reports
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="edge-tiny", choices=ARCH_IDS)
+    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--gen-tokens", type=int, default=8)
+    a = ap.parse_args()
+    serve(a.model, sessions=a.sessions, requests=a.requests, slots=a.slots,
+          gen_tokens=a.gen_tokens)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: the execution substrate that AI Sessions bind to."""
+
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.transformer import LM  # noqa: F401

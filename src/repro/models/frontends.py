@@ -1,0 +1,40 @@
+"""Modality frontend STUBS (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+These helpers synthesise deterministic fake embeddings for smoke tests and
+examples; the dry-run uses ShapeDtypeStructs from ``repro.sharding.specs``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def fake_vision_embeds(cfg: ModelConfig, key, batch: int):
+    n = cfg.num_frontend_tokens or 256
+    return jax.random.normal(key, (batch, n, cfg.d_model), jnp.float32) * 0.02
+
+
+def fake_audio_frames(cfg: ModelConfig, key, batch: int, src_len: int | None = None):
+    src = src_len or cfg.source_len
+    return jax.random.normal(key, (batch, src, cfg.d_model), jnp.float32) * 0.02
+
+
+def make_batch(cfg: ModelConfig, key, batch: int, seq: int):
+    """Synthetic full batch for the given config (tokens + frontend extras)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    out = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.frontend == "vision":
+        out["vision_embeds"] = fake_vision_embeds(cfg, k2, batch)
+        # don't train on the vision positions
+        nv = out["vision_embeds"].shape[1]
+        lbl = out["labels"]
+        out["labels"] = lbl.at[:, :nv].set(-1) if nv <= seq else lbl
+    if cfg.frontend == "audio":
+        out["frames"] = fake_audio_frames(cfg, k3, batch)
+    return out

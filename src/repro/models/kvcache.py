@@ -1,0 +1,82 @@
+"""Decode-state (cache) construction per architecture family.
+
+The cache pytree is *the* session state that AIS migration transfers between
+execution anchors (see ``repro.serving.state_transfer``). Its size — reported
+by ``cache_bytes`` — feeds the discovery cost predictor Γ̂ and the migration
+deadline feasibility check (Eq. 11: τ_mig ≤ min(T_max, lease)).
+
+Families:
+* dense/moe/vlm : full KV buffer [L, b, S, kh, hd] (S = context) or a
+                  sliding-window ring buffer (S = window).
+* ssm           : conv state + SSD state — O(1) in context length.
+* hybrid        : per-layer mix of RG-LRU state and local-attention rings.
+* encdec        : self-attention KV + precomputed cross K/V.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import rglru, ssd
+
+
+def kv_buffer_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, abstract: bool = False):
+    """Build the decode cache pytree (zeros, or ShapeDtypeStructs if abstract)."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def mk(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    pos = mk((batch,), jnp.int32)
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        shp = ssd.ssd_state_shapes(cfg, batch)
+        layers = {
+            "conv": mk((L,) + shp["conv"], dt),
+            "ssm": mk((L,) + shp["ssm"], jnp.float32),
+        }
+        return {"layers": layers, "pos": pos}
+
+    S = kv_buffer_len(cfg, max_len)
+    kv = lambda: mk((batch, S, cfg.num_kv_heads, cfg.head_dim), dt)
+
+    if cfg.family == "hybrid":
+        shp = rglru.rglru_state_shapes(cfg, batch)
+        per_layer = []
+        for kind in cfg._pattern():
+            if kind == "rec":
+                per_layer.append({
+                    "conv": mk(shp["conv"], dt),
+                    "h": mk(shp["h"], jnp.float32),
+                })
+            else:
+                per_layer.append({"k": kv(), "v": kv()})
+        return {"layers": tuple(per_layer), "pos": pos}
+
+    stacked_kv = lambda: mk((L, batch, S, cfg.num_kv_heads, cfg.head_dim), dt)
+    cache = {"layers": {"k": stacked_kv(), "v": stacked_kv()}, "pos": pos}
+    if cfg.family == "encdec":
+        src = cfg.source_len
+        cache["cross_k"] = mk((L, batch, src, cfg.num_kv_heads, cfg.head_dim), dt)
+        cache["cross_v"] = mk((L, batch, src, cfg.num_kv_heads, cfg.head_dim), dt)
+    return cache
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
+    """Total bytes of the decode cache (the migration payload size)."""
+    tree = init_cache(cfg, batch, max_len, abstract=True)
+    return int(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tree)))

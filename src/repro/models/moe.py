@@ -1,0 +1,201 @@
+"""Mixture-of-Experts FFN.
+
+Three interchangeable implementations (``cfg.moe_impl``):
+
+* ``einsum``  — GShard-style capacity-buffer dispatch/combine expressed as
+  one-hot einsums, chunked over tokens with ``lax.scan`` so the dispatch
+  tensor stays ``O(chunk · E · C_chunk)``. This is the paper-faithful default:
+  experts shard cleanly over the ``model`` mesh axis (EP) and the only
+  cross-shard collective is the final all-reduce of the combined output.
+  The dispatch/combine einsums cost real FLOPs — visible in the roofline
+  "useful ratio" and attacked in EXPERIMENTS.md §Perf.
+* ``scatter`` — dispatch via scatter-add into the capacity buffer and combine
+  via gather; near-zero dispatch FLOPs, but leans on GSPMD scatter/gather
+  partitioning.
+* ``dense``   — every expert on every token, weighted combine. Only sane for
+  smoke tests (E/k blow-up), kept as the correctness oracle.
+
+Expert weights are stored stacked: ``w_gate/w_up/w_down: [E, d, f] / [E, f, d]``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.quant import as_weight
+
+
+def moe_init(key, cfg: ModelConfig):
+    dt = L.dtype_of(cfg)
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    scale = 1.0 / np.sqrt(d)
+    return {
+        "router": L.dense_init(kr, d, E, jnp.float32),
+        "w_gate": (jax.random.normal(k1, (E, d, f), jnp.float32) * scale).astype(dt),
+        "w_up": (jax.random.normal(k2, (E, d, f), jnp.float32) * scale).astype(dt),
+        "w_down": (jax.random.normal(k3, (E, f, d), jnp.float32) / np.sqrt(f)).astype(dt),
+    }
+
+
+def _route(p, cfg: ModelConfig, x):
+    """Router: returns (weights [?, k], expert ids [?, k], aux loss scalar)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * P_e
+    E = cfg.num_experts
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce) / cfg.num_experts_per_tok
+    return top_p, top_i, aux
+
+
+def _expert_ffn(p, h):
+    """h: [E, C, d] capacity buffers -> per-expert SwiGLU."""
+    gate = jnp.einsum("ecd,edf->ecf", h, as_weight(p["w_gate"]),
+                      preferred_element_type=jnp.float32)
+    up = jnp.einsum("ecd,edf->ecf", h, as_weight(p["w_up"]),
+                    preferred_element_type=jnp.float32)
+    act = (jax.nn.silu(gate) * up).astype(h.dtype)
+    return jnp.einsum("ecf,efd->ecd", act, as_weight(p["w_down"]),
+                      preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(np.ceil(tokens * cfg.num_experts_per_tok
+                    * cfg.moe_capacity_factor / cfg.num_experts))
+    return max(8, int(np.ceil(c / 8) * 8))
+
+
+def _dispatch_chunk_einsum(p, cfg: ModelConfig, xt):
+    """xt: [T, d] one chunk of tokens -> (out [T, d], aux)."""
+    T, d = xt.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    C = _capacity(cfg, T)
+    top_p, top_i, aux = _route(p, cfg, xt)
+
+    # position of each (token, slot) assignment within its expert buffer
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.int32)        # [T, k, E]
+    flat = onehot.reshape(T * k, E)
+    pos = jnp.cumsum(flat, axis=0) * flat - 1                  # [T*k, E]
+    pos = pos.reshape(T, k, E)
+    in_cap = (pos >= 0) & (pos < C)
+
+    # dispatch tensor [T, E, C] (bf16 zeros/ones); combine carries weights
+    pos_c = jnp.clip(pos, 0, C - 1)
+    disp = (jax.nn.one_hot(pos_c, C, dtype=xt.dtype)
+            * (onehot * in_cap.astype(jnp.int32)).astype(xt.dtype)[..., None])
+    disp = jnp.sum(disp, axis=1)                               # [T, E, C]
+    comb = jnp.sum(
+        jax.nn.one_hot(pos_c, C, dtype=jnp.float32)
+        * (onehot.astype(jnp.float32) * in_cap * top_p[..., None])[..., None],
+        axis=1)                                                # [T, E, C]
+
+    buf = jnp.einsum("tec,td->ecd", disp, xt,
+                     preferred_element_type=jnp.float32).astype(xt.dtype)
+    out_buf = _expert_ffn(p, buf)
+    out = jnp.einsum("tec,ecd->td", comb.astype(xt.dtype), out_buf,
+                     preferred_element_type=jnp.float32).astype(xt.dtype)
+    return out, aux
+
+
+def _dispatch_chunk_scatter(p, cfg: ModelConfig, xt):
+    """Scatter/gather dispatch: no dense one-hot matmuls."""
+    T, d = xt.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    C = _capacity(cfg, T)
+    top_p, top_i, aux = _route(p, cfg, xt)
+
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.int32)         # [T, k, E]
+    pos = (jnp.cumsum(onehot.reshape(T * k, E), axis=0)
+           * onehot.reshape(T * k, E) - 1)
+    pos = jnp.sum(pos.reshape(T, k, E) * onehot, axis=-1)      # [T, k]
+    in_cap = (pos >= 0) & (pos < C)
+    slot = top_i * C + jnp.clip(pos, 0, C - 1)                 # [T, k]
+    slot = jnp.where(in_cap, slot, E * C)                      # overflow bin
+
+    buf = jnp.zeros((E * C + 1, d), xt.dtype)
+    src = jnp.broadcast_to(xt[:, None], (T, k, d)).reshape(T * k, d)
+    buf = buf.at[slot.reshape(-1)].add(src)
+    out_buf = _expert_ffn(p, buf[:-1].reshape(E, C, d)).reshape(E * C, d)
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((1, d), xt.dtype)], axis=0)
+    gathered = out_buf[slot.reshape(-1)].reshape(T, k, d)
+    # weighted combine in f32 (CPU XLA lacks a bf16×bf16→f32 GEMV thunk)
+    w = (top_p * in_cap).astype(jnp.float32)
+    out = jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32), w)
+    return out.astype(xt.dtype), aux
+
+
+def _dense_moe(p, cfg: ModelConfig, xt):
+    # correctness oracle path: all-f32 math (some mixed bf16→f32 dot shapes
+    # have no CPU execution thunk; this path never runs at scale)
+    T, d = xt.shape
+    top_p, top_i, aux = _route(p, cfg, xt)
+    xf = xt.astype(jnp.float32)
+    gate = jnp.einsum("td,edf->tef", xf,
+                      as_weight(p["w_gate"], jnp.float32))
+    up = jnp.einsum("td,edf->tef", xf, as_weight(p["w_up"], jnp.float32))
+    act = jax.nn.silu(gate) * up
+    yo = jnp.einsum("tef,efd->ted", act,
+                    as_weight(p["w_down"], jnp.float32))        # [T, E, d]
+    w = jnp.sum(jax.nn.one_hot(top_i, cfg.num_experts, dtype=jnp.float32)
+                * top_p[..., None], axis=1)                     # [T, E]
+    out = jnp.einsum("ted,te->td", yo, w).astype(xt.dtype)
+    return out, aux
+
+
+def moe_apply(p, cfg: ModelConfig, x):
+    """x: [b, s, d] -> (out [b, s, d], aux_loss).
+
+    Chunking runs over the SEQUENCE dim only: the batch dim (data-sharded)
+    must stay out of the scan axis — scanning a sharded leading dim forces
+    GSPMD to all-gather the whole token stream (17 GB/device f32 observed on
+    the prefill_32k cells).
+    """
+    b, s, d = x.shape
+    impl = {"einsum": _dispatch_chunk_einsum,
+            "scatter": _dispatch_chunk_scatter,
+            "dense": _dense_moe}[cfg.moe_impl]
+    # GShard grouped dispatch: groups == batch rows (vmapped), so every
+    # capacity buffer is local to its data shard. A flattened [b·t, d]
+    # dispatch makes the buffer scatter / one-hot matmul cross the batch
+    # sharding — GSPMD then all-reduces the whole [E, C, d] buffer per
+    # chunk (~84 MB × 8192 executions ≈ 1.4 TB/device wire measured on
+    # mixtral train_4k; EXPERIMENTS.md §Perf iteration 10).
+    # grouping needs enough tokens per row to fill capacity buffers: at
+    # decode (s == 1) the per-row min capacity C=8 × E pads the expert GEMMs
+    # ~E/k× (qwen3 decode useful 0.185 → 0.014 observed) — flatten instead
+    if s < 64 and cfg.moe_impl != "dense":
+        out, aux = impl(p, cfg, x.reshape(b * s, d))
+        return out.reshape(b, s, d), aux
+    grouped = jax.vmap(lambda row: impl(p, cfg, row))
+    # chunk budget is per ROW under grouped dispatch (buffers are [b_local,
+    # E, C, d]); dividing by the global batch collapses chunks to a few
+    # tokens and multiplies the per-chunk weight gathers ~16× (refuted
+    # variant, §Perf iteration 10a)
+    chunk_s = max(1, min(s, cfg.moe_chunk))
+    if s % chunk_s:
+        chunk_s = next(c for c in range(chunk_s, 0, -1) if s % c == 0)
+    nchunks = s // chunk_s
+    if nchunks == 1:
+        out, aux = grouped(x)                 # [b, s, d], [b]
+        return out, jnp.mean(aux)
+
+    xc = jnp.moveaxis(x.reshape(b, nchunks, chunk_s, d), 1, 0)
+
+    def step(acc, xi):                       # xi: [b, chunk_s, d]
+        o, a = grouped(xi)
+        return acc + jnp.mean(a), o
+
+    body = jax.checkpoint(step) if cfg.remat != "none" else step
+    aux, out = jax.lax.scan(body, jnp.zeros((), jnp.float32), xc)
+    aux = aux / nchunks
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, d)
+    return out, aux

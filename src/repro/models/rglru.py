@@ -1,0 +1,161 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (the Griffin "recurrent block"):
+
+    y1 = conv1d(W_x · x)            (depthwise causal, width 4)
+    h  = RG-LRU(y1)                 (gated diagonal linear recurrence)
+    y2 = GeLU(W_gate · x)
+    out = W_out · (h ⊙ y2)
+
+RG-LRU:
+    r_t = σ(BlockDiag_a(x_t))          recurrence gate
+    i_t = σ(BlockDiag_i(x_t))          input gate
+    log a_t = -c · softplus(Λ) ⊙ r_t   (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The sequence path runs a chunked scan: ``lax.scan`` over time chunks with a
+``lax.associative_scan`` inside each chunk, so peak memory is
+O(b · chunk · width) while keeping the log-depth parallel scan. The decode
+path is the single-step recurrence (state = [b, width]) — this constant-size
+state is exactly what makes RG-LRU sessions cheap to migrate (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.quant import as_weight
+
+_C = 8.0
+_CHUNK = 256
+_NBLOCKS = 16  # block-diagonal gate heads
+
+
+def rglru_init(key, cfg: ModelConfig):
+    dt = L.dtype_of(cfg)
+    w = cfg.lru_width or cfg.d_model
+    bs = w // _NBLOCKS
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    # Λ init so that a = σ(Λ)^c ∈ (0.9, 0.999) roughly (Griffin appendix)
+    u = jax.random.uniform(k6, (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "w_x": L.dense_init(k1, cfg.d_model, w, dt),
+        "w_gate": L.dense_init(k2, cfg.d_model, w, dt),
+        "w_out": L.dense_init(k3, w, cfg.d_model, dt),
+        "conv": (jax.random.normal(k7, (cfg.conv_width, w), jnp.float32)
+                 / np.sqrt(cfg.conv_width)).astype(dt),
+        "gate_a": (jax.random.normal(k4, (_NBLOCKS, bs, bs), jnp.float32)
+                   / np.sqrt(bs)).astype(jnp.float32),
+        "gate_i": (jax.random.normal(k5, (_NBLOCKS, bs, bs), jnp.float32)
+                   / np.sqrt(bs)).astype(jnp.float32),
+        "lambda": lam,
+    }
+
+
+def _block_diag(w, x):
+    """x: [..., width] -> block-diagonal linear, blocks [_NBLOCKS, bs, bs]."""
+    shape = x.shape
+    xb = x.reshape(shape[:-1] + (_NBLOCKS, shape[-1] // _NBLOCKS))
+    y = jnp.einsum("...nb,nbc->...nc", xb.astype(jnp.float32), w)
+    return y.reshape(shape)
+
+
+def _gates(p, x):
+    """a_t (log-space) and sqrt(1-a²)·i_t multiplier, f32. x: [..., w]."""
+    r = jax.nn.sigmoid(_block_diag(p["gate_a"], x))
+    i = jax.nn.sigmoid(_block_diag(p["gate_i"], x))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i
+    return a, mult
+
+
+def _causal_conv(p, x, state=None):
+    """Depthwise causal conv, width K. x: [b, l, w].
+
+    state: [b, K-1, w] carried inputs for decode; returns (y, new_state).
+    """
+    K = p["conv"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * p["conv"][i] for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return y.astype(x.dtype), new_state
+
+
+def _scan_lru(a, b, h0, *, remat=False):
+    """h_t = a_t h_{t-1} + b_t over axis 1. a, b: [b, l, w] f32; h0: [b, w]."""
+    B, T, W = a.shape
+    chunk = min(_CHUNK, T)
+    pad = (-T) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    nc = a.shape[1] // chunk
+    ac = jnp.moveaxis(a.reshape(B, nc, chunk, W), 1, 0)
+    bc = jnp.moveaxis(b.reshape(B, nc, chunk, W), 1, 0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    def step(h, xs):
+        ai, bi = xs
+        # fold the carried state into the first element
+        bi = bi.at[:, 0].add(ai[:, 0] * h)
+        aa, bb = jax.lax.associative_scan(combine, (ai, bi), axis=1)
+        return bb[:, -1], bb
+
+    body = jax.checkpoint(step) if remat else step
+    _, hs = jax.lax.scan(body, h0, (ac, bc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, nc * chunk, W)
+    return hs[:, :T]
+
+
+def rglru_block_apply(p, cfg: ModelConfig, x):
+    """Sequence path. x: [b, l, d] -> [b, l, d]."""
+    xw = jnp.einsum("bld,dw->blw", x, as_weight(p["w_x"]),
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    xw, _ = _causal_conv(p, xw)
+    a, mult = _gates(p, xw)
+    b = mult * xw.astype(jnp.float32)
+    h0 = jnp.zeros((x.shape[0], xw.shape[-1]), jnp.float32)
+    h = _scan_lru(a, b, h0, remat=cfg.remat != "none").astype(x.dtype)
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, as_weight(p["w_gate"]),
+                                  preferred_element_type=jnp.float32))
+    out = (h.astype(jnp.float32) * gate).astype(x.dtype)
+    return jnp.einsum("blw,wd->bld", out, as_weight(p["w_out"]),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rglru_block_decode(p, cfg: ModelConfig, x, conv_state, h_state):
+    """Single-token path. x: [b, 1, d]; conv_state: [b, K-1, w];
+    h_state: [b, w] f32. Returns (out, conv_state, h_state)."""
+    xw = jnp.einsum("bld,dw->blw", x, as_weight(p["w_x"]),
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    xw, conv_state = _causal_conv(p, xw, conv_state)
+    a, mult = _gates(p, xw)
+    h = a[:, 0] * h_state + (mult * xw.astype(jnp.float32))[:, 0]
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, as_weight(p["w_gate"]),
+                                  preferred_element_type=jnp.float32))
+    out = (h[:, None] * gate).astype(x.dtype)
+    out = jnp.einsum("blw,wd->bld", out, as_weight(p["w_out"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, conv_state, h
+
+
+def rglru_state_shapes(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": (batch, cfg.conv_width - 1, w),
+        "h": (batch, w),
+    }

@@ -1,0 +1,191 @@
+"""Mamba-2 SSD layer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD forward: within a chunk the quadratic (dual/attention) form is
+used; across chunks a linear recurrence carries the SSM state
+``S ∈ [b, heads, headdim, dstate]``. The whole computation runs under one
+``lax.scan`` over chunks so peak memory stays
+O(b · heads · chunk² + b · heads · headdim · dstate).
+
+Decode is the exact single-step recurrence — session state is O(1) in the
+sequence length, which is why the long_500k shape is admissible for this
+family and why AIS migration is cheapest here (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.quant import as_weight
+
+
+def ssd_init(key, cfg: ModelConfig):
+    dt = L.dtype_of(cfg)
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    g, nh = cfg.ssm_ngroups, cfg.ssm_nheads
+    K = cfg.conv_width
+    conv_dim = di + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * g * n + nh
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba default)
+    u = jax.random.uniform(k4, (nh,), jnp.float32, np.log(1e-3), np.log(1e-1))
+    dt_bias = jnp.exp(u)
+    dt_bias = dt_bias + jnp.log(-jnp.expm1(-dt_bias))  # inv softplus
+    return {
+        "in_proj": L.dense_init(k1, d, proj_out, dt),
+        "conv": (jax.random.normal(k2, (K, conv_dim), jnp.float32)
+                 / np.sqrt(K)).astype(dt),
+        "out_proj": L.dense_init(k3, di, d, dt),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": L.rmsnorm_init(di),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, n, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di: 2 * di]
+    B = zxbcdt[..., 2 * di: 2 * di + g * n]
+    C = zxbcdt[..., 2 * di + g * n: 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, x, B, C, dt
+
+
+def _conv(p, xbc, state=None):
+    """Causal depthwise conv over [b, l, conv_dim]."""
+    K = p["conv"].shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    y = sum(xp[:, i: i + xbc.shape[1]] * p["conv"][i] for i in range(K))
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xbc.dtype), xp[:, -(K - 1):]
+
+
+def _ssd_chunked(cfg: ModelConfig, x, dt, A, B, C, S0):
+    """Chunked SSD scan.
+
+    x: [b, l, nh, hp]; dt: [b, l, nh] (post-softplus); A: [nh] (negative);
+    B, C: [b, l, g, n]; S0: [b, nh, hp, n] initial state.
+    Returns (y [b, l, nh, hp], S_final).
+    """
+    b, l, nh, hp = x.shape
+    g, n = B.shape[2], B.shape[3]
+    Q = min(cfg.ssm_chunk, l)
+    pad = (-l) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // Q
+    heads_per_group = nh // g
+
+    def chunkify(t):
+        return jnp.moveaxis(t.reshape((b, nc) + (Q,) + t.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc = map(chunkify, (x, dt, B, C))
+
+    def step(S, xs):
+        xq, dtq, Bq, Cq = xs            # [b,Q,nh,hp], [b,Q,nh], [b,Q,g,n]
+        dA = dtq * A                     # [b,Q,nh]
+        cum = jnp.cumsum(dA, axis=1)     # within-chunk cumulative
+        # expand B,C to heads
+        Bh = jnp.repeat(Bq, heads_per_group, axis=2)   # [b,Q,nh,n]
+        Ch = jnp.repeat(Cq, heads_per_group, axis=2)
+        xdt = xq.astype(jnp.float32) * dtq[..., None]  # [b,Q,nh,hp]
+        # ---- intra-chunk (dual / quadratic) term -------------------------
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # [b,Q,Q,nh] (i,j)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        Ldec = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", Ch.astype(jnp.float32),
+                            Bh.astype(jnp.float32))     # [b,Q,Q,nh]
+        y_diag = jnp.einsum("bijh,bijh,bjhp->bihp", scores, Ldec, xdt)
+        # ---- inter-chunk: contribution of carried state ------------------
+        decay_in = jnp.exp(cum)                          # [b,Q,nh]
+        y_off = jnp.einsum("bihn,bhpn->bihp",
+                           Ch.astype(jnp.float32) * decay_in[..., None], S)
+        # ---- state update -------------------------------------------------
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)        # [b,Q,nh]
+        S_new = (jnp.exp(cum[:, -1, :])[..., None, None] * S
+                 + jnp.einsum("bjhn,bjhp->bhpn",
+                              Bh.astype(jnp.float32) * decay_out[..., None],
+                              xdt))
+        return S_new, (y_diag + y_off)
+
+    body = jax.checkpoint(step) if cfg.remat != "none" else step
+    S_f, ys = jax.lax.scan(body, S0.astype(jnp.float32), (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * Q, nh, hp)
+    return y[:, :l], S_f
+
+
+def ssd_apply(p, cfg: ModelConfig, x, conv_state=None, ssm_state=None):
+    """Sequence path. x: [b, l, d] -> (y [b, l, d], (conv_state, ssm_state))."""
+    b, l, d = x.shape
+    di, nh, hp = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    zxbcdt = jnp.einsum("bld,dp->blp", x, as_weight(p["in_proj"]),
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xs, B, C, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, B, C], axis=-1)
+    xbc, conv_state = _conv(p, xbc, conv_state)
+    xs = xbc[..., :di].reshape(b, l, nh, hp)
+    B = xbc[..., di: di + g * n].reshape(b, l, g, n)
+    C = xbc[..., di + g * n:].reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, nh, hp, n), jnp.float32)
+    y, S = _ssd_chunked(cfg, xs, dt, A, B, C, ssm_state)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = L.rmsnorm_apply(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                        cfg.norm_eps)
+    out = jnp.einsum("blp,pd->bld", y, as_weight(p["out_proj"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, (conv_state, S)
+
+
+def ssd_decode(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """Single-token recurrence. x: [b, 1, d]."""
+    b = x.shape[0]
+    di, nh, hp = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    zxbcdt = jnp.einsum("bld,dp->blp", x, as_weight(p["in_proj"]),
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xs, B, C, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, B, C], axis=-1)
+    xbc, conv_state = _conv(p, xbc, conv_state)
+    xs = xbc[:, 0, :di].reshape(b, nh, hp)
+    B = xbc[:, 0, di: di + g * n].reshape(b, g, n)
+    C = xbc[:, 0, di + g * n:].reshape(b, g, n)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [b,nh]
+    A = -jnp.exp(p["A_log"])
+    hpg = nh // g
+    Bh = jnp.repeat(B, hpg, axis=1)  # [b,nh,n]
+    Ch = jnp.repeat(C, hpg, axis=1)
+    dA = jnp.exp(dt * A)             # [b,nh]
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, xs.astype(jnp.float32), Bh.astype(jnp.float32))
+    S = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", S, Ch.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = L.rmsnorm_apply(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                        cfg.norm_eps)
+    out = jnp.einsum("blp,pd->bld", y, as_weight(p["out_proj"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, (conv_state, S)
+
+
+def ssd_state_shapes(cfg: ModelConfig, batch: int):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": (batch, cfg.conv_width - 1, conv_dim),
+        "ssm": (batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state),
+    }

@@ -1,0 +1,2 @@
+from repro.serving.engine import InferenceEngine  # noqa: F401
+from repro.serving.scheduler import QoSScheduler, Request  # noqa: F401

@@ -1,0 +1,165 @@
+"""Slot-based continuous-batching inference engine.
+
+One engine instance = one execution anchor's serving plane for one model:
+a fixed decode batch of ``slots`` sequences sharing jitted prefill /
+decode_step functions. Sessions join/leave slots independently (per-slot
+positions in the cache make lockstep unnecessary). The engine is the
+``v_cmp`` substrate AIS compute leases reserve against, and its
+``export_slot``/``import_slot`` are the state-transfer primitive behind
+make-before-break migration.
+
+On the CPU container this runs the tiny models for examples/tests; on a pod
+the same code jit-compiles under the production mesh with the decode plan's
+shardings (see repro.launch.serve).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import LM
+
+
+@dataclass
+class SlotState:
+    session_id: str
+    position: int
+    tokens_generated: int = 0
+    last_token: int = 0
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params=None, *, slots: int = 8,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.lm = LM(cfg)
+        self.slots = slots
+        self.max_len = max_len
+        if params is None:
+            params = self.lm.init(jax.random.key(seed))
+        self.params = params
+        self.cache = self.lm.init_cache(slots, max_len)
+        self._slot_map: Dict[str, int] = {}
+        self._slots: list[Optional[SlotState]] = [None] * slots
+        self._prefill = jax.jit(
+            lambda p, b: self.lm.prefill(p, b, self.max_len))
+        self._decode = jax.jit(self.lm.decode_step)
+        self._active_mask = np.zeros(slots, bool)
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> int:
+        return sum(1 for s in self._slots if s is None)
+
+    def _alloc(self, session_id: str) -> int:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                self._slot_map[session_id] = i
+                return i
+        raise RuntimeError("no free decode slots (lease accounting bug)")
+
+    # ------------------------------------------------------------------
+    def _batch_axis(self, path) -> int:
+        """Slot/batch axis of a cache leaf: stacked families carry layers
+        first ([L, b, ...]); hybrid leaves and 'pos' are slot-first."""
+        keys = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
+        if "pos" in keys or self.cfg.family == "hybrid":
+            return 0
+        return 1 if any(str(k) in ("k", "v", "conv", "ssm", "cross_k",
+                                   "cross_v") for k in keys) else 0
+
+    def _write_slot(self, idx: int, cache1):
+        """Insert a batch-1 cache into slot ``idx`` of the engine cache."""
+        def ins(path, full, one):
+            ax = self._batch_axis(path)
+            one_row = jax.lax.index_in_dim(one, 0, axis=ax, keepdims=False)
+            if ax == 0:
+                return full.at[idx].set(one_row)
+            return full.at[:, idx].set(one_row)
+
+        self.cache = jax.tree_util.tree_map_with_path(ins, self.cache, cache1)
+
+    def export_slot(self, session_id: str):
+        """Extract this session's state (the migration payload)."""
+        idx = self._slot_map[session_id]
+
+        def ext(path, full):
+            ax = self._batch_axis(path)
+            return jax.lax.slice_in_dim(full, idx, idx + 1, axis=ax)
+
+        state = jax.tree_util.tree_map_with_path(ext, self.cache)
+        meta = self._slots[idx]
+        return {"cache": state, "position": meta.position,
+                "last_token": meta.last_token}
+
+    def import_slot(self, session_id: str, payload) -> None:
+        """Install a migrated session's state into a free slot."""
+        idx = self._alloc(session_id)
+        self._write_slot(idx, payload["cache"])
+        self._slots[idx] = SlotState(session_id, payload["position"],
+                                     last_token=payload["last_token"])
+
+    def release_slot(self, session_id: str) -> None:
+        idx = self._slot_map.pop(session_id, None)
+        if idx is not None:
+            self._slots[idx] = None
+
+    # ------------------------------------------------------------------
+    def prefill_session(self, session_id: str, prompt: np.ndarray) -> dict:
+        """Admit a session: run prefill, install the cache, return TTFT."""
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
+        logits, cache1 = self._prefill(self.params, batch)
+        tok = int(jnp.argmax(logits[0]))
+        idx = self._alloc(session_id)
+        self._write_slot(idx, cache1)
+        self._slots[idx] = SlotState(session_id, position=len(prompt),
+                                     tokens_generated=1, last_token=tok)
+        return {"first_token": tok,
+                "ttfb_ms": (time.perf_counter() - t0) * 1e3}
+
+    def decode_round(self) -> Dict[str, int]:
+        """One continuous-batching decode step for every active slot."""
+        if not self._slot_map:
+            return {}
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i, s in enumerate(self._slots):
+            if s is not None:
+                toks[i, 0] = s.last_token
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks))
+        out = {}
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            s.last_token = int(nxt[i])
+            s.position += 1
+            s.tokens_generated += 1
+            out[s.session_id] = s.last_token
+        return out
+
+    # ------------------------------------------------------------------
+    def serve(self, session_id: str, prompt_tokens: int, gen_tokens: int,
+              *, prompt: Optional[np.ndarray] = None) -> dict:
+        """Unary convenience: prefill + N decode rounds for one session."""
+        rng = np.random.default_rng(hash(session_id) % 2**31)
+        if prompt is None:
+            prompt = rng.integers(0, self.cfg.vocab_size,
+                                  size=prompt_tokens).astype(np.int32)
+        t0 = time.perf_counter()
+        pre = self.prefill_session(session_id, prompt)
+        toks = [pre["first_token"]]
+        for _ in range(gen_tokens - 1):
+            out = self.decode_round()
+            toks.append(out[session_id])
+        self.release_slot(session_id)
+        total_ms = (time.perf_counter() - t0) * 1e3
+        return {"tokens": toks, "ttfb_ms": pre["ttfb_ms"],
+                "latency_ms": total_ms}

@@ -1,0 +1,117 @@
+"""QoS-aware continuous-batching scheduler — the transport-contract
+enforcement point inside the serving plane.
+
+Maps AIS QoS flows onto decode-slot scheduling:
+
+* **Priority classes** mirror the QFI classes (premium / assured /
+  best-effort): admission to the next decode round drains queues in strict
+  class order, FIFO within a class (weighted-fair would starve tails the
+  ASP measures, so strict+reservation is the enforceable choice).
+* **Reserved share**: a fraction of slots only premium flows may hold —
+  this is what a confirmed QoS lease actually buys at the engine.
+* **Deadline-aware cutoffs** (straggler mitigation, serving side): a request
+  whose ASP T_max would expire before its predicted completion is failed
+  FAST with DEADLINE_EXPIRY instead of occupying a slot to produce a
+  late-useless answer ("served-and-failed" accounting in the §V sense).
+"""
+
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+from repro.core.clock import Clock
+from repro.core.failures import FailureCause
+
+_CLASS_ORDER = ("premium", "assured", "best-effort")
+
+
+@dataclass
+class Request:
+    request_id: str
+    session_id: str
+    klass: str                  # premium | assured | best-effort
+    prompt_tokens: int
+    gen_tokens: int
+    t_max_ms: float
+    submitted_at: float = 0.0
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    failed: Optional[FailureCause] = None
+
+
+@dataclass
+class SchedulerStats:
+    admitted: int = 0
+    completed: int = 0
+    fast_failed: int = 0
+    per_class_wait_ms: Dict[str, List[float]] = field(
+        default_factory=lambda: collections.defaultdict(list))
+
+
+class QoSScheduler:
+    def __init__(self, clock: Clock, *, slots: int,
+                 premium_reserved_frac: float = 0.25):
+        self.clock = clock
+        self.slots = slots
+        self.premium_reserved = max(1, int(slots * premium_reserved_frac)) \
+            if slots > 1 else 0
+        self.queues: Dict[str, Deque[Request]] = {
+            k: collections.deque() for k in _CLASS_ORDER}
+        self.running: Dict[str, Request] = {}
+        self.stats = SchedulerStats()
+        self._ids = itertools.count()
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.submitted_at = self.clock.now()
+        self.queues[req.klass].append(req)
+
+    def _slots_usable(self, klass: str) -> int:
+        """Best-effort/assured may not dip into the premium reservation."""
+        in_use = len(self.running)
+        free = self.slots - in_use
+        if klass == "premium":
+            return free
+        premium_running = sum(1 for r in self.running.values()
+                              if r.klass == "premium")
+        reserve_hold = max(0, self.premium_reserved - premium_running)
+        return max(0, free - reserve_hold)
+
+    def _deadline_hopeless(self, req: Request,
+                           predicted_service_ms: float) -> bool:
+        waited_ms = (self.clock.now() - req.submitted_at) * 1e3
+        return waited_ms + predicted_service_ms > req.t_max_ms
+
+    # ------------------------------------------------------------------
+    def next_batch(self, *, predicted_service_ms: float = 0.0) -> List[Request]:
+        """Admit requests to the next decode round in class order."""
+        admitted: List[Request] = []
+        for klass in _CLASS_ORDER:
+            q = self.queues[klass]
+            while q and self._slots_usable(klass) > 0:
+                req = q.popleft()
+                if predicted_service_ms and \
+                        self._deadline_hopeless(req, predicted_service_ms):
+                    req.failed = FailureCause.DEADLINE_EXPIRY
+                    req.finished_at = self.clock.now()
+                    self.stats.fast_failed += 1
+                    continue
+                req.started_at = self.clock.now()
+                self.running[req.request_id] = req
+                self.stats.admitted += 1
+                self.stats.per_class_wait_ms[klass].append(
+                    (req.started_at - req.submitted_at) * 1e3)
+                admitted.append(req)
+        return admitted
+
+    def complete(self, request_id: str) -> None:
+        req = self.running.pop(request_id, None)
+        if req:
+            req.finished_at = self.clock.now()
+            self.stats.completed += 1
+
+    def queue_depth(self) -> int:
+        return sum(len(q) for q in self.queues.values())

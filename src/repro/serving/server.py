@@ -1,0 +1,80 @@
+"""NE-AIaaS serving front: binds the control plane (Orchestrator) to real
+engines at the execution sites.
+
+``AIaaSServer`` owns per-(site, model) engines, attaches them to the
+ExecutionSite objects so ``Orchestrator.serve`` hits real prefill/decode,
+and implements the engine-level migration data plane used by the
+MigrationController (make-before-break with fingerprint verification).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.catalog import Catalog
+from repro.core.orchestrator import Orchestrator
+from repro.core.session import AISession
+from repro.serving.engine import InferenceEngine
+from repro.serving import state_transfer
+
+
+class EngineFleet:
+    """Per-site engines for one model (shared weights across sites)."""
+
+    def __init__(self, catalog: Catalog, model_id: str, *, slots: int = 8,
+                 max_len: int = 256):
+        entry = catalog.get(model_id)
+        self.entry = entry
+        self.slots = slots
+        self.max_len = max_len
+        self._engines: Dict[str, InferenceEngine] = {}
+        self._params = None
+
+    def engine_for(self, site_id: str) -> InferenceEngine:
+        if site_id not in self._engines:
+            eng = InferenceEngine(self.entry.cfg, params=self._params,
+                                  slots=self.slots, max_len=self.max_len)
+            self._params = eng.params   # weights shared across sites
+            self._engines[site_id] = eng
+        return self._engines[site_id]
+
+
+class AIaaSServer:
+    def __init__(self, orch: Orchestrator, model_id: str = "edge-tiny",
+                 *, slots: int = 8, max_len: int = 256):
+        self.orch = orch
+        self.fleet = EngineFleet(orch.catalog, model_id, slots=slots,
+                                 max_len=max_len)
+        for site_id, site in orch.sites.items():
+            site.attach_engine(self.fleet.engine_for(site_id))
+        # engine-level data plane for make-before-break migration
+        orch.migrations.transfer_fn = self._transfer
+
+    def _transfer(self, session: AISession, src_site, dst_site) -> float:
+        src = self.fleet.engine_for(src_site.spec.site_id)
+        dst = self.fleet.engine_for(dst_site.spec.site_id)
+        if session.session_id in src._slot_map:
+            meta = state_transfer.transfer(src, dst, session.session_id)
+            return meta["wire_s_at_link"]
+        return 0.0
+
+    # ------------------------------------------------------------------
+    def request(self, session: AISession, prompt: np.ndarray,
+                gen_tokens: int = 16) -> dict:
+        site = self.orch.sites[session.binding.site_id]
+        eng = self.fleet.engine_for(site.spec.site_id)
+        out = eng.serve(session.session_id, len(prompt), gen_tokens,
+                        prompt=prompt)
+        from repro.core.telemetry import RequestRecord
+        self.orch.telemetry[session.session_id].record(RequestRecord(
+            t_submit=self.orch.clock.now(), ttfb_ms=out["ttfb_ms"],
+            latency_ms=out["latency_ms"],
+            completed=out["latency_ms"]
+            <= session.asp.objectives.t_max_ms,
+            tokens=gen_tokens))
+        self.orch.policy.meter(session.charging_ref, tokens=gen_tokens,
+                               chip_s=out["latency_ms"] / 1e3,
+                               unit_price=self.fleet.entry.price_per_1k_tokens)
+        return out

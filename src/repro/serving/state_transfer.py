@@ -1,0 +1,67 @@
+"""Session-state transfer: the data plane of make-before-break migration.
+
+``transfer(src_engine, dst_engine, session_id)`` exports the slot state on
+the source anchor, re-shards it for the destination (between meshes this is
+a ``jax.device_put`` with the destination shardings; on one host it is a
+copy), verifies integrity, and installs it into a destination slot while
+the source keeps serving. Only after the destination confirms does the
+caller release the source slot (MigrationController drives the ordering).
+
+Family-specific payloads (DESIGN.md §4):
+    dense/moe : full or windowed KV pages       (largest payload)
+    hybrid    : RG-LRU states + window rings
+    ssm       : conv + SSD states               (O(1) in context — cheapest)
+"""
+
+from __future__ import annotations
+
+import hashlib
+import time
+
+import jax
+import numpy as np
+
+
+def payload_bytes(payload) -> int:
+    return int(sum(np.asarray(l).nbytes
+                   for l in jax.tree.leaves(payload["cache"])))
+
+
+def fingerprint(payload) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(payload["cache"]):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    h.update(str(payload["position"]).encode())
+    return h.hexdigest()[:16]
+
+
+def transfer(src_engine, dst_engine, session_id: str, *,
+             dst_shardings=None, link_bw: float = 5e9,
+             verify: bool = True, fail_injector=None) -> dict:
+    """Move one session between engines. Returns transfer metadata.
+
+    ``fail_injector``: test hook — callable that may raise mid-transfer to
+    exercise the abort path (source must stay intact).
+    """
+    t0 = time.perf_counter()
+    payload = src_engine.export_slot(session_id)
+    nbytes = payload_bytes(payload)
+    src_fp = fingerprint(payload) if verify else None
+
+    if fail_injector is not None:
+        fail_injector(payload)
+
+    if dst_shardings is not None:
+        payload = dict(payload)
+        payload["cache"] = jax.device_put(payload["cache"], dst_shardings)
+
+    dst_engine.import_slot(session_id, payload)
+    if verify:
+        dst_payload = dst_engine.export_slot(session_id)
+        dst_fp = fingerprint(dst_payload)
+        if dst_fp != src_fp:
+            dst_engine.release_slot(session_id)
+            raise IOError(f"state transfer corruption: {src_fp} != {dst_fp}")
+    wall_s = time.perf_counter() - t0
+    return {"bytes": nbytes, "wall_s": wall_s,
+            "wire_s_at_link": nbytes / link_bw, "fingerprint": src_fp}

@@ -1,0 +1,2 @@
+from repro.sharding.planner import ShardingPlan, make_plan  # noqa: F401
+from repro.sharding.specs import SHAPES, ShapeCell, input_specs, cell_runnable  # noqa: F401

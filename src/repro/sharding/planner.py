@@ -1,0 +1,375 @@
+"""Sharding planner: logical-axis rules → PartitionSpecs per (arch × step).
+
+Parallelism mapping (DESIGN.md §5):
+
+* ``data`` (and ``pod`` when multi-pod) — data parallelism; for training the
+  params/optimizer are additionally sharded over ``data`` (FSDP/ZeRO-3 via
+  GSPMD).
+* ``model`` — tensor parallelism: attention heads / d_ff / vocab when the
+  dimension divides the axis; expert parallelism for MoE when the expert
+  count divides; otherwise divisibility-aware fallbacks (e.g. sequence-
+  sharded KV caches → distributed flash-decode softmax).
+
+The planner only states *intent* at function boundaries; GSPMD materialises
+the collectives. The roofline pass (EXPERIMENTS.md §Roofline) reads the
+result off the compiled HLO, and §Perf iterates on these rules.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def data_axes(mesh: Mesh):
+    """The batch-sharding axis (pod+data when multi-pod)."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    return n > 0 and n % _axis_size(mesh, axis) == 0
+
+
+def _fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop any sharded dim whose size doesn't divide its mesh axes —
+    jit in_shardings require exact divisibility (no implicit padding)."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for n, d in zip(shape, dims):
+        if d is None:
+            out.append(None)
+        elif n % _axis_size(mesh, d) == 0:
+            out.append(d)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+@dataclass
+class ShardingPlan:
+    mesh: Mesh
+    cfg: ModelConfig
+    step_kind: str                       # train | prefill | decode
+    param_specs: Any = None              # pytree of PartitionSpec
+    batch_specs: Any = None              # dict of PartitionSpec
+    cache_specs: Any = None              # pytree of PartitionSpec (decode)
+    microbatches: int = 1
+    notes: list = field(default_factory=list)
+
+    def shardings(self, tree_specs):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), tree_specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _param_rule(path: str, shape, cfg: ModelConfig, mesh: Mesh, train: bool,
+                notes: list, fsdp=None) -> P:
+    """Choose a PartitionSpec for one param leaf.
+
+    ``path`` is the '/'-joined key path; leading 'layers' dims are the scan
+    stack and always unsharded. ``fsdp``: extra axis to shard params over
+    (training ZeRO-3, or weight-gathered serving for models too big for
+    model-axis shards alone).
+    """
+    nd = len(shape)
+    # hybrid 'layers' is a tuple of per-layer dicts — leaves are NOT stacked
+    stacked = ((path.startswith("enc_layers")
+                or (path.startswith("layers") and cfg.family != "hybrid"))
+               and nd >= 2)
+
+    def spec(*dims):
+        if stacked:
+            return P(None, *dims)
+        return P(*dims)
+
+    core = shape[1:] if stacked else shape
+    parts = path.split("/")
+    name = parts[-1]
+    if name in ("q", "s") and len(parts) >= 2:
+        # int8 weight-only serving: {q, s} inherit the base weight's rule
+        # (_fit_spec drops axes the size-1 scale dims can't take)
+        name = parts[-2]
+
+    # --- embeddings / unembeddings ------------------------------------
+    if name == "embed":
+        # vocab-sharded ONLY: a (model, data) 2-D sharding makes the token
+        # gather un-partitionable (XLA "involuntary full rematerialization",
+        # ~25 GB/device observed) — vocab sharding keeps the gather local
+        # per shard with a small all-reduce combine. Serving may trade the
+        # per-step [b,s,d] all-reduce for a replicated table (hillclimb
+        # lever: serve_embed_replicated).
+        if not train and cfg.serve_embed_replicated and not cfg.tie_embeddings:
+            return P(None, None)
+        return P("model", None)           # [V, d]
+    if name == "lm_head":
+        return P(fsdp, "model")           # [d, V]
+    if name in ("adapter", "vision_adapter"):
+        return P(fsdp, None)
+
+    # --- MoE experts ------------------------------------------------------
+    if name in ("w_gate", "w_up", "w_down") and len(core) == 3:
+        E = core[0]
+        if _div(E, mesh, "model"):        # expert parallelism
+            return spec("model", fsdp, None)
+        notes.append(f"{path}: E={E} not divisible by model axis; "
+                     f"falling back to expert-TP over d_ff")
+        if name == "w_down":              # [E, f, d]
+            return spec(None, "model", fsdp)
+        return spec(None, fsdp, "model")  # [E, d, f]
+    if name == "router":
+        return spec(fsdp, None)
+
+    # --- attention projections -------------------------------------------
+    if name in ("w_q", "w_k", "w_v"):
+        # out dim is heads*hd; shard by model when the head count divides,
+        # otherwise shard the d_model INPUT dim (weights stay distributed;
+        # GSPMD inserts a partial-sum all-reduce on the projection output)
+        heads = cfg.num_heads if name == "w_q" else cfg.num_kv_heads
+        if _div(heads, mesh, "model"):
+            return spec(fsdp, "model")
+        if f"{name}: head-count fallback" not in " ".join(notes):
+            notes.append(f"{name}: head-count fallback — {heads} heads not "
+                         f"divisible by model axis; sharding d_model input dim")
+        return spec("model", None)
+    if name == "w_o":
+        if _div(cfg.num_heads, mesh, "model"):
+            return spec("model", fsdp)
+        return spec(None, "model")
+
+    # --- dense MLP ----------------------------------------------------------
+    if name in ("w_gate", "w_up"):        # [d, f]
+        return spec(fsdp, "model")
+    if name == "w_down":                  # [f, d]
+        return spec("model", fsdp)
+
+    # --- SSM -----------------------------------------------------------------
+    if name == "in_proj":                 # [d, 2di+2gn+nh]
+        return spec(fsdp, "model")
+    if name == "out_proj":                # [di, d]
+        return spec("model", fsdp)
+    if name == "conv":                    # [K, conv_dim]
+        return spec(None, "model")
+
+    # --- RG-LRU ---------------------------------------------------------------
+    if name in ("w_x",):                  # [d, w]
+        return spec(fsdp, "model")
+    if name == "w_out":                   # [w, d]
+        return spec("model", fsdp)
+    if name == "lambda":
+        return spec("model")
+    if name in ("gate_a", "gate_i"):      # [nb, bs, bs]
+        if _div(core[0], mesh, "model"):
+            return spec("model", None, None)
+        return spec(None, None, None)
+
+    # --- 1-D / small leaves (norms, biases, A_log, D, dt_bias) --------------
+    return spec(*([None] * len(core)))
+
+
+def param_plan(cfg: ModelConfig, param_tree, mesh: Mesh, *, train: bool,
+               notes: list, serve_fsdp: bool = False):
+    """Map a param pytree (arrays or ShapeDtypeStructs) to PartitionSpecs.
+
+    ``serve_fsdp``: weight-gathered serving — when bf16 weights / model-axis
+    shards exceed the per-chip HBM budget (e.g. qwen2-vl-72b: 9 GB/chip at
+    TP16), params additionally shard over the data axes and GSPMD gathers
+    them per layer. Memory-correct baseline; the collective cost shows up in
+    §Roofline and is hillclimb material.
+    """
+    fsdp = None
+    if train:
+        fsdp = "data"
+    elif serve_fsdp:
+        fsdp = data_axes(mesh) if len(data_axes(mesh)) > 1 else "data"
+    flat = jax.tree_util.tree_flatten_with_path(param_tree)[0]
+
+    def path_str(kp):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+        return "/".join(parts)
+
+    specs = {}
+    for kp, leaf in flat:
+        raw = _param_rule(path_str(kp), leaf.shape, cfg, mesh, train, notes,
+                          fsdp=fsdp)
+        specs[path_str(kp)] = _fit_spec(raw, leaf.shape, mesh)
+    treedef = jax.tree_util.tree_structure(param_tree)
+    ordered = [specs[path_str(kp)] for kp, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+# ---------------------------------------------------------------------------
+# cache rules (decode state)
+# ---------------------------------------------------------------------------
+
+def cache_plan(cfg: ModelConfig, cache_tree, mesh: Mesh, batch: int,
+               notes: list):
+    dp = data_axes(mesh)
+    dp_ok = batch % _axis_size(mesh, dp) == 0
+
+    def rule(path: str, shape) -> P:
+        name = path.split("/")[-1]
+        if name == "pos":
+            return P()
+        bdim = P(dp) if dp_ok else P(None)
+        stacked = path.startswith("layers") and not cfg.family == "hybrid"
+        # KV buffers: [L, b, S, kh, hd] (stacked) or [b, S, kh, hd] (hybrid)
+        if name in ("k", "v", "cross_k", "cross_v"):
+            kh = cfg.num_kv_heads
+            core = shape[1:] if (stacked or name.startswith("cross")) else shape
+            want_heads = (cfg.kv_shard == "heads"
+                          or (cfg.kv_shard == "auto"
+                              and _div(kh, mesh, "model")))
+            if want_heads and _div(kh, mesh, "model"):
+                spec = (bdim[0] if dp_ok else None, None, "model", None)
+            else:
+                # sequence-sharded KV → distributed decode softmax
+                spec = (bdim[0] if dp_ok else None, "model", None, None)
+                if "seq-sharded KV" not in " ".join(notes):
+                    notes.append(f"kv_heads={kh} not divisible by model axis; "
+                                 f"sequence-sharded KV cache")
+            if stacked or name.startswith("cross"):
+                return P(None, *spec)
+            return P(*spec)
+        if name == "ssm":                  # [L, b, nh, hp, n]
+            nh = cfg.ssm_nheads
+            tail = ("model", None, None) if _div(nh, mesh, "model") else (None, None, None)
+            return P(None, bdim[0] if dp_ok else None, *tail)
+        if name == "conv":                 # [L, b, K-1, cd] or [b, K-1, w]
+            w = shape[-1]
+            tail = "model" if _div(w, mesh, "model") else None
+            if cfg.family == "hybrid":
+                return P(bdim[0] if dp_ok else None, None, tail)
+            return P(None, bdim[0] if dp_ok else None, None, tail)
+        if name == "h":                    # [b, w] (hybrid RG-LRU state)
+            w = shape[-1]
+            tail = "model" if _div(w, mesh, "model") else None
+            return P(bdim[0] if dp_ok else None, tail)
+        return P(*([None] * len(shape)))
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+
+    def path_str(kp):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+        return "/".join(parts)
+
+    ordered = [_fit_spec(rule(path_str(kp), leaf.shape), leaf.shape, mesh)
+               for kp, leaf in flat]
+    treedef = jax.tree_util.tree_structure(cache_tree)
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+# ---------------------------------------------------------------------------
+# batch rules + microbatching
+# ---------------------------------------------------------------------------
+
+def batch_plan(cfg: ModelConfig, mesh: Mesh, batch: int, notes: list):
+    dp = data_axes(mesh)
+    dp_ok = batch % _axis_size(mesh, dp) == 0
+    b = dp if dp_ok else None
+    if not dp_ok:
+        notes.append(f"global_batch={batch} smaller than data axes; "
+                     f"batch replicated (long-context single-session shape)")
+    specs = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.frontend == "vision":
+        specs["vision_embeds"] = P(b, None, None)
+    if cfg.family == "encdec":
+        specs["frames"] = P(b, None, None)
+    return specs
+
+
+def pick_microbatches(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
+                      budget_bytes: float = 4e9) -> int:
+    """Grad-accumulation factor: keep per-device checkpointed residuals
+    (L × bµ_local × s × d × 2B) under ``budget_bytes``."""
+    dp = _axis_size(mesh, data_axes(mesh))
+    b_loc = max(1, batch // dp)
+    L = cfg.num_layers + cfg.encoder_layers
+    v_sharded = cfg.padded_vocab // mesh.shape.get("model", 1)
+
+    def per_mb(mb):
+        bmu = max(1, b_loc // mb)
+        resid = L * bmu * seq * cfg.d_model * 2          # bf16 checkpoints
+        logits = bmu * seq * v_sharded * 4               # f32 loss slab
+        if cfg.family == "hybrid":
+            # unrolled layers: XLA keeps each layer's backward TP all-reduce
+            # buffer (f32 tuple of residual-sized dx partials) live — no
+            # scan-body reuse. Observed 54 × 336 MB on recurrentgemma.
+            resid += L * bmu * seq * cfg.d_model * 8
+        return resid + logits
+
+    mb = 1
+    while mb < b_loc and per_mb(mb) > budget_bytes:
+        mb *= 2
+    return min(mb, b_loc)
+
+
+# ---------------------------------------------------------------------------
+# top level
+# ---------------------------------------------------------------------------
+
+#: per-chip HBM budget for serving weights before weight-gathered serving
+#: kicks in. Leaves room for KV cache + temps on a 16 GB chip; also bounds
+#: the XLA-hoisted f32 conversion of scan-stacked weights (the CPU dry-run
+#: lowers bf16 dots via f32 operand converts of the whole stack, ~2× weight
+#: bytes of temp — sharding over data axes shrinks that copy 16×).
+SERVE_WEIGHT_BUDGET = 3.5e9
+
+
+def make_plan(cfg: ModelConfig, mesh: Mesh, step_kind: str, *, batch: int,
+              seq: int, param_tree=None, cache_tree=None) -> ShardingPlan:
+    notes: list = []
+    plan = ShardingPlan(mesh=mesh, cfg=cfg, step_kind=step_kind)
+    train = step_kind == "train"
+    serve_fsdp = False
+    if not train:
+        per_chip = cfg.param_count() * 2 / mesh.shape["model"]
+        if cfg.serve_fsdp_mode == "on":
+            serve_fsdp = True
+        elif cfg.serve_fsdp_mode == "off":
+            serve_fsdp = False
+        elif per_chip > SERVE_WEIGHT_BUDGET:
+            serve_fsdp = True
+            notes.append(
+                f"weight-gathered serving: {per_chip/1e9:.1f} GB/chip of bf16 "
+                f"weights at TP{mesh.shape['model']} exceeds the "
+                f"{SERVE_WEIGHT_BUDGET/1e9:.0f} GB budget; params also "
+                f"sharded over data axes")
+    if param_tree is not None:
+        plan.param_specs = param_plan(cfg, param_tree, mesh, train=train,
+                                      notes=notes, serve_fsdp=serve_fsdp)
+    plan.batch_specs = batch_plan(cfg, mesh, batch, notes)
+    if cache_tree is not None:
+        plan.cache_specs = cache_plan(cfg, cache_tree, mesh, batch, notes)
+    if train:
+        plan.microbatches = (cfg.train_microbatches or
+                             pick_microbatches(cfg, mesh, batch, seq))
+    plan.notes = notes
+    return plan

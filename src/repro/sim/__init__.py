@@ -1,0 +1,3 @@
+from repro.sim.latency import LatencyModel, SimConfig  # noqa: F401
+from repro.sim.scenarios import simulate_endpoint, simulate_neaiaas  # noqa: F401
+from repro.sim.mobility import simulate_mobility  # noqa: F401

@@ -1,0 +1,112 @@
+"""Train step: remat + microbatched grad accumulation + AdamW.
+
+Master params live in f32; matrix leaves are cast to the model compute dtype
+(bf16) inside the loss. Gradient accumulation runs as a ``lax.scan`` over
+microbatches (the planner picks the count so per-device checkpointed
+residuals fit HBM), which also gives XLA a window to overlap the data-
+parallel reduce of microbatch k with the compute of k+1.
+
+Optional int8 gradient compression (error feedback) hooks in before the
+optimizer — see ``repro.training.compression``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import LM
+from repro.training.optimizer import AdamWHyper, adamw_init, adamw_update
+from repro.training import compression as comp
+
+
+class TrainState(NamedTuple):
+    params: Any          # f32 master weights
+    opt: Dict[str, Any]  # m, v, step
+    ef: Optional[Any] = None   # error-feedback residual (compression)
+
+
+def _to_master(params):
+    return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+
+def _to_compute(params, dtype):
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if p.ndim >= 2 else p, params)
+
+
+def init_train_state(lm: LM, key, *, compress: bool = False) -> TrainState:
+    params = _to_master(lm.init(key))
+    ef = jax.tree.map(jnp.zeros_like, params) if compress else None
+    return TrainState(params=params, opt=adamw_init(params), ef=ef)
+
+
+def abstract_train_state(lm: LM, *, compress: bool = False) -> TrainState:
+    """ShapeDtypeStruct train state (for dry-run lowering)."""
+    return jax.eval_shape(
+        functools.partial(init_train_state, lm, compress=compress),
+        jax.random.key(0))
+
+
+def train_state_specs(plan, state: TrainState):
+    """PartitionSpecs for the full train state from the param plan."""
+    pspec = plan.param_specs
+    return TrainState(
+        params=pspec,
+        opt={"m": pspec, "v": pspec,
+             "step": jax.sharding.PartitionSpec()},
+        ef=pspec if state.ef is not None else None)
+
+
+def make_train_step(lm: LM, *, hyper: AdamWHyper = AdamWHyper(),
+                    microbatches: int = 1, compress: bool = False,
+                    compute_dtype=jnp.bfloat16):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params_f32, mb):
+        p = _to_compute(params_f32, compute_dtype)
+        loss, metrics = lm.loss(p, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def one_microbatch(params, mb):
+        (loss, metrics), grads = grad_fn(params, mb)
+        return grads, loss, metrics
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if microbatches > 1:
+            def resh(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mbs = jax.tree.map(resh, batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                grads, loss, _ = one_microbatch(params, mb)
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                     g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_step, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        else:
+            grads, loss, _ = one_microbatch(params, batch)
+
+        ef = state.ef
+        if compress and ef is not None:
+            grads, ef = comp.compress_tree(grads, ef)
+
+        new_params, opt, gn = adamw_update(grads, state.opt, params, hyper)
+        metrics = {"loss": loss, "grad_norm": gn,
+                   "step": opt["step"].astype(jnp.float32)}
+        return TrainState(new_params, opt, ef), metrics
+
+    return train_step

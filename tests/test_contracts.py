@@ -1,0 +1,100 @@
+"""ASP / failure-semantics / timer contract tests (paper Section III)."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.asp import (ASP, InteractionMode, Modality, MobilityClass,
+                            Objectives, QualityTier, default_asp)
+from repro.core.failures import (REMEDIATION, FailureCause, SessionError,
+                                 Timers)
+
+
+class TestObjectives:
+    def test_valid(self):
+        Objectives(100, 300, 500, 0.99, 1000, 10).validate()
+
+    @pytest.mark.parametrize("kw", [
+        dict(ttfb_ms=0),                      # no early-response bound
+        dict(p95_ms=600),                     # p95 > p99
+        dict(p99_ms=1500),                    # p99 > T_max
+        dict(rho_min=0.0),                    # not a valid probability
+        dict(rho_min=1.5),
+        dict(nu_min=-1),
+    ])
+    def test_invalid(self, kw):
+        base = dict(ttfb_ms=100, p95_ms=300, p99_ms=500, rho_min=0.99,
+                    t_max_ms=1000, nu_min=10)
+        base.update(kw)
+        with pytest.raises(ValueError):
+            Objectives(**base).validate()
+
+    @given(p95=st.floats(1, 1e4), p99=st.floats(1, 1e4),
+           tmax=st.floats(1, 1e4))
+    def test_ordering_is_total(self, p95, p99, tmax):
+        """validate() accepts exactly the orderings Eq. (3) allows."""
+        o = Objectives(min(p95, p99, 1.0), p95, p99, 0.9, tmax, 0.0)
+        ok = p95 <= p99 <= tmax and o.ttfb_ms <= p99
+        if ok:
+            o.validate()
+        else:
+            with pytest.raises(ValueError):
+                o.validate()
+
+
+class TestASP:
+    def test_digest_stable_and_sensitive(self):
+        a1 = default_asp()
+        a2 = default_asp()
+        assert a1.digest() == a2.digest()
+        import dataclasses
+        a3 = dataclasses.replace(
+            a1, objectives=dataclasses.replace(a1.objectives, p99_ms=901.0))
+        assert a3.digest() != a1.digest()
+
+    def test_empty_sovereignty_scope_rejected(self):
+        import dataclasses
+        asp = dataclasses.replace(default_asp(), allowed_regions=())
+        with pytest.raises(ValueError):
+            asp.validate()
+
+    def test_continuity_classes(self):
+        assert not default_asp(mobility=MobilityClass.STATIC).continuity_required()
+        assert default_asp(mobility=MobilityClass.VEHICULAR).continuity_required()
+
+
+class TestFailureSemantics:
+    def test_exactly_nine_causes(self):
+        """Eq. (12): the partition has exactly these nine elements."""
+        assert len(FailureCause) == 9
+        expected = {"consent violation", "policy denial",
+                    "sovereignty violation", "model unavailable",
+                    "no feasible binding", "compute scarcity",
+                    "QoS scarcity", "state transfer failure",
+                    "deadline expiry"}
+        assert {c.value for c in FailureCause} == expected
+
+    def test_distinct_remediations(self):
+        """Causes must not be conflated: distinct remediation per cause."""
+        assert len(set(REMEDIATION.values())) == len(FailureCause)
+
+    def test_session_error_carries_cause(self):
+        e = SessionError(FailureCause.QOS_SCARCITY, "no flows")
+        assert e.cause is FailureCause.QOS_SCARCITY
+
+
+class TestTimers:
+    def test_default_ordering_valid(self):
+        Timers().validate(t_max_s=2.0)
+
+    @given(td=st.floats(0.001, 10), tp=st.floats(0.001, 10),
+           tr=st.floats(0.001, 10), tc=st.floats(0.001, 10),
+           tm=st.floats(0.001, 10))
+    def test_eq11_ordering(self, td, tp, tr, tc, tm):
+        t = Timers(tau_disc=td, tau_page=tp, tau_prep=tr, tau_com=tc,
+                   tau_mig=tm, lease_s=30.0)
+        ok = td <= tp <= tr <= tc and tm <= min(100.0, 30.0)
+        if ok:
+            t.validate(t_max_s=100.0)
+        else:
+            with pytest.raises(ValueError):
+                t.validate(t_max_s=100.0)

@@ -1,0 +1,91 @@
+"""Validate the multi-pod dry-run artifacts (deliverable e/g).
+
+These tests read artifacts/dryrun/*.json produced by
+``python -m repro.launch.dryrun --all --both-meshes``; they are skipped when
+the artifacts are absent (CI without the 30-minute sweep) — the small-mesh
+compile path is covered by tests/test_sharding_plan.py instead.
+"""
+
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.sharding import SHAPES, cell_runnable
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+ASSIGNED = [a for a in ARCH_IDS if a != "edge-tiny"]
+
+
+def _load(mesh):
+    out = {}
+    for f in glob.glob(os.path.join(ART, f"*__{mesh}.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+needs_artifacts = pytest.mark.skipif(
+    len(glob.glob(os.path.join(ART, "*.json"))) < 80,
+    reason="dry-run artifacts not generated (run repro.launch.dryrun --all "
+           "--both-meshes)")
+
+
+@needs_artifacts
+@pytest.mark.parametrize("mesh", ["pod16x16", "pod2x16x16"])
+def test_all_40_cells_present_and_clean(mesh):
+    recs = _load(mesh)
+    assert len(recs) == 40, f"{len(recs)} records for {mesh}"
+    errors = [(k, r.get("error")) for k, r in recs.items()
+              if r["status"] == "error"]
+    assert not errors, errors
+    # skips exactly match the sub-quadratic rule
+    for arch in ASSIGNED:
+        for shape in SHAPES:
+            ok, _ = cell_runnable(get_config(arch), shape)
+            r = recs[(arch, shape)]
+            assert (r["status"] == "ok") == ok, (arch, shape, r["status"])
+
+
+@needs_artifacts
+@pytest.mark.parametrize("mesh", ["pod16x16", "pod2x16x16"])
+def test_everything_fits_hbm(mesh):
+    bad = [(k, round(r["memory"]["peak_bytes_per_device"] / 1e9, 1))
+           for k, r in _load(mesh).items()
+           if r["status"] == "ok" and not r["memory"]["fits_hbm"]]
+    assert not bad, f"cells over 16 GB/chip: {bad}"
+
+
+@needs_artifacts
+def test_roofline_terms_sane():
+    recs = _load("pod16x16")
+    for k, r in recs.items():
+        if r["status"] != "ok":
+            continue
+        roof = r["roofline"]
+        assert roof["flops_global"] > 0, k
+        assert roof["roofline_bound_s"] > 0, k
+        assert roof["dominant"] in ("compute", "memory", "collective")
+        # loop-aware dot flops must cover a sane fraction of 6ND/2ND —
+        # attention/causal overhead can push HLO above MODEL_FLOPS, remat
+        # recompute up to ~4×; anything outside [0.2, 30] is an accounting bug
+        ratio = r["model_flops"] / roof["flops_global"]
+        assert 1 / 30 < ratio < 5.0, (k, ratio)
+
+
+@needs_artifacts
+def test_multipod_shards_the_pod_axis():
+    """The 2×16×16 pass proves the pod axis shards: per-device batch work
+    halves for batch-sharded train cells vs single-pod."""
+    single = _load("pod16x16")
+    multi = _load("pod2x16x16")
+    for arch in ASSIGNED:
+        s, m = single[(arch, "train_4k")], multi[(arch, "train_4k")]
+        if s["status"] != "ok":
+            continue
+        assert m["mesh"]["devices"] == 512 and s["mesh"]["devices"] == 256
+        ratio = (m["roofline"]["flops_per_device"]
+                 / max(s["roofline"]["flops_per_device"], 1))
+        assert ratio < 0.75, (arch, ratio)

@@ -1,0 +1,97 @@
+"""Make-before-break migration invariants (Section IV-B, Eq. 14)."""
+
+import pytest
+
+from repro.core import Orchestrator, default_asp
+from repro.core.asp import MobilityClass
+from repro.core.clock import VirtualClock
+from repro.core.failures import FailureCause, SessionError
+from repro.core.migration import MigrationTriggers
+from repro.core.session import SessionState
+
+
+@pytest.fixture()
+def orch():
+    return Orchestrator(clock=VirtualClock())
+
+
+def vehicular_session(orch):
+    asp = default_asp(mobility=MobilityClass.VEHICULAR)
+    return orch.establish(asp, invoker="car", zone="zone-a")
+
+
+class TestMakeBeforeBreak:
+    def test_successful_migration_never_leaves_committed(self, orch):
+        s = vehicular_session(orch)
+        src = s.binding.site_id
+        out = orch.migrations.migrate(s, "zone-a")
+        assert out.migrated
+        assert out.to_site != src
+        assert out.interruption_ms == 0.0
+        assert s.committed()
+        # source leases released only after target commit
+        assert s.binding.site_id == out.to_site
+
+    def test_source_lease_released_after_swap(self, orch):
+        s = vehicular_session(orch)
+        src_site = orch.sites[s.binding.site_id]
+        old_lease = s.binding.compute_lease_id
+        orch.migrations.migrate(s, "zone-a")
+        assert not src_site.lease_valid(old_lease)
+
+    def test_transfer_failure_aborts_and_keeps_source(self, orch):
+        s = vehicular_session(orch)
+        src = s.binding.site_id
+
+        def fail(session, a, b):
+            raise SessionError(FailureCause.STATE_TRANSFER_FAILURE, "boom")
+
+        orch.migrations.transfer_fn = fail
+        out = orch.migrations.migrate(s, "zone-a")
+        assert not out.migrated and out.aborted
+        assert out.cause is FailureCause.STATE_TRANSFER_FAILURE
+        assert s.binding.site_id == src
+        assert s.committed()
+        assert s.state is SessionState.COMMITTED
+
+    def test_slow_transfer_exceeding_tau_mig_aborts(self, orch):
+        s = vehicular_session(orch)
+        orch.migrations.transfer_fn = lambda *_: orch.timers.tau_mig * 2
+        out = orch.migrations.migrate(s, "zone-a")
+        assert not out.migrated
+        assert out.cause is FailureCause.STATE_TRANSFER_FAILURE
+        assert s.committed()
+
+    def test_target_leases_rolled_back_on_abort(self, orch):
+        s = vehicular_session(orch)
+        before = {sid: site.slots_in_use()
+                  for sid, site in orch.sites.items()}
+
+        def fail(session, a, b):
+            raise SessionError(FailureCause.STATE_TRANSFER_FAILURE, "boom")
+
+        orch.migrations.transfer_fn = fail
+        orch.migrations.migrate(s, "zone-a")
+        after = {sid: site.slots_in_use() for sid, site in orch.sites.items()}
+        assert before == after, "target leases leaked on abort"
+
+    def test_migrate_requires_committed(self, orch):
+        s = vehicular_session(orch)
+        orch.release(s)
+        with pytest.raises(SessionError):
+            orch.migrations.migrate(s, "zone-a")
+
+
+class TestTriggers:
+    def test_eq14_thresholds(self):
+        t = MigrationTriggers(delta_l99=0.3, delta_ttfb=0.4)
+        assert t.should_migrate(0.31, 0.0)
+        assert t.should_migrate(0.0, 0.41)
+        assert not t.should_migrate(0.29, 0.39)
+
+    def test_heartbeat_without_risk_no_migration(self, orch):
+        s = vehicular_session(orch)
+        out = orch.heartbeat(s, MigrationTriggers(delta_l99=0.99,
+                                                  delta_ttfb=0.99))
+        assert out is None
+        assert s.committed()

@@ -1,0 +1,97 @@
+"""End-to-end lifecycle integration (orchestrator + real engines)."""
+
+import numpy as np
+import pytest
+
+from repro.core import Orchestrator, default_asp, SessionError
+from repro.core.asp import MobilityClass, QualityTier
+from repro.core.clock import VirtualClock
+from repro.core.failures import FailureCause, Timers
+from repro.core.session import SessionState
+
+
+@pytest.fixture()
+def orch():
+    return Orchestrator(clock=VirtualClock())
+
+
+class TestLifecycle:
+    def test_establish_serve_release(self, orch):
+        s = orch.establish(default_asp(), "alice", "zone-a")
+        assert s.state is SessionState.COMMITTED
+        for _ in range(10):
+            r = orch.serve(s, prompt_tokens=128, gen_tokens=16)
+            assert r.completed
+        rep = orch.compliance(s)
+        assert rep is not None and rep.z.n == 10
+        charge = orch.policy.charging(s.charging_ref)
+        assert charge.tokens == 160
+        orch.release(s)
+        assert s.state is SessionState.RELEASED
+        with pytest.raises(SessionError):
+            orch.serve(s)
+
+    def test_establish_failure_has_cause_and_no_leak(self, orch):
+        import dataclasses
+        bad = dataclasses.replace(default_asp(), allowed_regions=("mars",))
+        before = {sid: site.slots_in_use()
+                  for sid, site in orch.sites.items()}
+        with pytest.raises(SessionError) as ei:
+            orch.establish(bad, "bob", "zone-a")
+        assert ei.value.cause in (FailureCause.NO_FEASIBLE_BINDING,
+                                  FailureCause.SOVEREIGNTY_VIOLATION)
+        after = {sid: site.slots_in_use() for sid, site in orch.sites.items()}
+        assert before == after
+
+    def test_concurrent_sessions_capacity(self, orch):
+        """Admit sessions up to edge capacity; the system must degrade by
+        cause, not by partial allocation."""
+        ok, failed = 0, 0
+        for i in range(30):
+            try:
+                orch.establish(default_asp(), f"ue-{i}", "zone-a")
+                ok += 1
+            except SessionError as e:
+                failed += 1
+                assert e.cause in (FailureCause.COMPUTE_SCARCITY,
+                                   FailureCause.QOS_SCARCITY,
+                                   FailureCause.NO_FEASIBLE_BINDING)
+        assert ok >= 20
+
+    def test_heartbeat_renews(self, orch):
+        orch.timers = Timers(lease_s=5.0)
+        orch.coordinator.timers = orch.timers
+        s = orch.establish(default_asp(), "c", "zone-a")
+        for _ in range(4):
+            orch.clock.advance(3.0)
+            orch.heartbeat(s)
+        assert s.committed()     # 12 s elapsed > lease; renewed via heartbeat
+
+    def test_lease_lapse_without_heartbeat(self, orch):
+        orch.timers = Timers(lease_s=5.0)
+        orch.coordinator.timers = orch.timers
+        s = orch.establish(default_asp(), "d", "zone-a")
+        orch.clock.advance(6.0)
+        assert not s.committed()
+        with pytest.raises(SessionError) as ei:
+            orch.serve(s)
+        assert ei.value.cause is FailureCause.DEADLINE_EXPIRY
+
+
+class TestRealEngineIntegration:
+    def test_served_by_real_model_with_migration(self):
+        from repro.serving.server import AIaaSServer
+        orch = Orchestrator(clock=VirtualClock())
+        server = AIaaSServer(orch, "edge-tiny", slots=4, max_len=96)
+        asp = default_asp(mobility=MobilityClass.VEHICULAR)
+        s = orch.establish(asp, "car", "zone-a")
+        eng = server.fleet.engine_for(s.binding.site_id)
+        prompt = np.arange(12, dtype=np.int32)
+        eng.prefill_session(s.session_id, prompt)
+        pre_tok = [eng.decode_round()[s.session_id] for _ in range(3)]
+        out = orch.migrations.migrate(s, "zone-a")
+        assert out.migrated and s.committed()
+        dst = server.fleet.engine_for(s.binding.site_id)
+        post = [dst.decode_round()[s.session_id] for _ in range(3)]
+        src_would = [eng.decode_round()[s.session_id] for _ in range(3)]
+        assert post == src_would, "state transfer changed generation"

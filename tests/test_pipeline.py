@@ -1,0 +1,58 @@
+"""Pipeline parallelism: pipelined forward == sequential reference.
+
+Runs in a subprocess with 8 forced host devices (jax locks the device count
+at first init)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.sharding.pipeline import pipeline_forward, stage_params_from_stack
+
+    devs = np.asarray(jax.devices()[:4]).reshape(4)
+    mesh = Mesh(devs, ("pipe",))
+
+    L, D, M, mb = 8, 32, 6, 4      # 8 layers over 4 stages, 6 microbatches
+    key = jax.random.key(0)
+    w = jax.random.normal(key, (L, D, D)) / np.sqrt(D)
+    x = jax.random.normal(jax.random.key(1), (M, mb, D))
+
+    def layer(p, h):
+        return jnp.tanh(h @ p)
+
+    def stage_fn(stage_w, h):      # stage_w: [L/S, D, D]
+        def body(h, p):
+            return layer(p, h), None
+        h, _ = jax.lax.scan(body, h, stage_w)
+        return h
+
+    # sequential reference
+    ref = x
+    for i in range(L):
+        ref = layer(w[i], ref)
+
+    staged = stage_params_from_stack(w, 4)
+    f = pipeline_forward(stage_fn, mesh, num_microbatches=M, axis="pipe")
+    out = f(staged, x)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    print("PIPE_ERR::%.8f" % err)
+""")
+
+
+def test_pipeline_matches_sequential():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=560,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("PIPE_ERR::")]
+    assert line, r.stdout
+    assert float(line[0].split("::")[1]) < 1e-5

@@ -1,0 +1,75 @@
+"""int8 weight-only serving (beyond-paper §Perf lever) correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import LM
+from repro.models.frontends import make_batch
+from repro.models.quant import (abstract_quantize_tree, as_weight,
+                                is_quantized, quantize_tree, quantize_weight)
+
+
+class TestQuantPrimitives:
+    def test_roundtrip_error_bounded(self):
+        w = jax.random.normal(jax.random.key(0), (64, 128), jnp.float32)
+        q = quantize_weight(w)
+        deq = as_weight(q, jnp.float32)
+        err = jnp.max(jnp.abs(deq - w))
+        assert float(err) <= float(jnp.max(q["s"])) * 0.51
+
+    def test_stacked_scales_per_layer(self):
+        w = jax.random.normal(jax.random.key(1), (4, 32, 64), jnp.float32)
+        q = quantize_weight(w)
+        assert q["q"].shape == (4, 32, 64)
+        assert q["s"].shape == (4, 1, 64)   # per-(layer, out-channel)
+
+    def test_exclusions(self):
+        params = {"embed": jnp.ones((512, 64), jnp.bfloat16),
+                  "mlp": {"w_gate": jnp.ones((64, 128), jnp.bfloat16)},
+                  "norm1": {"scale": jnp.ones((4, 64), jnp.float32)}}
+        qt = quantize_tree(params, min_size=16)
+        assert not is_quantized(qt["embed"])
+        assert not is_quantized(qt["norm1"]["scale"])
+        assert is_quantized(qt["mlp"]["w_gate"])
+
+    def test_abstract_matches_concrete(self):
+        lm = LM(get_config("edge-tiny"))
+        params = lm.init(jax.random.key(0))
+        qt = quantize_tree(params)
+        at = abstract_quantize_tree(lm.param_specs())
+        s1 = jax.tree.map(lambda l: (l.shape, str(l.dtype)), qt)
+        s2 = jax.tree.map(lambda l: (l.shape, str(l.dtype)), at)
+        assert jax.tree.all(jax.tree.map(lambda a, b: a == b, s1, s2))
+
+
+@pytest.mark.parametrize("arch", ["edge-tiny", "mixtral-8x7b",
+                                  "mamba2-1.3b", "recurrentgemma-2b"])
+def test_int8_forward_agrees(arch):
+    cfg = get_config(arch) if arch == "edge-tiny" else get_smoke_config(arch)
+    lm = LM(cfg)
+    key = jax.random.key(0)
+    params = lm.init(key)
+    params_q = quantize_tree(params, min_size=256)
+    batch = make_batch(cfg, key, 2, 16)
+    lb, _ = jax.jit(lm.forward)(params, batch)
+    lq, _ = jax.jit(lm.forward)(params_q, batch)
+    agree = float(jnp.mean(jnp.argmax(lb, -1) == jnp.argmax(lq, -1)))
+    assert agree > 0.8, f"{arch}: top-1 agreement {agree}"
+
+
+def test_int8_decode_path(key=jax.random.key(3)):
+    """Quantised weights through prefill + decode (the serving hot path)."""
+    cfg = get_config("edge-tiny")
+    lm = LM(cfg)
+    params = quantize_tree(lm.init(key))
+    batch = {"tokens": jax.random.randint(key, (1, 12), 0,
+                                          cfg.vocab_size, jnp.int32)}
+    logits, cache = jax.jit(lambda p, b: lm.prefill(p, b, 32))(params, batch)
+    tok = jnp.argmax(logits, -1)[:, None]
+    for _ in range(4):
+        logits, cache = jax.jit(lm.decode_step)(params, cache, tok)
+        tok = jnp.argmax(logits[:, 0], -1)[:, None]
+        assert not bool(jnp.isnan(logits).any())

@@ -1,0 +1,145 @@
+"""AIS state machine + commitment-coupling invariants (Eq. 4/6/10)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.asp import default_asp
+from repro.core.catalog import default_catalog
+from repro.core.clock import VirtualClock
+from repro.core.failures import FailureCause, SessionError, Timers
+from repro.core.policy import PolicyControl
+from repro.core.qos import PREMIUM, QoSFlowManager
+from repro.core.session import AISession, SessionState
+from repro.core.sites import default_sites
+from repro.core.twophase import TwoPhaseCoordinator
+
+
+def make_world(lease_s=30.0):
+    clock = VirtualClock()
+    catalog = default_catalog()
+    sites = default_sites(clock, tuple(catalog._entries.keys()))
+    qos = QoSFlowManager(clock)
+    policy = PolicyControl(clock)
+    timers = Timers(lease_s=lease_s)
+    coord = TwoPhaseCoordinator(clock, sites, qos, timers)
+    return clock, catalog, sites, qos, policy, timers, coord
+
+
+def committed_session(world):
+    clock, catalog, sites, qos, policy, timers, coord = world
+    asp = default_asp()
+    s = AISession(asp, "ue", "zone-a", clock, sites=sites, qos=qos,
+                  policy=policy)
+    s.authz_ref = policy.grant_consent("ue", asp.allowed_regions)
+    s.mark_discovered(); s.mark_anchored(); s.mark_preparing()
+    model = catalog.get("edge-tiny")
+    prep = coord.prepare(model, "edge-a", "zone-a", PREMIUM, slots=1,
+                         cache_bytes=1e6)
+    s.mark_prepared()
+    binding = coord.commit(prep, model)
+    s.bind(binding)
+    return s
+
+
+class TestStateMachine:
+    def test_happy_path(self):
+        s = committed_session(make_world())
+        assert s.state is SessionState.COMMITTED
+        assert s.committed() and s.serve_allowed()
+
+    def test_illegal_transitions_rejected(self):
+        world = make_world()
+        clock, catalog, sites, qos, policy, *_ = world
+        asp = default_asp()
+        s = AISession(asp, "ue", "zone-a", clock, sites=sites, qos=qos,
+                      policy=policy)
+        with pytest.raises(SessionError):
+            s.mark_prepared()          # IDLE -> PREPARED is not legal
+        with pytest.raises(SessionError):
+            s.mark_migrating()
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.sampled_from(
+        ["discovered", "anchored", "preparing", "prepared", "migrating"]),
+        max_size=6))
+    def test_random_sequences_never_reach_committed(self, seq):
+        """Property: no sequence of mark_* calls reaches COMMITTED — the
+        ONLY path is bind() with both leases valid (partial states are
+        unrepresentable)."""
+        world = make_world()
+        clock, catalog, sites, qos, policy, *_ = world
+        s = AISession(default_asp(), "ue", "zone-a", clock, sites=sites,
+                      qos=qos, policy=policy)
+        for name in seq:
+            try:
+                getattr(s, f"mark_{name}")()
+            except SessionError:
+                pass
+        assert s.state is not SessionState.COMMITTED
+        assert not s.committed()
+
+
+class TestCommitmentCoupling:
+    def test_eq4_both_sides_required(self):
+        world = make_world()
+        s = committed_session(world)
+        assert s.committed()
+        # kill the QoS side only → Committed(t) must drop (Eq. 4)
+        world[3].release(s.binding.qos_lease_id)
+        assert s.v_cmp() and not s.v_qos()
+        assert not s.committed()
+
+    def test_lease_expiry_leaves_committed_domain(self):
+        world = make_world(lease_s=5.0)
+        clock = world[0]
+        s = committed_session(world)
+        assert s.committed()
+        clock.advance(6.0)
+        assert not s.committed()       # both leases expired
+
+    def test_renew_extends_both(self):
+        world = make_world(lease_s=5.0)
+        clock = world[0]
+        s = committed_session(world)
+        clock.advance(4.0)
+        assert s.renew(5.0)
+        clock.advance(4.0)
+        assert s.committed()
+
+    def test_eq6_revocation_disables_serve(self):
+        world = make_world()
+        policy = world[4]
+        s = committed_session(world)
+        assert s.serve_allowed()
+        policy.revoke(s.authz_ref)
+        assert s.committed()           # resources still valid…
+        assert not s.serve_allowed()   # …but service is disabled (Eq. 6)
+
+    def test_bind_rejects_stale_leases(self):
+        world = make_world()
+        clock, catalog, sites, qos, policy, timers, coord = world
+        s = committed_session(world)
+        from repro.core.session import Binding
+        stale = Binding("edge-tiny", "1.0", "edge-a", "ep", 9, "st",
+                        "edge-a/cmp-999", "qos-999")
+        s.state = SessionState.MIGRATING
+        with pytest.raises(SessionError) as ei:
+            s.bind(stale)
+        assert ei.value.cause is FailureCause.DEADLINE_EXPIRY
+
+    def test_release_idempotent_leases(self):
+        world = make_world()
+        sites = world[2]
+        s = committed_session(world)
+        lease = s.binding.compute_lease_id
+        s.release()
+        # double release of the underlying lease is a no-op
+        sites["edge-a"].release(lease)
+        assert s.state is SessionState.RELEASED
+
+    def test_audit_record_fields(self):
+        s = committed_session(make_world())
+        rec = s.record()
+        for key in ("session_id", "asp_digest", "model", "anchor",
+                    "endpoint", "qfi", "steering"):
+            assert rec[key], key

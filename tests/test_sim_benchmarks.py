@@ -1,0 +1,68 @@
+"""§V simulator behaviour + the paper's three figure claims + Table I."""
+
+import numpy as np
+import pytest
+
+from repro.sim import (LatencyModel, SimConfig, simulate_endpoint,
+                       simulate_neaiaas, simulate_mobility)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return LatencyModel(SimConfig(n_requests=4000))
+
+
+class TestQueueModel:
+    def test_lindley_wait_grows_with_load(self, model):
+        rng = np.random.default_rng(0)
+        svc = model.infer_times(rng, 4000)
+        w_lo = model.queue_wait(np.random.default_rng(1), 4000, 0.3, svc)
+        w_hi = model.queue_wait(np.random.default_rng(1), 4000, 0.95, svc)
+        assert w_hi.mean() > 5 * w_lo.mean()
+
+    def test_transport_tails(self, model):
+        rng = np.random.default_rng(2)
+        be = model.transport_best_effort(rng, 20000)
+        qos = model.transport_qos(np.random.default_rng(2), 20000)
+        assert np.quantile(be, 0.999) > 4 * np.quantile(qos, 0.999)
+        assert qos.max() <= model.cfg.qos_cap_ms + 1e-9
+
+
+class TestPaperClaims:
+    def test_fig2_tail_collapse_delayed(self, model):
+        e = simulate_endpoint(0.95, model, ell99=400, t_max=1000)
+        n = simulate_neaiaas(0.95, model, ell99=400, t_max=1000)
+        assert e.p99_ms > 1.5 * n.p99_ms
+
+    def test_fig3_served_and_failed(self, model):
+        e = simulate_endpoint(0.95, model, ell99=400, t_max=1000)
+        n = simulate_neaiaas(0.95, model, ell99=400, t_max=1000)
+        assert e.violation_prob > 0.15
+        assert n.violation_prob < 0.05
+        assert n.admitted_frac < 1.0      # admission actually rejected load
+
+    def test_fig3_low_load_equivalence(self, model):
+        """At low load both systems comply — the win is the tail regime."""
+        e = simulate_endpoint(0.3, model, ell99=400, t_max=1000)
+        n = simulate_neaiaas(0.3, model, ell99=400, t_max=1000)
+        assert e.violation_prob < 0.05 and n.violation_prob < 0.05
+
+    def test_fig4_interruption(self):
+        t = simulate_mobility(90, "teardown", n_sessions=20)
+        b = simulate_mobility(90, "mbb", n_sessions=20)
+        assert t.interruption_prob > 0.5
+        assert b.interruption_prob <= 0.1
+        assert b.mean_gap_ms <= t.mean_gap_ms
+
+    def test_fig4_static_user_no_interruption(self):
+        t = simulate_mobility(0, "teardown", n_sessions=10)
+        assert t.interruption_prob == 0.0
+
+
+class TestTable1:
+    def test_all_requirements_pass(self):
+        from benchmarks.figures import table1_requirements
+        rows, derived = table1_requirements()
+        failed = [r["req"] for r in rows if not r["passes"]]
+        assert not failed, f"requirements failing: {failed}"
+        assert derived["holds"] and derived["passes"] == 10

@@ -1,0 +1,100 @@
+"""Boundary telemetry Z(t) (Eq. 13), compliance (Eq. 5/16), policy/charging."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.asp import default_asp
+from repro.core.clock import VirtualClock
+from repro.core.failures import FailureCause, SessionError
+from repro.core.policy import PolicyControl
+from repro.core.telemetry import BoundaryTelemetry, RequestRecord
+
+
+def fill(tele, latencies, *, ttfb=None, completed=None, tokens=10):
+    for i, lat in enumerate(latencies):
+        tele.record(RequestRecord(
+            t_submit=float(i), ttfb_ms=ttfb[i] if ttfb else lat / 4,
+            latency_ms=lat,
+            completed=completed[i] if completed else True,
+            tokens=tokens))
+
+
+class TestTelemetry:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.floats(1.0, 1e4), min_size=5, max_size=400))
+    def test_quantiles_match_numpy(self, lats):
+        tele = BoundaryTelemetry()
+        fill(tele, lats)
+        z = tele.snapshot()
+        assert z.q95_ms == pytest.approx(np.quantile(lats, 0.95), rel=1e-6)
+        assert z.q99_ms == pytest.approx(np.quantile(lats, 0.99), rel=1e-6)
+        assert z.rho == 1.0
+        assert z.n == len(lats)
+
+    def test_window_slides(self):
+        tele = BoundaryTelemetry(window=100)
+        fill(tele, [10.0] * 150)
+        assert len(tele) == 100
+
+    def test_compliance_eq5(self):
+        asp = default_asp()     # p99 ≤ 900, T_max = 2000
+        tele = BoundaryTelemetry()
+        fill(tele, [100.0] * 99 + [800.0])
+        rep = tele.compliance(asp)
+        assert rep.p99_ok and rep.in_compliance
+        fill(tele, [1500.0] * 30)    # push the tail over ℓ99
+        rep = tele.compliance(asp)
+        assert not rep.p99_ok and not rep.in_compliance
+
+    def test_violation_rate_eq16(self):
+        """Violation ⟺ (L > ℓ99) ∨ (L > T_max) — per request."""
+        asp = default_asp()
+        tele = BoundaryTelemetry()
+        fill(tele, [100.0, 950.0, 2500.0, 100.0],
+             completed=[True, True, False, True])
+        # 950 > ℓ99=900 violates; 2500 violates (both bounds); 2 of 4
+        assert tele.violation_rate(asp) == pytest.approx(0.5)
+
+    def test_incomplete_requests_hit_rho(self):
+        asp = default_asp()
+        tele = BoundaryTelemetry()
+        fill(tele, [100.0] * 10, completed=[True] * 5 + [False] * 5)
+        rep = tele.compliance(asp)
+        assert rep.z.rho == pytest.approx(0.5)
+        assert not rep.rho_ok
+
+
+class TestPolicy:
+    def test_consent_lifecycle(self):
+        p = PolicyControl(VirtualClock())
+        ref = p.grant_consent("alice", ("eu",))
+        assert p.consent_valid(ref)
+        p.check_region(ref, "eu")
+        with pytest.raises(SessionError) as ei:
+            p.check_region(ref, "us")
+        assert ei.value.cause is FailureCause.SOVEREIGNTY_VIOLATION
+        p.revoke(ref)
+        assert not p.consent_valid(ref)
+        with pytest.raises(SessionError) as ei:
+            p.check_region(ref, "eu")
+        assert ei.value.cause is FailureCause.CONSENT_VIOLATION
+
+    def test_charging_attribution(self):
+        p = PolicyControl(VirtualClock())
+        ref = p.open_charging("ais-42")
+        p.meter(ref, tokens=1000, chip_s=1.0, unit_price=0.5)
+        p.meter(ref, tokens=500, chip_s=0.4, unit_price=0.5)
+        rec = p.charging(ref)
+        assert rec.session_id == "ais-42"
+        assert rec.tokens == 1500
+        assert rec.cost == pytest.approx(0.75)
+        assert len(rec.events) == 2
+
+    def test_cost_envelope(self):
+        p = PolicyControl(VirtualClock())
+        asp = default_asp()
+        p.admit_cost(asp, asp.max_cost_per_1k_tokens * 0.5)
+        with pytest.raises(SessionError) as ei:
+            p.admit_cost(asp, asp.max_cost_per_1k_tokens * 2.0)
+        assert ei.value.cause is FailureCause.POLICY_DENIAL

@@ -1,0 +1,115 @@
+"""PREPARE/COMMIT atomicity: no partial allocation is ever observable."""
+
+import pytest
+
+from repro.core.catalog import default_catalog
+from repro.core.clock import VirtualClock
+from repro.core.failures import FailureCause, SessionError, Timers
+from repro.core.qos import BEST_EFFORT, PREMIUM, QoSFlowManager
+from repro.core.sites import default_sites
+from repro.core.twophase import TwoPhaseCoordinator
+
+
+@pytest.fixture()
+def world():
+    clock = VirtualClock()
+    catalog = default_catalog()
+    sites = default_sites(clock, tuple(catalog._entries.keys()))
+    return clock, catalog, sites
+
+
+def coordinator(clock, sites, *, premium_flows=32, timers=None):
+    qos = QoSFlowManager(clock, premium_flows_per_path=premium_flows)
+    return TwoPhaseCoordinator(clock, sites, qos,
+                               timers or Timers()), qos
+
+
+class TestAtomicity:
+    def test_qos_failure_rolls_back_compute(self, world):
+        clock, catalog, sites = world
+        coord, qos = coordinator(clock, sites, premium_flows=0)
+        model = catalog.get("edge-tiny")
+        site = sites["edge-a"]
+        before = site.slots_in_use()
+        with pytest.raises(SessionError) as ei:
+            coord.prepare(model, "edge-a", "zone-a", PREMIUM, slots=1,
+                          cache_bytes=1e6)
+        assert ei.value.cause is FailureCause.QOS_SCARCITY
+        assert site.slots_in_use() == before, "compute lease leaked"
+
+    def test_compute_failure_leaves_qos_untouched(self, world):
+        clock, catalog, sites = world
+        coord, qos = coordinator(clock, sites)
+        model = catalog.get("edge-tiny")
+        with pytest.raises(SessionError) as ei:
+            coord.prepare(model, "edge-a", "zone-a", PREMIUM,
+                          slots=10 ** 6, cache_bytes=1e6)
+        assert ei.value.cause is FailureCause.COMPUTE_SCARCITY
+        assert qos.in_use(("zone-a", "edge-a"), "premium") == 0
+
+    def test_commit_confirms_both(self, world):
+        clock, catalog, sites = world
+        coord, qos = coordinator(clock, sites)
+        model = catalog.get("edge-tiny")
+        prep = coord.prepare(model, "edge-a", "zone-a", PREMIUM, slots=1,
+                             cache_bytes=1e6)
+        binding = coord.commit(prep, model)
+        assert sites["edge-a"].lease_valid(binding.compute_lease_id)
+        assert qos.lease_valid(binding.qos_lease_id)
+        assert binding.qfi == prep.qfi
+
+    def test_commit_after_provisional_expiry_rolls_back_both(self, world):
+        clock, catalog, sites = world
+        timers = Timers(tau_prep=0.1, tau_com=0.2, lease_s=30)
+        coord, qos = coordinator(clock, sites, timers=timers)
+        model = catalog.get("edge-tiny")
+        prep = coord.prepare(model, "edge-a", "zone-a", PREMIUM, slots=1,
+                             cache_bytes=1e6)
+        clock.advance(1.0)   # past τ_com AND provisional TTLs
+        with pytest.raises(SessionError) as ei:
+            coord.commit(prep, model)
+        assert ei.value.cause is FailureCause.DEADLINE_EXPIRY
+        assert sites["edge-a"].slots_in_use() == 0
+        assert qos.in_use(("zone-a", "edge-a"), "premium") == 0
+
+    def test_abort_idempotent(self, world):
+        clock, catalog, sites = world
+        coord, qos = coordinator(clock, sites)
+        model = catalog.get("edge-tiny")
+        prep = coord.prepare(model, "edge-a", "zone-a", BEST_EFFORT, slots=1,
+                             cache_bytes=1e6)
+        coord.abort(prep)
+        coord.abort(prep)      # second abort is a no-op
+        assert sites["edge-a"].slots_in_use() == 0
+
+    def test_model_not_resident_is_distinct_cause(self, world):
+        clock, catalog, sites = world
+        coord, _ = coordinator(clock, sites)
+        model = catalog.get("edge-tiny")
+        # strip hosting from edge-a
+        spec = sites["edge-a"].spec
+        sites["edge-a"].spec = type(spec)(**{**spec.__dict__,
+                                             "hosted_models": ()})
+        with pytest.raises(SessionError) as ei:
+            coord.prepare(model, "edge-a", "zone-a", PREMIUM, slots=1,
+                          cache_bytes=1e6)
+        assert ei.value.cause is FailureCause.MODEL_UNAVAILABLE
+
+    def test_capacity_exhaustion_exact(self, world):
+        """Fill the site to capacity; the N+1-th PREPARE fails cleanly and
+        earlier leases stay valid (no partial state anywhere)."""
+        clock, catalog, sites = world
+        coord, qos = coordinator(clock, sites, premium_flows=1000)
+        model = catalog.get("edge-tiny")
+        cap = sites["edge-a"].spec.decode_slots
+        preps = [coord.prepare(model, "edge-a", "zone-a", BEST_EFFORT,
+                               slots=1, cache_bytes=1.0)
+                 for _ in range(cap)]
+        with pytest.raises(SessionError) as ei:
+            coord.prepare(model, "edge-a", "zone-a", BEST_EFFORT, slots=1,
+                          cache_bytes=1.0)
+        assert ei.value.cause is FailureCause.COMPUTE_SCARCITY
+        assert sites["edge-a"].slots_in_use() == cap
+        for p in preps:
+            coord.abort(p)
+        assert sites["edge-a"].slots_in_use() == 0
