@@ -1,0 +1,123 @@
+"""ServingPlane throughput benchmark — tracks the serving-plane trajectory.
+
+Drives an open-loop Poisson workload through ONE plane (QoSScheduler +
+SimulatedEngine under VirtualClock) and reports
+
+* ``requests_per_s_wall``  — plane-machinery throughput: how many requests
+  the scheduler/plane event loop itself can process per WALL second (the
+  control-plane overhead budget per request), and
+* ``p99_admission_wait_ms`` — virtual-time p99 admission wait per class at
+  the offered load (the tail the QoS contract is about).
+
+    PYTHONPATH=src python -m benchmarks.plane_bench [--requests 50000]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import numpy as np  # noqa: E402
+
+from repro.core.clock import VirtualClock  # noqa: E402
+from repro.serving.plane import ServingPlane, SimulatedEngine  # noqa: E402
+
+
+def bench_plane(n_requests: int = 50_000, *, slots: int = 256,
+                rho: float = 0.85, service_ms: float = 40.0,
+                mix=(("premium", 0.2), ("assured", 0.3),
+                     ("best-effort", 0.5)),
+                t_max_ms: float = 5_000.0, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    clock = VirtualClock()
+    svc = service_ms * np.exp(0.35 * rng.standard_normal(n_requests))
+    idx = {"i": 0}
+
+    def sampler(req):
+        i = idx["i"]
+        idx["i"] += 1
+        return 0.0, float(svc[i % n_requests])
+
+    plane = ServingPlane(
+        clock, SimulatedEngine(clock, service_sampler=sampler,
+                               default_service_ms=service_ms),
+        slots=slots, premium_reserved_frac=0.25, site_id="bench")
+    names = [k for k, _ in mix]
+    probs = np.array([w for _, w in mix], float)
+    probs /= probs.sum()
+    classes = rng.choice(len(names), size=n_requests, p=probs)
+    lam_per_ms = rho * slots / float(svc.mean())
+    arrivals_s = np.cumsum(
+        rng.exponential(1.0 / lam_per_ms, size=n_requests)) / 1e3
+
+    t0 = time.perf_counter()
+    for i, t in enumerate(arrivals_s):
+        plane.run_until(float(t))
+        plane.submit(session_id=f"s{i}", klass=names[classes[i]],
+                     prompt_tokens=128, gen_tokens=16, t_max_ms=t_max_ms)
+    plane.drain()
+    wall_s = time.perf_counter() - t0
+
+    stats = plane.scheduler.stats
+    results = plane.pop_results()
+    ok = [r for r in results if r.failed is None]
+    waits = np.array([r.queue_wait_ms for r in ok]) if ok else np.zeros(1)
+    return {
+        "n_requests": n_requests,
+        "slots": slots,
+        "rho": rho,
+        "wall_s": round(wall_s, 3),
+        "requests_per_s_wall": round(n_requests / wall_s, 1),
+        "p99_admission_wait_ms": round(float(np.quantile(waits, 0.99)), 2),
+        "p99_wait_by_class_ms": {
+            k: round(stats.p_wait_ms(k, 0.99), 2) for k in names},
+        "admitted": stats.admitted,
+        "completed": stats.completed,
+        "fast_failed": stats.fast_failed,
+    }
+
+
+def figure_rows(n_requests: int = 20_000):
+    """(rows, derived) in the benchmarks/figures.py convention."""
+    rows = []
+    for rho in (0.5, 0.85, 0.95):
+        r = bench_plane(n_requests, rho=rho)
+        rows.append({"rho": rho,
+                     "requests_per_s_wall": r["requests_per_s_wall"],
+                     "p99_admission_wait_ms": r["p99_admission_wait_ms"],
+                     **{f"p99_wait_{k}_ms": v
+                        for k, v in r["p99_wait_by_class_ms"].items()}})
+    hi = rows[-1]
+    derived = {
+        "claim": "plane machinery sustains production request rates; "
+                 "premium tail wait stays bounded under load",
+        "requests_per_s_wall_at_0.95": hi["requests_per_s_wall"],
+        "p99_premium_wait_at_0.95": hi["p99_wait_premium_ms"],
+        "holds": (hi["requests_per_s_wall"] > 1_000
+                  and hi["p99_wait_premium_ms"]
+                  < hi["p99_wait_best-effort_ms"] + 1e-9),
+    }
+    return rows, derived
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=50_000)
+    ap.add_argument("--slots", type=int, default=256)
+    ap.add_argument("--rho", type=float, default=0.85)
+    args = ap.parse_args()
+    r = bench_plane(args.requests, slots=args.slots, rho=args.rho)
+    print(json.dumps(r, indent=1))
+    os.makedirs("artifacts/bench", exist_ok=True)
+    with open("artifacts/bench/plane_throughput.json", "w") as f:
+        json.dump(r, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

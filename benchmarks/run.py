@@ -40,6 +40,7 @@ def main() -> None:
     n_req = 4000 if args.fast else 20_000
     n_sess = 15 if args.fast else 40
 
+    from benchmarks import plane_bench  # noqa: E402
     benches = [
         ("fig2_p99_vs_load",
          lambda: figures.fig2_p99_vs_load(n_requests=n_req)),
@@ -48,6 +49,8 @@ def main() -> None:
         ("fig4_interruption_vs_speed",
          lambda: figures.fig4_interruption_vs_speed(n_sessions=n_sess)),
         ("table1_requirements", figures.table1_requirements),
+        ("plane_throughput",
+         lambda: plane_bench.figure_rows(n_requests=n_req)),
     ]
 
     os.makedirs("artifacts/bench", exist_ok=True)

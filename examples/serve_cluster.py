@@ -4,9 +4,10 @@
 
 Runs the edge-tiny LM on actual engines at every execution site (continuous
 batching with per-slot positions), establishes AI Sessions for a mix of
-premium/best-effort invokers, pushes batched requests through the QoS
-scheduler, and prints per-class boundary telemetry — the end-to-end driver
-for the paper's serving scenario.
+premium/best-effort invokers, pushes batched requests through the per-site
+QoS-scheduled ServingPlanes (class-ordered admission, premium reservation,
+deadline fast-fail), and prints per-class boundary telemetry — the
+end-to-end driver for the paper's serving scenario.
 """
 
 import argparse
@@ -23,7 +24,6 @@ from repro.core import Orchestrator, default_asp
 from repro.core.asp import QualityTier
 from repro.core.clock import Clock
 from repro.serving.server import AIaaSServer
-from repro.serving.scheduler import QoSScheduler, Request
 
 
 def cpu_scaled_asp(tier):
@@ -46,7 +46,6 @@ def main():
     clock = Clock()
     orch = Orchestrator(clock=clock)
     server = AIaaSServer(orch, "edge-tiny", slots=args.slots, max_len=192)
-    sched = QoSScheduler(clock, slots=args.slots)
     rng = np.random.default_rng(0)
 
     # establish sessions: premium tier and basic tier invokers
@@ -59,38 +58,27 @@ def main():
         print(f"established {s.session_id} tier={tier.name} "
               f"anchor={s.binding.site_id} qfi={s.binding.qfi}")
 
-    # submit a burst of requests through the QoS scheduler
+    # submit a burst of requests through the per-site serving planes —
+    # the planes decide admission order (premium first, reserved share)
     sids = list(sessions)
     for r in range(args.requests):
         sid = sids[r % len(sids)]
-        tier = sessions[sid].asp.tier
-        sched.submit(Request(
-            request_id=f"req-{r}", session_id=sid,
-            klass="premium" if tier >= 2 else "best-effort",
-            prompt_tokens=int(rng.integers(8, 48)), gen_tokens=8,
-            t_max_ms=sessions[sid].asp.objectives.t_max_ms))
+        server.submit(sessions[sid],
+                      prompt_tokens=int(rng.integers(8, 48)), gen_tokens=8)
 
     t0 = time.perf_counter()
-    done = 0
-    while done < args.requests:
-        batch = sched.next_batch(predicted_service_ms=50.0)
-        if not batch and sched.queue_depth() == 0:
-            break
-        for req in batch:
-            s = sessions[req.session_id]
-            prompt = rng.integers(
-                0, 2048, size=req.prompt_tokens).astype(np.int32)
-            out = server.request(s, prompt, gen_tokens=req.gen_tokens)
-            sched.complete(req.request_id)
-            done += 1
+    results = server.drain()
+    done = sum(1 for res in results.values() if res.failed is None)
     wall = time.perf_counter() - t0
 
     print(f"\nserved {done} requests in {wall:.2f}s "
           f"({done / wall:.1f} req/s on 1 CPU core)")
-    for klass, waits in sched.stats.per_class_wait_ms.items():
-        if waits:
-            print(f"  {klass:12s} admitted={len(waits):3d} "
-                  f"mean wait={np.mean(waits):7.2f}ms")
+    for plane in server.planes.values():
+        for klass, waits in plane.scheduler.stats.per_class_wait_ms.items():
+            if waits:
+                print(f"  {plane.site_id}/{klass:12s} "
+                      f"admitted={len(waits):3d} "
+                      f"mean wait={np.mean(waits):7.2f}ms")
     for sid, s in sessions.items():
         rep = orch.compliance(s)
         if rep:

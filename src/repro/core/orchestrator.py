@@ -40,6 +40,8 @@ class ServeResult:
     ttfb_ms: float
     latency_ms: float
     completed: bool
+    queue_wait_ms: float = 0.0
+    failed: Optional[FailureCause] = None
 
 
 class Orchestrator:
@@ -107,14 +109,77 @@ class Orchestrator:
             raise
 
     # ------------------------------------------------------------------
+    # serving plane plumbing
+    # ------------------------------------------------------------------
+    def plane_for(self, site) -> "ServingPlane":
+        """The QoS-scheduled serving plane of one site. Real-engine planes
+        are attached by AIaaSServer / launch.serve; absent those, a
+        predictor-backed SimulatedEngine plane is created lazily so the
+        control plane ALWAYS serves through the same scheduled path."""
+        if site.plane is None:
+            from repro.serving.plane import ServingPlane, SimulatedEngine
+            site.attach_plane(ServingPlane(
+                self.clock, SimulatedEngine(self.clock),
+                slots=site.spec.decode_slots,
+                site_id=site.spec.site_id))
+        return site.plane
+
+    def qos_class(self, session: AISession):
+        """TransportClass of the session's committed QoS flow — derived from
+        the binding's QFI lease, not re-guessed from the tier."""
+        from repro.core.qos import PREMIUM, BEST_EFFORT
+        lease = self.qos.get(session.binding.qos_lease_id)
+        if lease is not None:
+            return lease.klass
+        return PREMIUM if session.asp.tier >= 2 else BEST_EFFORT
+
+    def record_results(self, site) -> list:
+        """Drain the site plane's completed requests into boundary telemetry
+        and charging — exactly once per request, for every session; returns
+        the drained PlaneResults. This is the ONLY recorder: AIaaSServer
+        and heartbeat both delegate here, so a request is billed identically
+        whichever path pops it first."""
+        plane = site.plane
+        if plane is None:
+            return []
+        popped = plane.pop_results()
+        for res in popped:
+            session = self.sessions.get(res.session_id)
+            if session is None:
+                continue
+            tele = self.telemetry.get(res.session_id)
+            if tele is not None:
+                tele.record(RequestRecord(
+                    t_submit=self.clock.now() - res.latency_ms / 1e3,
+                    ttfb_ms=res.ttfb_ms, latency_ms=res.latency_ms,
+                    completed=res.completed, tokens=res.tokens,
+                    queue_ms=res.queue_wait_ms))
+            if session.charging_ref is not None and res.tokens:
+                b = session.binding
+                price = self.catalog.get(
+                    b.model_id, b.model_version).price_per_1k_tokens \
+                    if b else 0.0
+                # chip time = slot occupancy only; queue wait is not billed
+                service_s = max(res.latency_ms - res.queue_wait_ms, 0.0) / 1e3
+                self.policy.meter(
+                    session.charging_ref, tokens=res.tokens,
+                    chip_s=service_s * site.spec.chips
+                    / max(site.spec.decode_slots, 1),
+                    unit_price=price)
+        return popped
+
+    # ------------------------------------------------------------------
     def serve(self, session: AISession, *, prompt_tokens: int = 512,
               gen_tokens: int = 64) -> ServeResult:
-        """One request on the session's committed binding.
+        """One request through the anchor site's ServingPlane.
 
-        With a real engine attached to the anchor site this runs actual
-        prefill/decode (examples/); otherwise service time comes from the
-        predictors (control-plane tests). Either way the boundary telemetry
-        and metering are identical — that's the falsifiability point.
+        The QoS class comes from the binding's QFI; admission is
+        class-ordered with premium reservation and deadline fast-fail. With
+        a real engine behind the plane this runs actual prefill/decode
+        rounds (examples/); otherwise the SimulatedEngine backend uses
+        predictor service times (control-plane tests). Either way the
+        boundary telemetry and metering are identical — that's the
+        falsifiability point.
         """
         if not session.serve_allowed():
             if not session.v_sigma():
@@ -125,30 +190,29 @@ class Orchestrator:
         b = session.binding
         site = self.sites[b.site_id]
         model = self.catalog.get(b.model_id, b.model_version)
-        t_start = self.clock.now()
-        if site.engine is not None:
-            out = site.engine.serve(session.session_id, prompt_tokens,
-                                    gen_tokens)
-            ttfb_ms, total_ms = out["ttfb_ms"], out["latency_ms"]
-        else:
-            from repro.core.qos import PREMIUM, BEST_EFFORT
-            klass = PREMIUM if session.asp.tier >= 2 else BEST_EFFORT
+        plane = self.plane_for(site)
+        klass = self.qos_class(session)
+
+        hint_ttfb = hint_total = None
+        from repro.serving.plane import SimulatedEngine
+        if isinstance(plane.backend, SimulatedEngine) and \
+                plane.backend.service_sampler is None:
             pred = self.predictors.predict(session.asp, model, site,
                                            session.zone, klass,
                                            prompt_tokens=prompt_tokens,
                                            gen_tokens=gen_tokens)
-            ttfb_ms = pred.t_ff_ms
-            total_ms = pred.t_ff_ms + gen_tokens * pred.decode_ms_per_token
-            self.clock.sleep(total_ms / 1e3)
-        completed = total_ms <= session.asp.objectives.t_max_ms
-        self.telemetry[session.session_id].record(RequestRecord(
-            t_submit=t_start, ttfb_ms=ttfb_ms, latency_ms=total_ms,
-            completed=completed, tokens=gen_tokens))
-        self.policy.meter(session.charging_ref, tokens=gen_tokens,
-                          chip_s=total_ms / 1e3 * site.spec.chips
-                          / max(site.spec.decode_slots, 1),
-                          unit_price=model.price_per_1k_tokens)
-        return ServeResult(gen_tokens, ttfb_ms, total_ms, completed)
+            hint_ttfb = pred.t_ff_ms
+            hint_total = pred.t_ff_ms + gen_tokens * pred.decode_ms_per_token
+
+        res = plane.serve(
+            session_id=session.session_id, klass=klass.name,
+            prompt_tokens=prompt_tokens, gen_tokens=gen_tokens,
+            t_max_ms=session.asp.objectives.t_max_ms,
+            hint_ttfb_ms=hint_ttfb, hint_total_ms=hint_total)
+        self.record_results(site)
+        return ServeResult(res.tokens, res.ttfb_ms, res.latency_ms,
+                           res.completed, queue_wait_ms=res.queue_wait_ms,
+                           failed=res.failed)
 
     # ------------------------------------------------------------------
     def heartbeat(self, session: AISession,
@@ -160,9 +224,18 @@ class Orchestrator:
             return None
         session.renew(self.timers.lease_s)
         site = self.sites[session.binding.site_id]
+        # live congestion from the site's serving plane (NWDAF loop): queue
+        # depth per slot and arrival rate are MEASURED, not assumed — this is
+        # what makes paging (Eq. 9) and migration triggers (Eq. 14) react to
+        # real load instead of static zeros.
+        plane = site.plane
+        load = plane.load() if plane is not None else None
         self.analytics.observe_site(
             site.spec.site_id, utilization=site.utilization(),
-            queue_depth=0.0, arrival_rate=0.0)
+            queue_depth=load.queue_depth if load else 0.0,
+            arrival_rate=load.arrival_rate if load else 0.0)
+        if plane is not None:
+            self.record_results(site)   # pick up async completions
         tele = self.telemetry.get(session.session_id)
         if tele and len(tele) >= 8:
             z = tele.snapshot()

@@ -74,7 +74,12 @@ class Predictors:
         c = max(site.spec.decode_slots, 1)
         # Sakasegawa approximation: Wq ≈ (ρ^(√(2(c+1)))/ (c(1-ρ))) · service
         wq = (rho ** math.sqrt(2 * (c + 1))) / (c * (1 - rho)) * service_ms
-        return wq * c  # scale back to per-request units
+        wq *= c  # scale back to per-request units
+        # measured backlog (serving-plane queue depth, per slot): each queued
+        # request ahead contributes ~one service time per slot — this is the
+        # term that makes Eq. (14) triggers fire under real congestion
+        wq += ctx.queue_depth * service_ms
+        return wq
 
     # -- headline predictions ------------------------------------------------
     def predict(self, asp: ASP, model: ModelEntry, site, zone: str,

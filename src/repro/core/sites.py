@@ -64,7 +64,8 @@ class ExecutionSite:
         self._ids = itertools.count()
         # smoothed occupancy signals (fed to analytics/NWDAF role)
         self._queue_depth = 0.0
-        self._engine = None  # optional real InferenceEngine (serving plane)
+        self._engine = None  # optional real InferenceEngine (migration plane)
+        self._plane = None   # QoS-scheduled ServingPlane (repro.serving.plane)
 
     # ------------------------------------------------------------------
     # capacity accounting
@@ -150,6 +151,16 @@ class ExecutionSite:
     @property
     def engine(self):
         return self._engine
+
+    def attach_plane(self, plane) -> None:
+        """Every request to this site is served through this plane — the
+        QoS-contract enforcement point (class ordering, premium reservation,
+        deadline fast-fail) and the congestion sensor for analytics."""
+        self._plane = plane
+
+    @property
+    def plane(self):
+        return self._plane
 
 
 def default_sites(clock: Clock, hosted: Tuple[str, ...]) -> Dict[str, ExecutionSite]:

@@ -130,7 +130,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, scale: float = 1.0,
     compiled = lowered.compile()
     compile_s = time.time() - t1
 
-    ca = compiled.cost_analysis() or {}
+    ca = H.normalize_cost_analysis(compiled.cost_analysis())
     ma = compiled.memory_analysis()
     print(ma)
     print({k: ca.get(k) for k in ("flops", "bytes accessed")})

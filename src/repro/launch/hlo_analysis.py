@@ -118,9 +118,26 @@ def collect_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
     return stats
 
 
-def roofline_terms(cost_analysis: dict, collectives: CollectiveStats,
+def normalize_cost_analysis(ca) -> dict:
+    """``compiled.cost_analysis()`` returns a dict on older JAX and a list
+    of per-computation dicts on newer releases; fold either into one flat
+    {metric: value} dict (numeric values summed across computations)."""
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        merged: dict = {}
+        for entry in ca:
+            for k, v in (entry or {}).items():
+                if isinstance(v, (int, float)):
+                    merged[k] = merged.get(k, 0.0) + float(v)
+        return merged
+    return dict(ca)
+
+
+def roofline_terms(cost_analysis, collectives: CollectiveStats,
                    n_devices: int) -> dict:
     """The three roofline terms, in seconds (per step, per device)."""
+    cost_analysis = normalize_cost_analysis(cost_analysis)
     flops_dev = float(cost_analysis.get("flops", 0.0))
     bytes_dev = float(cost_analysis.get("bytes accessed", 0.0))
     compute_s = flops_dev / PEAK_FLOPS

@@ -1,4 +1,5 @@
-"""NE-AIaaS serving launcher: control plane + real engines + QoS scheduler.
+"""NE-AIaaS serving launcher: control plane + real engines behind
+QoS-scheduled serving planes.
 
     PYTHONPATH=src python -m repro.launch.serve --model edge-tiny \
         --sessions 4 --requests 12
@@ -6,22 +7,19 @@
 Production path: on a pod, the engine's prefill/decode jit under
 ``make_production_mesh()`` with the decode plan's shardings (the dry-run
 proves every assigned arch compiles there); on this container it runs the
-small configs for real. Either way the AIS lifecycle, QoS scheduling,
+small configs for real. Either way the AIS lifecycle, QoS-scheduled
+admission (class order + premium reservation + deadline fast-fail),
 telemetry, and charging are identical — that is the paper's point.
 """
 
 from __future__ import annotations
 
 import argparse
-import sys
-
-import numpy as np
 
 from repro.configs import ARCH_IDS
 from repro.core import Orchestrator, default_asp
 from repro.core.asp import QualityTier
 from repro.core.clock import Clock
-from repro.serving.scheduler import QoSScheduler, Request
 from repro.serving.server import AIaaSServer
 
 
@@ -29,10 +27,11 @@ def serve(model: str = "edge-tiny", *, sessions: int = 4, requests: int = 12,
           slots: int = 8, max_len: int = 192, gen_tokens: int = 8,
           t_max_ms: float = 300_000.0, seed: int = 0, quiet: bool = False):
     import dataclasses
+
+    import numpy as np
     clock = Clock()
     orch = Orchestrator(clock=clock)
     server = AIaaSServer(orch, model, slots=slots, max_len=max_len)
-    sched = QoSScheduler(clock, slots=slots)
     rng = np.random.default_rng(seed)
 
     live = {}
@@ -49,25 +48,18 @@ def serve(model: str = "edge-tiny", *, sessions: int = 4, requests: int = 12,
             print(f"AIS {s.session_id} tier={tier.name} "
                   f"anchor={s.binding.site_id} qfi={s.binding.qfi}")
 
+    # submit everything through the anchor sites' serving planes — admission
+    # order (premium first, reserved share, fast-fail) is the planes' job
     sids = list(live)
     for r in range(requests):
-        sid = sids[r % len(sids)]
-        sched.submit(Request(
-            f"req-{r}", sid,
-            "premium" if live[sid].asp.tier >= 2 else "best-effort",
-            int(rng.integers(8, 32)), gen_tokens, t_max_ms))
-
-    served = 0
-    while served < requests and (sched.queue_depth() or sched.running):
-        for req in sched.next_batch(predicted_service_ms=100.0):
-            prompt = rng.integers(0, 2048, size=req.prompt_tokens
-                                  ).astype(np.int32)
-            server.request(live[req.session_id], prompt,
-                           gen_tokens=req.gen_tokens)
-            sched.complete(req.request_id)
-            served += 1
-        if not sched.running and not sched.queue_depth():
-            break
+        s = live[sids[r % len(sids)]]
+        server.submit(s, prompt_tokens=int(rng.integers(8, 32)),
+                      gen_tokens=gen_tokens)
+    results = server.drain()
+    served = sum(1 for res in results.values()
+                 if res.failed is None)
+    fast_failed = sum(p.scheduler.stats.fast_failed
+                      for p in server.planes.values())
 
     reports = {}
     for sid, s in live.items():
@@ -81,7 +73,7 @@ def serve(model: str = "edge-tiny", *, sessions: int = 4, requests: int = 12,
         orch.release(s)
     if not quiet:
         print(f"served {served}/{requests} "
-              f"(fast-failed {sched.stats.fast_failed} on deadline)")
+              f"(fast-failed {fast_failed} on deadline)")
     return served, reports
 
 

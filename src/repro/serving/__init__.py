@@ -1,2 +1,4 @@
 from repro.serving.engine import InferenceEngine  # noqa: F401
-from repro.serving.scheduler import QoSScheduler, Request  # noqa: F401
+from repro.serving.scheduler import QoSScheduler, Request, SchedulerStats  # noqa: F401
+from repro.serving.plane import (ServingPlane, PlaneResult, PlaneLoad,  # noqa: F401
+                                 RealEngineBackend, SimulatedEngine)

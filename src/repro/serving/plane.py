@@ -1,0 +1,443 @@
+"""Per-site ServingPlane: the single path every request takes to an anchor.
+
+The paper's AIS contract binds transport QoS to execution placement with
+enforceable tail-latency semantics; this module is where the enforcement
+actually happens. One plane per execution site owns
+
+* a :class:`QoSScheduler` — class-ordered slot admission (premium slot
+  reservation, deadline fast-fail with served-and-failed accounting), and
+* a backend behind a common interface:
+    - :class:`RealEngineBackend` — the continuous-batching
+      :class:`~repro.serving.engine.InferenceEngine` (decode rounds across
+      sessions, not per-request loops), or
+    - :class:`SimulatedEngine` — service times drawn from a sampler
+      (predictor output or the §V ``LatencyModel``) under a
+      :class:`~repro.core.clock.VirtualClock`, which is what lets the
+      control-plane tests and the Monte-Carlo scenarios exercise the *same*
+      queueing machinery the real engine runs behind.
+
+Request lifecycle (event-driven)::
+
+    submit ──► class queue ──► slot admission ──► decode rounds ──► complete
+                  │   (premium reservation,          (real engine) │
+                  │    deadline fast-fail)    or completion event  │
+                  └────────── rejected (loss-system planes) ───────┘
+
+The plane is also the congestion sensor for the NWDAF-style analytics loop:
+``load()`` exposes measured queue depth per slot and the arrival rate, which
+``Orchestrator.heartbeat`` feeds into ``Analytics.observe_site`` so paging
+(Eq. 9) and migration triggers (Eq. 14) react to real load.
+"""
+
+from __future__ import annotations
+
+import collections
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.core.clock import Clock, VirtualClock
+from repro.core.failures import FailureCause
+from repro.serving.scheduler import QoSScheduler, Request
+
+
+@dataclass
+class PlaneResult:
+    """Boundary-observable outcome of one request through the plane."""
+    request_id: str
+    session_id: str
+    klass: str
+    ttfb_ms: float
+    latency_ms: float            # submit → completion (includes queue wait)
+    queue_wait_ms: float
+    tokens: int
+    completed: bool              # finished within the request's T_max
+    failed: Optional[FailureCause] = None
+    token_ids: Optional[List[int]] = None   # real-engine backends only
+
+
+@dataclass
+class PlaneLoad:
+    """Congestion snapshot ξ-side: what analytics ingests per heartbeat."""
+    queue_depth: float           # waiting requests per slot
+    arrival_rate: float          # submits / s over the recent window
+    running: int
+    slots: int
+    utilization: float
+
+
+@dataclass
+class Admission:
+    """Backend's answer to 'start serving this request now'."""
+    ttfb_ms: float
+    finish_at: Optional[float]   # absolute clock time (simulated backends)
+    first_token: Optional[int] = None
+
+
+class RealEngineBackend:
+    """Continuous-batching decode rounds on a real ``InferenceEngine``.
+
+    Requests from different sessions share decode rounds; a request finishes
+    when its token budget is generated. Service-time prediction for deadline
+    fast-fail comes from a measured per-token EWMA (no static assumption).
+    Sessions are exclusive: the engine keys slots by session id, so at most
+    one request per session is in flight (the plane defers the rest).
+    """
+
+    exclusive_sessions = True
+
+    def __init__(self, engine, clock: Clock, *, seed: int = 0):
+        self.engine = engine
+        self.clock = clock
+        self._ms_per_token: float = 0.0       # measured EWMA
+        self._seed = seed
+
+    # -- plane interface -------------------------------------------------
+    def predicted_service_ms(self, req: Request) -> float:
+        if req.hint_total_ms is not None:
+            return req.hint_total_ms
+        return self._ms_per_token * req.gen_tokens
+
+    def ensure_capacity(self, active_sessions) -> None:
+        """Reclaim engine slots the plane does not own — e.g. state imported
+        by make-before-break migration whose session is now submitting fresh
+        requests. The old generation state is superseded by the new request
+        (same policy as the pre-plane per-request serve loop), so orphan
+        slots are released rather than blocking admission forever."""
+        if self.engine.free_slots() > 0:
+            return
+        for sid in list(self.engine._slot_map):
+            if sid not in active_sessions:
+                self.engine.release_slot(sid)
+                return
+
+    def admit(self, req: Request, now: float) -> Admission:
+        import numpy as np
+        if req.session_id in self.engine._slot_map:
+            # stale slot from a migrated/abandoned generation: superseded
+            self.engine.release_slot(req.session_id)
+        prompt = req.prompt
+        if prompt is None:
+            rng = np.random.default_rng(
+                (hash(req.session_id) ^ hash(req.request_id) ^ self._seed)
+                % 2**31)
+            prompt = rng.integers(
+                0, self.engine.cfg.vocab_size,
+                size=max(req.prompt_tokens, 1)).astype(np.int32)
+        out = self.engine.prefill_session(req.session_id, prompt)
+        return Admission(ttfb_ms=out["ttfb_ms"], finish_at=None,
+                         first_token=out["first_token"])
+
+    def decode_round(self) -> Dict[str, int]:
+        t0 = self.clock.now()
+        out = self.engine.decode_round()
+        dt_ms = (self.clock.now() - t0) * 1e3
+        if out:
+            per_tok = dt_ms / max(len(out), 1)
+            self._ms_per_token = per_tok if self._ms_per_token == 0.0 \
+                else 0.8 * self._ms_per_token + 0.2 * per_tok
+        return out
+
+    def release(self, session_id: str) -> None:
+        self.engine.release_slot(session_id)
+
+
+class SimulatedEngine:
+    """Predictor/sampler-backed backend driven by (virtual) clock events.
+
+    ``service_sampler(req) -> (ttfb_ms, total_ms)`` supplies each request's
+    service time; per-request hints on the ``Request`` override it (the
+    orchestrator passes predictor output, the §V scenarios pass
+    ``LatencyModel`` draws). A request occupies its decode slot from
+    admission until ``finish_at`` — queueing, class ordering, and premium
+    reservation all come from the shared ``QoSScheduler``, not from any
+    closed-form queue model.
+    """
+
+    exclusive_sessions = False   # no per-session engine state to collide with
+
+    def __init__(self, clock: Clock, *,
+                 service_sampler: Optional[
+                     Callable[[Request], Tuple[float, float]]] = None,
+                 default_service_ms: float = 50.0):
+        self.clock = clock
+        self.service_sampler = service_sampler
+        self.default_service_ms = default_service_ms
+
+    # -- plane interface -------------------------------------------------
+    def predicted_service_ms(self, req: Request) -> float:
+        if req.hint_total_ms is not None:
+            return req.hint_total_ms
+        return self.default_service_ms
+
+    def ensure_capacity(self, active_sessions) -> None:
+        pass
+
+    def admit(self, req: Request, now: float) -> Admission:
+        if req.hint_total_ms is not None:
+            ttfb = req.hint_ttfb_ms if req.hint_ttfb_ms is not None else 0.0
+            total = req.hint_total_ms
+        elif self.service_sampler is not None:
+            ttfb, total = self.service_sampler(req)
+        else:
+            ttfb, total = 0.0, self.default_service_ms
+        return Admission(ttfb_ms=ttfb, finish_at=now + total / 1e3)
+
+    def decode_round(self) -> Dict[str, int]:
+        return {}
+
+    def release(self, session_id: str) -> None:
+        pass
+
+
+class ServingPlane:
+    """QoS-scheduled serving plane of ONE execution site."""
+
+    def __init__(self, clock: Clock, backend, *, slots: int,
+                 premium_reserved_frac: float = 0.25,
+                 max_queue: Optional[int] = None,
+                 site_id: str = "",
+                 arrival_window: int = 128):
+        self.clock = clock
+        self.backend = backend
+        self.site_id = site_id
+        self.scheduler = QoSScheduler(
+            clock, slots=slots, premium_reserved_frac=premium_reserved_frac)
+        #: None = unbounded queue; N = loss system once running+queued
+        #: exceeds slots+N (admission control for the §V scenarios)
+        self.max_queue = max_queue
+        self._events: List[Tuple[float, int, Request]] = []   # finish heap
+        self._seq = itertools.count()
+        self._tokens: Dict[str, int] = {}          # request_id -> generated
+        self._tok_ids: Dict[str, List[int]] = {}   # real backends: token ids
+        self._active_sessions: set = set()         # sessions with a running req
+        self._by_request: Dict[str, Request] = {}
+        self._done: Dict[str, PlaneResult] = {}
+        self._outbox: List[PlaneResult] = []
+        self._arrivals: Deque[float] = collections.deque(maxlen=arrival_window)
+        self._req_ids = itertools.count()
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+    def submit(self, *, session_id: str, klass: str, prompt_tokens: int,
+               gen_tokens: int, t_max_ms: float,
+               request_id: Optional[str] = None,
+               hint_ttfb_ms: Optional[float] = None,
+               hint_total_ms: Optional[float] = None,
+               prompt=None) -> Optional[Request]:
+        """Enqueue one request; returns None when admission control rejects
+        it (bounded-queue planes), after accounting the rejection."""
+        now = self.clock.now()
+        self._arrivals.append(now)
+        if self.max_queue is not None and \
+                (len(self.scheduler.running) + self.scheduler.queue_depth()
+                 >= self.scheduler.slots + self.max_queue):
+            self.scheduler.stats.rejected += 1
+            return None
+        req = Request(
+            request_id=request_id or f"{self.site_id}/req-{next(self._req_ids)}",
+            session_id=session_id, klass=klass,
+            prompt_tokens=prompt_tokens, gen_tokens=gen_tokens,
+            t_max_ms=t_max_ms, hint_ttfb_ms=hint_ttfb_ms,
+            hint_total_ms=hint_total_ms, prompt=prompt)
+        self._by_request[req.request_id] = req
+        self.scheduler.submit(req)
+        self._admit()
+        return req
+
+    # ------------------------------------------------------------------
+    # internal machinery
+    # ------------------------------------------------------------------
+    def _skip(self, req: Request) -> bool:
+        """Engine backends key slots by session: a session with a plane
+        request already in flight must wait for it (per-slot cache
+        positions). Slots held OUTSIDE the plane (e.g. migrated-in state)
+        do not block — the backend reclaims them at admission."""
+        return self.backend.exclusive_sessions and \
+            req.session_id in self._active_sessions
+
+    def _fast_fail(self, req: Request) -> None:
+        self._finish(req, ttfb_ms=0.0, completed=False,
+                     failed=FailureCause.DEADLINE_EXPIRY)
+
+    def _admit(self) -> None:
+        batch = self.scheduler.next_batch(
+            predicted_service_ms=self.backend.predicted_service_ms,
+            skip=self._skip, on_fast_fail=self._fast_fail)
+        for req in batch:
+            self.backend.ensure_capacity(self._active_sessions)
+            adm = self.backend.admit(req, self.clock.now())
+            self._active_sessions.add(req.session_id)
+            req.hint_ttfb_ms = adm.ttfb_ms            # measured/known TTFB
+            if adm.finish_at is not None:
+                # event-driven backend: the whole generation completes at
+                # finish_at, so the token budget is accounted up front
+                self._tokens[req.request_id] = req.gen_tokens
+                heapq.heappush(self._events,
+                               (adm.finish_at, next(self._seq), req))
+            else:
+                self._tokens[req.request_id] = 1      # prefill's first token
+                if adm.first_token is not None:
+                    self._tok_ids[req.request_id] = [adm.first_token]
+
+    def _finish(self, req: Request, *, ttfb_ms: float, completed: bool,
+                failed: Optional[FailureCause] = None) -> None:
+        now = self.clock.now()
+        latency_ms = (now - req.submitted_at) * 1e3
+        started = req.started_at if req.started_at is not None else now
+        wait_ms = (started - req.submitted_at) * 1e3
+        res = PlaneResult(
+            request_id=req.request_id, session_id=req.session_id,
+            klass=req.klass, ttfb_ms=ttfb_ms, latency_ms=latency_ms,
+            queue_wait_ms=wait_ms,
+            tokens=self._tokens.pop(req.request_id, 0),
+            completed=completed and failed is None, failed=failed,
+            token_ids=self._tok_ids.pop(req.request_id, None))
+        self._done[req.request_id] = res
+        self._outbox.append(res)
+        self._by_request.pop(req.request_id, None)
+
+    def _complete(self, req: Request) -> None:
+        self.scheduler.complete(req.request_id)
+        self.backend.release(req.session_id)
+        self._active_sessions.discard(req.session_id)
+        latency_ms = (self.clock.now() - req.submitted_at) * 1e3
+        self._finish(req, ttfb_ms=req.hint_ttfb_ms or 0.0,
+                     completed=latency_ms <= req.t_max_ms)
+        self._admit()               # freed slot: admit from the queue
+
+    def _round(self) -> bool:
+        """One continuous-batching decode round (real backends). Returns
+        False when the round made no progress (nothing active, or a
+        simulated backend whose progress is event-driven)."""
+        if not self.scheduler.running:
+            return False
+        out = self.backend.decode_round()
+        if not out:
+            return False
+        finished = []
+        for req in list(self.scheduler.running.values()):
+            if req.session_id in out:
+                self._tokens[req.request_id] = \
+                    self._tokens.get(req.request_id, 0) + 1
+                if req.request_id in self._tok_ids:
+                    self._tok_ids[req.request_id].append(
+                        out[req.session_id])
+                if self._tokens[req.request_id] >= req.gen_tokens:
+                    finished.append(req)
+        for req in finished:
+            self._complete(req)
+        return True
+
+    # ------------------------------------------------------------------
+    # driving
+    # ------------------------------------------------------------------
+    def run_until(self, t: float) -> None:
+        """Process completion events up to absolute clock time ``t``;
+        advances a virtual clock through each event in order."""
+        while self._events and self._events[0][0] <= t:
+            finish_at, _, req = heapq.heappop(self._events)
+            now = self.clock.now()
+            if finish_at > now:
+                self.clock.sleep(finish_at - now)
+            self._complete(req)
+        now = self.clock.now()
+        if t > now and isinstance(self.clock, VirtualClock):
+            self.clock.advance(t - now)
+        self._admit()
+
+    def drain(self, *, max_rounds: int = 1_000_000) -> None:
+        """Run until every queued/running request has completed."""
+        rounds = 0
+        while self.scheduler.running or self.scheduler.queue_depth():
+            rounds += 1
+            if rounds > max_rounds:
+                raise RuntimeError("serving plane failed to drain")
+            if self._events:
+                finish_at, _, req = heapq.heappop(self._events)
+                now = self.clock.now()
+                if finish_at > now:
+                    self.clock.sleep(finish_at - now)
+                self._complete(req)
+                continue
+            if not self._round():
+                # nothing active and no events: only queued work remains —
+                # admission must be blocked; admit or bail
+                before = self.scheduler.queue_depth()
+                self._admit()
+                if self.scheduler.queue_depth() == before and \
+                        not self.scheduler.running:
+                    break
+
+    def serve(self, *, session_id: str, klass: str, prompt_tokens: int,
+              gen_tokens: int, t_max_ms: float,
+              hint_ttfb_ms: Optional[float] = None,
+              hint_total_ms: Optional[float] = None,
+              prompt=None) -> PlaneResult:
+        """Unary convenience: submit and drive the plane until THIS request
+        completes (other in-flight sessions make progress too — decode
+        rounds are shared)."""
+        req = self.submit(
+            session_id=session_id, klass=klass, prompt_tokens=prompt_tokens,
+            gen_tokens=gen_tokens, t_max_ms=t_max_ms,
+            hint_ttfb_ms=hint_ttfb_ms, hint_total_ms=hint_total_ms,
+            prompt=prompt)
+        if req is None:
+            return PlaneResult(
+                request_id="rejected", session_id=session_id, klass=klass,
+                ttfb_ms=0.0, latency_ms=0.0, queue_wait_ms=0.0, tokens=0,
+                completed=False, failed=FailureCause.COMPUTE_SCARCITY)
+        guard = 0
+        while req.request_id not in self._done:
+            guard += 1
+            if guard > 10_000_000:
+                raise RuntimeError("request failed to complete")
+            if self._events:
+                finish_at, _, r = heapq.heappop(self._events)
+                now = self.clock.now()
+                if finish_at > now:
+                    self.clock.sleep(finish_at - now)
+                self._complete(r)
+            elif not self._round():
+                self._admit()
+                if req.request_id not in self._done and \
+                        req.request_id not in self.scheduler.running and \
+                        not self._events:
+                    # neither running nor done after an admission pass —
+                    # fast-failed, or admission is blocked for good
+                    break
+        res = self._done.get(req.request_id)
+        if res is None:
+            raise RuntimeError(
+                f"request {req.request_id} cannot progress "
+                "(engine slot held outside the plane?)")
+        return res
+
+    # ------------------------------------------------------------------
+    # results + telemetry surface
+    # ------------------------------------------------------------------
+    def pop_results(self) -> List[PlaneResult]:
+        """Drain completed results (the orchestrator records telemetry and
+        metering from these exactly once)."""
+        out, self._outbox = self._outbox, []
+        return out
+
+    def result(self, request_id: str) -> Optional[PlaneResult]:
+        return self._done.get(request_id)
+
+    def load(self) -> PlaneLoad:
+        """Measured congestion ξ for the analytics loop."""
+        slots = max(self.scheduler.slots, 1)
+        rate = 0.0
+        if len(self._arrivals) >= 2:
+            span = self.clock.now() - self._arrivals[0]
+            if span > 0:
+                rate = len(self._arrivals) / span
+        return PlaneLoad(
+            queue_depth=self.scheduler.queue_depth() / slots,
+            arrival_rate=rate,
+            running=len(self.scheduler.running),
+            slots=slots,
+            utilization=len(self.scheduler.running) / slots)

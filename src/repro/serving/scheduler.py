@@ -20,7 +20,7 @@ from __future__ import annotations
 import collections
 import itertools
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Union
 
 from repro.core.clock import Clock
 from repro.core.failures import FailureCause
@@ -40,15 +40,35 @@ class Request:
     started_at: Optional[float] = None
     finished_at: Optional[float] = None
     failed: Optional[FailureCause] = None
+    #: optional service-time hints (per-request predictor output); consumed
+    #: by SimulatedEngine backends and by deadline fast-fail when present
+    hint_ttfb_ms: Optional[float] = None
+    hint_total_ms: Optional[float] = None
+    #: optional caller-supplied prompt tokens (real-engine backends); when
+    #: None the backend synthesizes a deterministic prompt
+    prompt: Optional[object] = None
+
+    def wait_ms(self, now: float) -> float:
+        return (now - self.submitted_at) * 1e3
 
 
 @dataclass
 class SchedulerStats:
+    submitted: int = 0
     admitted: int = 0
     completed: int = 0
     fast_failed: int = 0
+    rejected: int = 0           # plane-level admission denials (loss systems)
     per_class_wait_ms: Dict[str, List[float]] = field(
         default_factory=lambda: collections.defaultdict(list))
+
+    def p_wait_ms(self, klass: str, q: float) -> float:
+        """Order-statistic quantile of admission wait for one class."""
+        waits = sorted(self.per_class_wait_ms.get(klass, ()))
+        if not waits:
+            return 0.0
+        idx = min(len(waits) - 1, int(q * (len(waits) - 1) + 0.5))
+        return waits[idx]
 
 
 class QoSScheduler:
@@ -57,7 +77,7 @@ class QoSScheduler:
         self.clock = clock
         self.slots = slots
         self.premium_reserved = max(1, int(slots * premium_reserved_frac)) \
-            if slots > 1 else 0
+            if slots > 1 and premium_reserved_frac > 0 else 0
         self.queues: Dict[str, Deque[Request]] = {
             k: collections.deque() for k in _CLASS_ORDER}
         self.running: Dict[str, Request] = {}
@@ -67,6 +87,7 @@ class QoSScheduler:
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         req.submitted_at = self.clock.now()
+        self.stats.submitted += 1
         self.queues[req.klass].append(req)
 
     def _slots_usable(self, klass: str) -> int:
@@ -86,18 +107,38 @@ class QoSScheduler:
         return waited_ms + predicted_service_ms > req.t_max_ms
 
     # ------------------------------------------------------------------
-    def next_batch(self, *, predicted_service_ms: float = 0.0) -> List[Request]:
-        """Admit requests to the next decode round in class order."""
+    def next_batch(self, *,
+                   predicted_service_ms: Union[float,
+                                               Callable[[Request], float]]
+                   = 0.0,
+                   skip: Optional[Callable[[Request], bool]] = None,
+                   on_fast_fail: Optional[Callable[[Request], None]] = None
+                   ) -> List[Request]:
+        """Admit requests to the next decode round in class order.
+
+        ``predicted_service_ms`` may be a scalar or a per-request predictor
+        (the serving plane passes the backend's estimate so deadline fast-fail
+        accounts for each request's own work). ``skip`` defers a request
+        without consuming it (e.g. its session already holds an engine slot) —
+        FIFO order within the class is preserved by stopping at the first
+        skipped head. ``on_fast_fail`` lets the plane record DEADLINE_EXPIRY
+        drops as served-and-failed results.
+        """
         admitted: List[Request] = []
         for klass in _CLASS_ORDER:
             q = self.queues[klass]
             while q and self._slots_usable(klass) > 0:
+                if skip is not None and skip(q[0]):
+                    break               # head-of-line blocked; next class
                 req = q.popleft()
-                if predicted_service_ms and \
-                        self._deadline_hopeless(req, predicted_service_ms):
+                svc = predicted_service_ms(req) \
+                    if callable(predicted_service_ms) else predicted_service_ms
+                if svc and self._deadline_hopeless(req, svc):
                     req.failed = FailureCause.DEADLINE_EXPIRY
                     req.finished_at = self.clock.now()
                     self.stats.fast_failed += 1
+                    if on_fast_fail is not None:
+                        on_fast_fail(req)
                     continue
                 req.started_at = self.clock.now()
                 self.running[req.request_id] = req
@@ -115,3 +156,6 @@ class QoSScheduler:
 
     def queue_depth(self) -> int:
         return sum(len(q) for q in self.queues.values())
+
+    def queue_depths(self) -> Dict[str, int]:
+        return {k: len(q) for k, q in self.queues.items()}

@@ -1,15 +1,17 @@
 """NE-AIaaS serving front: binds the control plane (Orchestrator) to real
-engines at the execution sites.
+engines at the execution sites, behind QoS-scheduled serving planes.
 
-``AIaaSServer`` owns per-(site, model) engines, attaches them to the
-ExecutionSite objects so ``Orchestrator.serve`` hits real prefill/decode,
-and implements the engine-level migration data plane used by the
-MigrationController (make-before-break with fingerprint verification).
+``AIaaSServer`` owns per-(site, model) engines, wraps each in a
+:class:`~repro.serving.plane.ServingPlane` attached to the ExecutionSite —
+so ``Orchestrator.serve`` goes through class-ordered slot admission with
+premium reservation and deadline fast-fail — and implements the engine-level
+migration data plane used by the MigrationController (make-before-break with
+fingerprint verification).
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -17,6 +19,9 @@ from repro.core.catalog import Catalog
 from repro.core.orchestrator import Orchestrator
 from repro.core.session import AISession
 from repro.serving.engine import InferenceEngine
+from repro.serving.plane import (RealEngineBackend, ServingPlane,
+                                 PlaneResult)
+from repro.serving.scheduler import Request
 from repro.serving import state_transfer
 
 
@@ -43,12 +48,21 @@ class EngineFleet:
 
 class AIaaSServer:
     def __init__(self, orch: Orchestrator, model_id: str = "edge-tiny",
-                 *, slots: int = 8, max_len: int = 256):
+                 *, slots: int = 8, max_len: int = 256,
+                 premium_reserved_frac: float = 0.25):
         self.orch = orch
         self.fleet = EngineFleet(orch.catalog, model_id, slots=slots,
                                  max_len=max_len)
+        self.planes: Dict[str, ServingPlane] = {}
         for site_id, site in orch.sites.items():
-            site.attach_engine(self.fleet.engine_for(site_id))
+            eng = self.fleet.engine_for(site_id)
+            site.attach_engine(eng)     # migration data plane + direct access
+            plane = ServingPlane(
+                orch.clock, RealEngineBackend(eng, orch.clock),
+                slots=slots, premium_reserved_frac=premium_reserved_frac,
+                site_id=site_id)
+            site.attach_plane(plane)
+            self.planes[site_id] = plane
         # engine-level data plane for make-before-break migration
         orch.migrations.transfer_fn = self._transfer
 
@@ -61,20 +75,43 @@ class AIaaSServer:
         return 0.0
 
     # ------------------------------------------------------------------
+    def submit(self, session: AISession, *, prompt_tokens: int = 16,
+               gen_tokens: int = 16,
+               prompt: Optional[np.ndarray] = None) -> Optional[Request]:
+        """Async path: enqueue on the anchor site's plane (QoS class from
+        the binding's QFI); drive with ``drain()``."""
+        plane = self.planes[session.binding.site_id]
+        klass = self.orch.qos_class(session)
+        return plane.submit(
+            session_id=session.session_id, klass=klass.name,
+            prompt_tokens=len(prompt) if prompt is not None else prompt_tokens,
+            gen_tokens=gen_tokens,
+            t_max_ms=session.asp.objectives.t_max_ms, prompt=prompt)
+
+    def drain(self) -> Dict[str, PlaneResult]:
+        """Run every plane to completion; telemetry + charging recorded by
+        the orchestrator's single recorder (exactly once per request)."""
+        out: Dict[str, PlaneResult] = {}
+        for site_id, plane in self.planes.items():
+            plane.drain()
+            for res in self.orch.record_results(self.orch.sites[site_id]):
+                out[res.request_id] = res
+        return out
+
+    # ------------------------------------------------------------------
     def request(self, session: AISession, prompt: np.ndarray,
                 gen_tokens: int = 16) -> dict:
+        """Unary path kept for compatibility: serve one request through the
+        plane synchronously, on the CALLER's prompt, returning the engine's
+        generated token ids and timings (engine.serve-style)."""
         site = self.orch.sites[session.binding.site_id]
-        eng = self.fleet.engine_for(site.spec.site_id)
-        out = eng.serve(session.session_id, len(prompt), gen_tokens,
-                        prompt=prompt)
-        from repro.core.telemetry import RequestRecord
-        self.orch.telemetry[session.session_id].record(RequestRecord(
-            t_submit=self.orch.clock.now(), ttfb_ms=out["ttfb_ms"],
-            latency_ms=out["latency_ms"],
-            completed=out["latency_ms"]
-            <= session.asp.objectives.t_max_ms,
-            tokens=gen_tokens))
-        self.orch.policy.meter(session.charging_ref, tokens=gen_tokens,
-                               chip_s=out["latency_ms"] / 1e3,
-                               unit_price=self.fleet.entry.price_per_1k_tokens)
-        return out
+        plane = self.planes[session.binding.site_id]
+        klass = self.orch.qos_class(session)
+        res = plane.serve(
+            session_id=session.session_id, klass=klass.name,
+            prompt_tokens=len(prompt), gen_tokens=gen_tokens,
+            t_max_ms=session.asp.objectives.t_max_ms,
+            prompt=np.asarray(prompt, np.int32))
+        self.orch.record_results(site)
+        return {"tokens": res.token_ids or [], "ttfb_ms": res.ttfb_ms,
+                "latency_ms": res.latency_ms}

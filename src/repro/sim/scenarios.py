@@ -1,22 +1,31 @@
-"""§V scenarios: endpoint AIaaS baseline vs NE-AIaaS (Figs. 2 and 3).
+"""§V scenarios: endpoint AIaaS baseline vs NE-AIaaS (Figs. 2 and 3), plus
+the serving-plane workloads the unified scheduler unlocks (multi-class
+mixes, bursty arrivals, load + mobility at 10k+ concurrent sessions).
 
 * **Endpoint baseline** — fixed cloud endpoint over best-effort transport;
-  ALL requests are accepted and accumulate in the server queue; violation
-  probability is computed over all requests (queueing is part of the
-  user-perceived service).
-* **NE-AIaaS** — session-oriented: an atomic PREPARE/COMMIT across compute
-  slots and QoS flows (the REAL TwoPhaseCoordinator, not a re-implementation)
-  admits sessions up to the site's slot capacity; only admitted sessions are
-  served, over QoS-provisioned transport, and the violation probability is
-  "served-and-failed" over admitted sessions (Eq. 16 semantics).
+  ALL requests are accepted and accumulate in the server queue (Lindley
+  recursion); violation probability is computed over all requests (queueing
+  is part of the user-perceived service).
+* **NE-AIaaS** — session-oriented: every request is driven through the REAL
+  :class:`~repro.serving.plane.ServingPlane` + ``QoSScheduler`` under a
+  ``VirtualClock`` — slot admission with a bounded queue rejects offered
+  load past the committed capacity (the 2PC admission cap at session
+  granularity), admitted requests occupy decode slots for a service time
+  sampled from ``LatencyModel`` (its ONLY remaining role on this arm), and
+  transport rides the QoS-provisioned class. Violation probability is
+  "served-and-failed" over admitted requests (Eq. 16 semantics). There is
+  no parallel closed-form queue model on this arm.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Dict, Optional
 
 import numpy as np
 
+from repro.core.clock import VirtualClock
+from repro.serving.plane import ServingPlane, SimulatedEngine
 from repro.sim.latency import LatencyModel, SimConfig
 
 
@@ -55,82 +64,290 @@ def simulate_endpoint(rho: float, model: LatencyModel, *, ell99: float,
                        "net": float(net.mean())})
 
 
-def _admitted_fraction_via_2pc(rho: float, *, slots: int = 64,
-                               target_util: float = 0.75,
-                               seed: int = 0) -> float:
-    """Run the real PREPARE/COMMIT machinery at session granularity.
-
-    Sessions arrive at a rate proportional to ρ; each holds a decode slot
-    for its lifetime. Admission succeeds while the site has free slots —
-    compute and QoS leases are co-reserved atomically; the admitted
-    fraction is what caps the *served* load at ~target_util.
-    """
-    from repro.core.catalog import default_catalog
-    from repro.core.clock import VirtualClock
-    from repro.core.failures import SessionError, Timers
-    from repro.core.qos import QoSFlowManager, PREMIUM
-    from repro.core.sites import default_sites
-    from repro.core.twophase import TwoPhaseCoordinator
-
-    clock = VirtualClock()
-    catalog = default_catalog()
-    model = catalog.get("edge-tiny")
-    sites = default_sites(clock, tuple(catalog._entries.keys()))
-    site = sites["edge-a"]
-    site.spec = type(site.spec)(**{**site.spec.__dict__,
-                                   "decode_slots": slots})
-    qos = QoSFlowManager(clock, premium_flows_per_path=slots)
-    timers = Timers(lease_s=1e9)
-    coord = TwoPhaseCoordinator(clock, sites, qos, timers)
-
-    rng = np.random.default_rng(seed + 17)
-    # offered sessions per unit time scales with ρ; capacity admits up to
-    # target_util × slots concurrently (service time 1.0 each)
-    n_sessions = 400
-    arrivals = np.cumsum(rng.exponential(
-        1.0 / max(rho * slots * target_util * 1.35, 1e-6), size=n_sessions))
-    hold = rng.exponential(1.0, size=n_sessions)
-    active = []  # (end_time, prepared)
-    admitted = 0
-    for t, h in zip(arrivals, hold):
-        clock.advance(max(0.0, t - clock.now()))
-        for end, prep in [a for a in active if a[0] <= clock.now()]:
-            coord.sites[prep.site_id].release(prep.compute_lease_id)
-            coord.qos.release(prep.qos_lease_id)
-            active.remove((end, prep))
-        # cap utilisation headroom: admission refuses past target_util
-        if site.slots_in_use() >= int(slots * target_util):
-            continue
-        try:
-            prep = coord.prepare(model, "edge-a", "zone-a", PREMIUM,
-                                 slots=1, cache_bytes=1e6)
-            coord.commit(prep, model)
-            admitted += 1
-            active.append((clock.now() + h, prep))
-        except SessionError:
-            continue
-    return admitted / n_sessions
+# ----------------------------------------------------------------------
+# plane-driven NE-AIaaS arm
+# ----------------------------------------------------------------------
+def _drive_plane(plane: ServingPlane, clock: VirtualClock,
+                 arrivals_s: np.ndarray, submit_kwargs) -> None:
+    """Feed a Poisson-arrival open loop through the plane under virtual
+    time: completions interleave with arrivals event-by-event."""
+    for i, t in enumerate(arrivals_s):
+        plane.run_until(float(t))
+        plane.submit(**submit_kwargs(i))
+    plane.drain()
 
 
 def simulate_neaiaas(rho: float, model: LatencyModel, *, ell99: float,
                      t_max: float, target_util: float = 0.75,
-                     seed: int = 0) -> LoadPointResult:
+                     seed: int = 0, slots: int = 64) -> LoadPointResult:
     rng = np.random.default_rng(seed * 104729 + int(rho * 1000))
     n = model.cfg.n_requests
-    admitted_frac = min(1.0, _admitted_fraction_via_2pc(
-        rho, target_util=target_util, seed=seed) if rho > target_util else 1.0)
-    # served load is capped by admission: queue operates at min(ρ, ρ*)
-    rho_served = min(rho, target_util)
-    infer = model.infer_times(rng, n)
-    wq = model.queue_wait(rng, n, rho_served, infer)
-    net = model.transport_qos(rng, n)
-    lat = wq + infer + net
+    clock = VirtualClock()
+
+    # committed capacity: PREPARE/COMMIT admits sessions only up to
+    # target_util × slots concurrent decode slots; the plane's scheduler IS
+    # that admission point (bounded queue ⇒ loss past the committed share)
+    cap = max(1, int(slots * target_util))
+    infer = model.infer_times(rng, n)            # service-time sampler only
+    idx = {"i": 0}
+
+    def sampler(req):
+        i = idx["i"]
+        idx["i"] += 1
+        return 0.0, float(infer[i % n])
+
+    plane = ServingPlane(
+        clock, SimulatedEngine(clock, service_sampler=sampler),
+        slots=cap, premium_reserved_frac=0.0, max_queue=0,
+        site_id="neaiaas")
+
+    # offered load ρ is measured against the site's FULL slot capacity, the
+    # same normalisation as the endpoint arm
+    lam_per_ms = rho * slots / float(infer.mean())
+    arrivals_s = np.cumsum(rng.exponential(1.0 / lam_per_ms, size=n)) / 1e3
+    _drive_plane(plane, clock, arrivals_s,
+                 lambda i: dict(session_id=f"s{i}", klass="premium",
+                                prompt_tokens=128, gen_tokens=16,
+                                t_max_ms=t_max))
+
+    results = [r for r in plane.pop_results() if r.failed is None]
+    admitted = len(results)
+    if admitted == 0:
+        return LoadPointResult(rho, 0.0, 0.0, 0.0, 1.0, 0.0)
+    wq = np.array([r.queue_wait_ms for r in results])
+    svc = np.array([r.latency_ms - r.queue_wait_ms for r in results])
+    net = model.transport_qos(rng, admitted)
+    lat = wq + svc + net
     return LoadPointResult(
         rho=rho,
         p50_ms=float(np.quantile(lat, 0.5)),
         p95_ms=float(np.quantile(lat, 0.95)),
         p99_ms=float(np.quantile(lat, 0.99)),
         violation_prob=_eval(lat, ell99, t_max),   # served-and-failed
-        admitted_frac=admitted_frac,
-        decomposition={"wq": float(wq.mean()), "infer": float(infer.mean()),
+        admitted_frac=admitted / n,
+        decomposition={"wq": float(wq.mean()), "infer": float(svc.mean()),
                        "net": float(net.mean())})
+
+
+# ----------------------------------------------------------------------
+# new workloads unlocked by the unified plane
+# ----------------------------------------------------------------------
+@dataclass
+class ClassStats:
+    klass: str
+    n: int
+    share_offered: float
+    p50_wait_ms: float
+    p99_wait_ms: float
+    p99_latency_ms: float
+    fast_failed: int
+
+
+@dataclass
+class MixResult:
+    rho: float
+    per_class: Dict[str, ClassStats]
+    total_fast_failed: int
+
+
+def simulate_multiclass(rho: float, model: LatencyModel, *,
+                        mix=(("premium", 0.2), ("assured", 0.3),
+                             ("best-effort", 0.5)),
+                        t_max: float = 1000.0, slots: int = 64,
+                        n_requests: Optional[int] = None,
+                        seed: int = 0) -> MixResult:
+    """Mixed-class traffic through ONE plane: premium keeps its reserved
+    share and strict ordering, best-effort absorbs the queueing, hopeless
+    requests fast-fail instead of wasting slots."""
+    rng = np.random.default_rng(seed * 7 + int(rho * 1000))
+    n = n_requests or model.cfg.n_requests
+    clock = VirtualClock()
+    infer = model.infer_times(rng, n)
+    idx = {"i": 0}
+
+    def sampler(req):
+        i = idx["i"]
+        idx["i"] += 1
+        return 0.0, float(infer[i % n])
+
+    plane = ServingPlane(
+        clock, SimulatedEngine(clock, service_sampler=sampler,
+                               default_service_ms=float(infer.mean())),
+        slots=slots, premium_reserved_frac=0.25, site_id="mix")
+    names = [k for k, _ in mix]
+    probs = np.array([w for _, w in mix], float)
+    probs /= probs.sum()
+    classes = rng.choice(len(names), size=n, p=probs)
+    lam_per_ms = rho * slots / float(infer.mean())
+    arrivals_s = np.cumsum(rng.exponential(1.0 / lam_per_ms, size=n)) / 1e3
+    _drive_plane(plane, clock, arrivals_s,
+                 lambda i: dict(session_id=f"s{i}",
+                                klass=names[classes[i]],
+                                prompt_tokens=128, gen_tokens=16,
+                                t_max_ms=t_max))
+
+    per_class: Dict[str, ClassStats] = {}
+    results = plane.pop_results()
+    for j, name in enumerate(names):
+        rs = [r for r in results if r.klass == name]
+        ok = [r for r in rs if r.failed is None]
+        waits = np.array([r.queue_wait_ms for r in ok]) if ok else np.zeros(1)
+        lats = np.array([r.latency_ms for r in ok]) if ok else np.zeros(1)
+        per_class[name] = ClassStats(
+            klass=name, n=len(rs), share_offered=float(probs[j]),
+            p50_wait_ms=float(np.quantile(waits, 0.5)),
+            p99_wait_ms=float(np.quantile(waits, 0.99)),
+            p99_latency_ms=float(np.quantile(lats, 0.99)),
+            fast_failed=sum(1 for r in rs if r.failed is not None))
+    return MixResult(rho=rho, per_class=per_class,
+                     total_fast_failed=plane.scheduler.stats.fast_failed)
+
+
+@dataclass
+class BurstResult:
+    burst_factor: float
+    p99_wait_ms: float
+    p99_wait_calm_ms: float
+    fast_fail_frac: float
+    completed_frac: float
+
+
+def simulate_bursty(model: LatencyModel, *, burst_factor: float = 5.0,
+                    base_rho: float = 0.45, duty: float = 0.15,
+                    period_s: float = 2.0, t_max: float = 1000.0,
+                    slots: int = 64, n_requests: Optional[int] = None,
+                    seed: int = 0) -> BurstResult:
+    """Markov-modulated arrivals: calm at base_rho, bursts at
+    burst_factor × base_rho for ``duty`` of each period. The scheduler's
+    deadline fast-fail is what keeps served-and-failed low through bursts."""
+    rng = np.random.default_rng(seed * 31 + int(burst_factor * 10))
+    n = n_requests or model.cfg.n_requests
+    clock = VirtualClock()
+    infer = model.infer_times(rng, n)
+    idx = {"i": 0}
+
+    def sampler(req):
+        i = idx["i"]
+        idx["i"] += 1
+        return 0.0, float(infer[i % n])
+
+    plane = ServingPlane(
+        clock, SimulatedEngine(clock, service_sampler=sampler,
+                               default_service_ms=float(infer.mean())),
+        slots=slots, premium_reserved_frac=0.0, site_id="burst")
+
+    lam_base = base_rho * slots / float(infer.mean())          # per ms
+    t_ms, arrivals_ms, in_burst_flags = 0.0, [], []
+    period_ms, burst_ms = period_s * 1e3, duty * period_s * 1e3
+    for _ in range(n):
+        phase = t_ms % period_ms
+        in_burst = phase < burst_ms
+        lam = lam_base * (burst_factor if in_burst else 1.0)
+        t_ms += rng.exponential(1.0 / lam)
+        arrivals_ms.append(t_ms)
+        in_burst_flags.append(in_burst)
+    arrivals_s = np.asarray(arrivals_ms) / 1e3
+    flags = {}
+
+    def submit_kwargs(i):
+        flags[f"s{i}"] = in_burst_flags[i]
+        return dict(session_id=f"s{i}", klass="premium",
+                    prompt_tokens=128, gen_tokens=16, t_max_ms=t_max)
+
+    _drive_plane(plane, clock, arrivals_s, submit_kwargs)
+
+    results = plane.pop_results()
+    ok = [r for r in results if r.failed is None]
+    waits = np.array([r.queue_wait_ms for r in ok]) if ok else np.zeros(1)
+    calm = [r.queue_wait_ms for r in ok if not flags.get(r.session_id)]
+    return BurstResult(
+        burst_factor=burst_factor,
+        p99_wait_ms=float(np.quantile(waits, 0.99)),
+        p99_wait_calm_ms=float(np.quantile(np.asarray(calm), 0.99))
+        if calm else 0.0,
+        fast_fail_frac=plane.scheduler.stats.fast_failed / max(len(results), 1),
+        completed_frac=sum(1 for r in ok if r.completed) / max(len(results), 1))
+
+
+@dataclass
+class LoadMobilityResult:
+    n_sessions: int
+    handovers: int
+    completed_frac: float
+    p99_wait_ms: float
+    per_site_served: Dict[str, int]
+
+
+def simulate_load_mobility(*, n_sessions: int = 10_000,
+                           requests_per_session: int = 2,
+                           handover_prob: float = 0.15,
+                           rho: float = 0.7, t_max: float = 2000.0,
+                           seed: int = 0,
+                           sim: Optional[SimConfig] = None
+                           ) -> LoadMobilityResult:
+    """Load + mobility at 10k+ concurrent sessions across the default
+    4-site topology: each session anchors on a site-local plane; between a
+    session's requests a handover may re-anchor it to a neighbour site, so
+    later requests land on a DIFFERENT plane's queue — the scheduling
+    consequences of mobility, not just the lease mechanics."""
+    cfg = sim or SimConfig()
+    model = LatencyModel(cfg)
+    rng = np.random.default_rng(seed)
+    clock = VirtualClock()
+    # slot counts mirror repro.core.sites.default_sites
+    topo = {"edge-a": 64, "edge-b": 64, "regional-1": 384, "central-1": 2048}
+    total_slots = sum(topo.values())
+    n_req = n_sessions * requests_per_session
+    infer = model.infer_times(rng, n_req)
+    idx = {"i": 0}
+
+    def sampler(req):
+        i = idx["i"]
+        idx["i"] += 1
+        return 0.0, float(infer[i % n_req])
+
+    planes = {
+        sid: ServingPlane(clock,
+                          SimulatedEngine(clock, service_sampler=sampler,
+                                          default_service_ms=float(infer.mean())),
+                          slots=nslots, premium_reserved_frac=0.25,
+                          site_id=sid)
+        for sid, nslots in topo.items()}
+    site_ids = list(topo)
+    weights = np.array([topo[s] for s in site_ids], float)
+    anchor = rng.choice(len(site_ids), size=n_sessions,
+                        p=weights / weights.sum())
+
+    lam_per_ms = rho * total_slots / float(infer.mean())
+    arrivals_s = np.cumsum(
+        rng.exponential(1.0 / lam_per_ms, size=n_req)) / 1e3
+    klasses = np.array(["premium", "assured", "best-effort"])
+    sess_klass = klasses[rng.integers(0, 3, size=n_sessions)]
+    handover_draws = rng.random(n_req)
+    handovers = 0
+
+    for i, t in enumerate(arrivals_s):
+        sess = i % n_sessions
+        if i >= n_sessions and handover_draws[i] < handover_prob:
+            # re-anchor to a random other site before this request
+            anchor[sess] = (anchor[sess] + 1 +
+                            int(handover_draws[i] * 1000) % (len(site_ids) - 1)
+                            ) % len(site_ids)
+            handovers += 1
+        sid = site_ids[anchor[sess]]
+        planes[sid].run_until(float(t))
+        planes[sid].submit(session_id=f"s{sess}", klass=str(sess_klass[sess]),
+                           prompt_tokens=128, gen_tokens=16, t_max_ms=t_max)
+    for plane in planes.values():
+        plane.drain()
+
+    all_results = [r for p in planes.values() for r in p.pop_results()]
+    ok = [r for r in all_results if r.failed is None]
+    waits = np.array([r.queue_wait_ms for r in ok]) if ok else np.zeros(1)
+    per_site = {sid: p.scheduler.stats.completed for sid, p in planes.items()}
+    return LoadMobilityResult(
+        n_sessions=n_sessions, handovers=handovers,
+        completed_frac=sum(1 for r in ok if r.completed)
+        / max(len(all_results), 1),
+        p99_wait_ms=float(np.quantile(waits, 0.99)),
+        per_site_served=per_site)

@@ -1,0 +1,111 @@
+"""Minimal, deterministic stand-in for the `hypothesis` API surface the
+test-suite uses, installed by conftest.py ONLY when the real package is
+unavailable (this container has no network access; the `test` extra in
+pyproject.toml pulls the real hypothesis wherever pip can reach an index).
+
+Implements: `given`, `settings`, `strategies.{integers,floats,lists,
+sampled_from}`. Draws are pseudo-random but seeded from the test's qualified
+name, so runs are reproducible. The first two examples of every bounded
+numeric strategy pin the interval endpoints, which is where most of the
+boundary bugs hypothesis would catch actually live.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random, index: int):
+        return self._draw(rnd, index)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    def draw(rnd, index):
+        if index == 0:
+            return min_value
+        if index == 1:
+            return max_value
+        return rnd.randint(min_value, max_value)
+    return SearchStrategy(draw)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    def draw(rnd, index):
+        if index == 0:
+            return float(min_value)
+        if index == 1:
+            return float(max_value)
+        return rnd.uniform(min_value, max_value)
+    return SearchStrategy(draw)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    seq = list(elements)
+
+    def draw(rnd, index):
+        return seq[index % len(seq)] if index < len(seq) else rnd.choice(seq)
+    return SearchStrategy(draw)
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rnd, index):
+        size = min_size if index == 0 else rnd.randint(min_size, max_size)
+        return [elements.example(rnd, 2 + i) for i in range(size)]
+    return SearchStrategy(draw)
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*fixed_args):
+            n = getattr(run, "_hyp_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(hash(fn.__qualname__) & 0xFFFFFFFF)
+            for i in range(n):
+                args = [s.example(rnd, i) for s in arg_strategies]
+                kwargs = {k: s.example(rnd, i)
+                          for k, s in kw_strategies.items()}
+                fn(*fixed_args, *args, **kwargs)
+        # pytest plugins (anyio, pytest-asyncio) probe `.hypothesis.inner_test`
+        run.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # hide strategy-supplied parameters from pytest's fixture resolution:
+        # positional strategies fill the rightmost params, kw strategies by name
+        params = list(inspect.signature(fn).parameters.values())
+        if arg_strategies:
+            params = params[:-len(arg_strategies)]
+        params = [p for p in params if p.name not in kw_strategies]
+        run.__signature__ = inspect.Signature(params)
+        return run
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def install() -> None:
+    """Register stub modules as `hypothesis` / `hypothesis.strategies`."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from",
+                 "SearchStrategy"):
+        setattr(strategies, name, globals()[name])
+    mod.strategies = strategies
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

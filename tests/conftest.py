@@ -1,5 +1,13 @@
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+if importlib.util.find_spec("hypothesis") is None:
+    # Offline fallback: the real hypothesis comes from the `test` extra
+    # (pyproject.toml); on machines without an index this API-compatible
+    # deterministic stub keeps the property-test modules collectable.
+    from tests import _hypothesis_stub
+    _hypothesis_stub.install()
