@@ -41,14 +41,13 @@ def main():
         toks.append(eng_src.decode_round()[session.session_id])
     print(f"generated on source: {toks}")
 
-    # oracle: what the NEXT 5 tokens would be without migration
-    import jax
-    oracle = state_transfer.transfer(
-        eng_src,
-        type(eng_src)(eng_src.cfg, params=eng_src.params, slots=2,
-                      max_len=128),
-        session.session_id, verify=False)  # no-op probe, keep source intact
-    # (transfer() imports into the probe engine; re-import doesn't disturb src)
+    # oracle: what the NEXT 5 tokens would be without migration — captured
+    # on a probe engine BEFORE the swap (the source slot is released at
+    # commit, so the source can't be replayed afterwards)
+    probe = type(eng_src)(eng_src.cfg, params=eng_src.params, slots=2,
+                          max_len=128)
+    state_transfer.transfer(eng_src, probe, session.session_id)
+    src_cont = [probe.decode_round()[session.session_id] for _ in range(5)]
 
     # make-before-break migration through the control plane
     out = orch.migrations.migrate(session, "zone-a")
@@ -60,10 +59,12 @@ def main():
     dst = server.fleet.engine_for(session.binding.site_id)
     cont = [dst.decode_round()[session.session_id] for _ in range(5)]
     print(f"continued on target:   {cont}")
-    src_cont = [eng_src.decode_round()[session.session_id] for _ in range(5)]
     print(f"source would have said: {src_cont}")
     assert cont == src_cont, "migration changed the generation!"
-    print("bit-identical continuation ✓ (make-before-break preserved state)")
+    assert not eng_src.has_slot(session.session_id), \
+        "source slot must be released after the swap"
+    print("bit-identical continuation ✓ (make-before-break preserved state, "
+          "source slot released)")
 
     # abort path: injected failure keeps the source committed
     from repro.core.failures import FailureCause, SessionError

@@ -23,7 +23,7 @@ from repro.core.clock import Clock
 from repro.core.discovery import discover
 from repro.core.failures import FailureCause, SessionError, Timers
 from repro.core.migration import (MigrationController, MigrationOutcome,
-                                  MigrationTriggers)
+                                  MigrationTriggers, PlaneTransferPath)
 from repro.core.paging import page
 from repro.core.policy import PolicyControl
 from repro.core.predictors import Predictors
@@ -63,6 +63,12 @@ class Orchestrator:
         self.migrations = MigrationController(
             self.clock, self.coordinator, self.catalog, self.sites,
             self.predictors, self.timers, analytics=self.analytics)
+        # migration rides the REAL serving-plane data plane by default:
+        # export/import between the sites' backends with fingerprint
+        # verification and mid-stream handover (real engines and the
+        # SimulatedEngine §V arm speak the same slot protocol)
+        self.migrations.transfer_fn = PlaneTransferPath(
+            self.plane_for, clock=self.clock)
         self.telemetry: Dict[str, BoundaryTelemetry] = {}
         self.sessions: Dict[str, AISession] = {}
 
@@ -154,6 +160,10 @@ class Orchestrator:
                     ttfb_ms=res.ttfb_ms, latency_ms=res.latency_ms,
                     completed=res.completed, tokens=res.tokens,
                     queue_ms=res.queue_wait_ms))
+            # context accounting: the session's actual served context sizes
+            # any later migration payload / PREPARE cache reservation
+            if res.tokens:
+                session.note_context(res.prompt_tokens + res.tokens)
             if session.charging_ref is not None and res.tokens:
                 b = session.binding
                 price = self.catalog.get(
@@ -255,4 +265,13 @@ class Orchestrator:
         return tele.compliance(session.asp) if tele else None
 
     def release(self, session: AISession) -> None:
+        # free the anchor's data-plane session state (migrated-in slots,
+        # SimulatedEngine serialized state) along with the leases — the
+        # backend store must not grow with released sessions
+        b = session.binding
+        if b is not None:
+            site = self.sites.get(b.site_id)
+            plane = site.plane if site is not None else None
+            if plane is not None and hasattr(plane.backend, "release_slot"):
+                plane.backend.release_slot(session.session_id)
         session.release()

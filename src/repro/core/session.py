@@ -98,6 +98,9 @@ class AISession:
         self.authz_ref: Optional[str] = None
         self.charging_ref: Optional[str] = None
         self.history: list = []      # (t, state) audit trail
+        #: served context length (prompt + generated tokens across requests);
+        #: sizes the migration payload and PREPARE cache reservation
+        self.context_tokens: int = 0
 
     # ------------------------------------------------------------------
     # state machine
@@ -124,6 +127,11 @@ class AISession:
 
     def mark_migrating(self):
         self._to(SessionState.MIGRATING)
+
+    def note_context(self, tokens: int) -> None:
+        """Account served tokens (prompt + generated) into the session's
+        context length — the actual migration payload size (not a constant)."""
+        self.context_tokens += max(int(tokens), 0)
 
     def fail(self, cause: FailureCause, detail: str = "") -> None:
         # release any leases this session still references (idempotent)

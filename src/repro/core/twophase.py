@@ -32,6 +32,10 @@ class Prepared:
     site_id: str
     qfi: int
     prepared_at: float
+    #: extra seconds the provisional leases stay committable beyond τ_com —
+    #: make-before-break migration holds the target through the τ_mig
+    #: transfer window while the source keeps serving
+    hold_s: float = 0.0
 
 
 class TwoPhaseCoordinator:
@@ -51,18 +55,20 @@ class TwoPhaseCoordinator:
     # ------------------------------------------------------------------
     def prepare(self, model: ModelEntry, site_id: str, zone: str,
                 klass: TransportClass, *, slots: int,
-                cache_bytes: float) -> Prepared:
-        """Stage 1: obtain BOTH provisional leases or none."""
+                cache_bytes: float, hold_s: float = 0.0) -> Prepared:
+        """Stage 1: obtain BOTH provisional leases or none. ``hold_s``
+        extends the provisional TTL and the COMMIT window (migration holds
+        the target across the τ_mig state-transfer window)."""
         t0 = self.clock.now()
         site = self.sites[site_id]
+        ttl_s = self.timers.tau_prep + self.timers.tau_com + hold_s
         self.log.append(("prepare.begin", t0, site_id))
         cmp_lease = site.prepare(model, slots=slots, cache_bytes=cache_bytes,
-                                 ttl_s=self.timers.tau_prep + self.timers.tau_com)
+                                 ttl_s=ttl_s)
         try:
             self._deadline_guard(t0, self.timers.tau_prep, "PREPARE(compute)")
             qos_lease = self.qos.prepare(
-                (zone, site_id), klass,
-                ttl_s=self.timers.tau_prep + self.timers.tau_com)
+                (zone, site_id), klass, ttl_s=ttl_s)
         except BaseException:
             # roll back the compute side before surfacing the QoS failure —
             # partial allocation must never escape this function
@@ -80,7 +86,7 @@ class TwoPhaseCoordinator:
         return Prepared(compute_lease_id=cmp_lease.lease_id,
                         qos_lease_id=qos_lease.lease_id,
                         site_id=site_id, qfi=qos_lease.qfi,
-                        prepared_at=self.clock.now())
+                        prepared_at=self.clock.now(), hold_s=hold_s)
 
     # ------------------------------------------------------------------
     def commit(self, prepared: Prepared, model: ModelEntry) -> Binding:
@@ -89,7 +95,8 @@ class TwoPhaseCoordinator:
         site = self.sites[prepared.site_id]
         try:
             self._deadline_guard(prepared.prepared_at,
-                                 self.timers.tau_com, "COMMIT")
+                                 self.timers.tau_com + prepared.hold_s,
+                                 "COMMIT")
             site.confirm(prepared.compute_lease_id,
                          lease_s=self.timers.lease_s)
             self.qos.confirm(prepared.qos_lease_id,

@@ -57,6 +57,15 @@ class InferenceEngine:
     def free_slots(self) -> int:
         return sum(1 for s in self._slots if s is None)
 
+    def has_slot(self, session_id: str) -> bool:
+        return session_id in self._slot_map
+
+    def position_of(self, session_id: str) -> int:
+        """Current cache position (context length) of one session's slot —
+        the authoritative payload size for migration."""
+        meta = self._slots[self._slot_map[session_id]]
+        return meta.position
+
     def _alloc(self, session_id: str) -> int:
         for i, s in enumerate(self._slots):
             if s is None:
@@ -99,7 +108,15 @@ class InferenceEngine:
                 "last_token": meta.last_token}
 
     def import_slot(self, session_id: str, payload) -> None:
-        """Install a migrated session's state into a free slot."""
+        """Install a migrated session's state into a free slot. Raises
+        AdmissionDenied when the target has no free slot — the migration
+        abort cause (COMPUTE_SCARCITY), distinct from the lease-accounting
+        bug the prefill path's exhaustion signals."""
+        if self.free_slots() == 0:
+            from repro.serving.state_transfer import AdmissionDenied
+            raise AdmissionDenied(
+                f"target admission denied: no free decode slots for "
+                f"{session_id}")
         idx = self._alloc(session_id)
         self._write_slot(idx, payload["cache"])
         self._slots[idx] = SlotState(session_id, payload["position"],

@@ -32,6 +32,7 @@ The plane is also the congestion sensor for the NWDAF-style analytics loop:
 from __future__ import annotations
 
 import collections
+import dataclasses
 import heapq
 import itertools
 from dataclasses import dataclass
@@ -55,6 +56,7 @@ class PlaneResult:
     completed: bool              # finished within the request's T_max
     failed: Optional[FailureCause] = None
     token_ids: Optional[List[int]] = None   # real-engine backends only
+    prompt_tokens: int = 0       # context consumed (sizes migration payload)
 
 
 @dataclass
@@ -73,6 +75,22 @@ class Admission:
     ttfb_ms: float
     finish_at: Optional[float]   # absolute clock time (simulated backends)
     first_token: Optional[int] = None
+
+
+@dataclass
+class SessionHandoff:
+    """A session's in-flight work detached from one plane for
+    make-before-break handover to another: the running request keeps
+    streaming on the target, queued requests re-queue there."""
+    session_id: str
+    request: Optional[object]              # scheduler Request, if in flight
+    tokens: int = 0                        # generated so far
+    token_ids: Optional[List[int]] = None  # real-engine backends
+    finish_at: Optional[float] = None      # pending event (simulated)
+    queued: List[object] = dataclasses.field(default_factory=list)
+
+    def empty(self) -> bool:
+        return self.request is None and not self.queued
 
 
 class RealEngineBackend:
@@ -142,6 +160,19 @@ class RealEngineBackend:
     def release(self, session_id: str) -> None:
         self.engine.release_slot(session_id)
 
+    # -- migration data plane (engine slot protocol) ---------------------
+    def has_slot(self, session_id: str) -> bool:
+        return self.engine.has_slot(session_id)
+
+    def export_slot(self, session_id: str):
+        return self.engine.export_slot(session_id)
+
+    def import_slot(self, session_id: str, payload) -> None:
+        self.engine.import_slot(session_id, payload)
+
+    def release_slot(self, session_id: str) -> None:
+        self.engine.release_slot(session_id)
+
 
 class SimulatedEngine:
     """Predictor/sampler-backed backend driven by (virtual) clock events.
@@ -153,17 +184,31 @@ class SimulatedEngine:
     admission until ``finish_at`` — queueing, class ordering, and premium
     reservation all come from the shared ``QoSScheduler``, not from any
     closed-form queue model.
+
+    The backend also keeps a **serializable per-session state** that evolves
+    deterministically with every admitted request (a small state vector plus
+    the context position), speaking the same ``export_slot`` / ``import_slot``
+    / ``release_slot`` protocol as the real engine — so the §V simulation arm
+    migrates sessions through :mod:`repro.serving.state_transfer` under
+    ``VirtualClock``, with real fingerprint verification and real abort paths.
+    ``import_capacity`` bounds how many migrated-in sessions the backend will
+    hold (None = unbounded); exhaustion raises — target admission denial.
     """
 
-    exclusive_sessions = False   # no per-session engine state to collide with
+    exclusive_sessions = False   # per-request slots never collide per session
+
+    STATE_DIM = 8
 
     def __init__(self, clock: Clock, *,
                  service_sampler: Optional[
                      Callable[[Request], Tuple[float, float]]] = None,
-                 default_service_ms: float = 50.0):
+                 default_service_ms: float = 50.0,
+                 import_capacity: Optional[int] = None):
         self.clock = clock
         self.service_sampler = service_sampler
         self.default_service_ms = default_service_ms
+        self.import_capacity = import_capacity
+        self._sessions: Dict[str, dict] = {}
 
     # -- plane interface -------------------------------------------------
     def predicted_service_ms(self, req: Request) -> float:
@@ -174,7 +219,26 @@ class SimulatedEngine:
     def ensure_capacity(self, active_sessions) -> None:
         pass
 
+    def _touch_state(self, req: Request) -> None:
+        """Deterministic session-state evolution (crc32-seeded so two runs
+        of the same trace produce byte-identical states and fingerprints)."""
+        import numpy as np
+        import zlib
+        st = self._sessions.get(req.session_id)
+        if st is None:
+            st = {"cache": {"sim": np.zeros(self.STATE_DIM, np.float64)},
+                  "position": 0, "last_token": 0}
+            self._sessions[req.session_id] = st
+        mix = (zlib.crc32(req.session_id.encode())
+               + 31 * req.prompt_tokens + 7 * req.gen_tokens) % 1_000_003
+        vec = st["cache"]["sim"]
+        vec[1:] = vec[:-1]
+        vec[0] = 0.5 * vec[0] + float(mix)
+        st["position"] += req.prompt_tokens + req.gen_tokens
+        st["last_token"] = int(mix % 50_257)
+
     def admit(self, req: Request, now: float) -> Admission:
+        self._touch_state(req)
         if req.hint_total_ms is not None:
             ttfb = req.hint_ttfb_ms if req.hint_ttfb_ms is not None else 0.0
             total = req.hint_total_ms
@@ -188,7 +252,36 @@ class SimulatedEngine:
         return {}
 
     def release(self, session_id: str) -> None:
+        # per-request slot release: session state persists across requests
         pass
+
+    # -- migration data plane (engine slot protocol) ---------------------
+    def has_slot(self, session_id: str) -> bool:
+        return session_id in self._sessions
+
+    def export_slot(self, session_id: str):
+        st = self._sessions[session_id]
+        import numpy as np
+        return {"cache": {"sim": np.array(st["cache"]["sim"], copy=True)},
+                "position": st["position"],
+                "last_token": st["last_token"]}
+
+    def import_slot(self, session_id: str, payload) -> None:
+        if self.import_capacity is not None and \
+                session_id not in self._sessions and \
+                len(self._sessions) >= self.import_capacity:
+            from repro.serving.state_transfer import AdmissionDenied
+            raise AdmissionDenied(
+                f"target admission denied: no free session slots for "
+                f"{session_id}")
+        import numpy as np
+        self._sessions[session_id] = {
+            "cache": {"sim": np.array(payload["cache"]["sim"], copy=True)},
+            "position": int(payload["position"]),
+            "last_token": int(payload["last_token"])}
+
+    def release_slot(self, session_id: str) -> None:
+        self._sessions.pop(session_id, None)
 
 
 class ServingPlane:
@@ -217,6 +310,10 @@ class ServingPlane:
         self._outbox: List[PlaneResult] = []
         self._arrivals: Deque[float] = collections.deque(maxlen=arrival_window)
         self._req_ids = itertools.count()
+        #: plane-level migration failure injection (tests): export-side hooks
+        #: fire when this plane is the SOURCE, import-side when it is the
+        #: TARGET (see state_transfer.TransferInjections)
+        self.migration_inject = None
 
     # ------------------------------------------------------------------
     # submission
@@ -294,7 +391,8 @@ class ServingPlane:
             queue_wait_ms=wait_ms,
             tokens=self._tokens.pop(req.request_id, 0),
             completed=completed and failed is None, failed=failed,
-            token_ids=self._tok_ids.pop(req.request_id, None))
+            token_ids=self._tok_ids.pop(req.request_id, None),
+            prompt_tokens=req.prompt_tokens)
         self._done[req.request_id] = res
         self._outbox.append(res)
         self._by_request.pop(req.request_id, None)
@@ -330,6 +428,61 @@ class ServingPlane:
         for req in finished:
             self._complete(req)
         return True
+
+    # ------------------------------------------------------------------
+    # make-before-break handover (migration data plane)
+    # ------------------------------------------------------------------
+    def detach_session(self, session_id: str) -> SessionHandoff:
+        """Detach a session's in-flight work (running request + token
+        accounting AND its queued requests) for handover to another plane.
+        Backend slot state is NOT touched — the transfer path exports/
+        releases it under two-phase ordering. The freed scheduler slot is
+        immediately available to other queued work."""
+        queued = self.scheduler.take_queued(session_id)
+        for r in queued:
+            self._by_request.pop(r.request_id, None)
+        req = next((r for r in self.scheduler.running.values()
+                    if r.session_id == session_id), None)
+        if req is None:
+            return SessionHandoff(session_id, None, queued=queued)
+        self.scheduler.detach(req.request_id)
+        self._active_sessions.discard(session_id)
+        self._by_request.pop(req.request_id, None)
+        finish_at = None
+        for i, (t, _seq, r) in enumerate(self._events):
+            if r.request_id == req.request_id:
+                finish_at = t
+                self._events[i] = self._events[-1]
+                self._events.pop()
+                heapq.heapify(self._events)
+                break
+        return SessionHandoff(
+            session_id, req,
+            tokens=self._tokens.pop(req.request_id, 0),
+            token_ids=self._tok_ids.pop(req.request_id, None),
+            finish_at=finish_at, queued=queued)
+
+    def attach_session(self, handoff: SessionHandoff) -> None:
+        """Install work handed over from another plane: the running request
+        occupies a slot here and keeps streaming from where the source left
+        off, queued requests join this plane's class queues with their
+        original submit times (the QoS occupancy follows the session)."""
+        req = handoff.request
+        if req is not None:
+            self.scheduler.attach(req)
+            self._active_sessions.add(req.session_id)
+            self._by_request[req.request_id] = req
+            self._tokens[req.request_id] = handoff.tokens
+            if handoff.token_ids is not None:
+                self._tok_ids[req.request_id] = handoff.token_ids
+            if handoff.finish_at is not None:
+                heapq.heappush(self._events,
+                               (handoff.finish_at, next(self._seq), req))
+        for r in handoff.queued:
+            self._by_request[r.request_id] = r
+        self.scheduler.put_queued(handoff.queued)
+        if handoff.queued:
+            self._admit()
 
     # ------------------------------------------------------------------
     # driving

@@ -154,6 +154,40 @@ class QoSScheduler:
             req.finished_at = self.clock.now()
             self.stats.completed += 1
 
+    # ------------------------------------------------------------------
+    # make-before-break handover (migration data plane)
+    # ------------------------------------------------------------------
+    def detach(self, request_id: str) -> Optional[Request]:
+        """Remove a running request WITHOUT completion accounting: the
+        request is being handed over to another plane's scheduler (its slot
+        here frees immediately; the occupancy follows the session)."""
+        return self.running.pop(request_id, None)
+
+    def attach(self, req: Request) -> None:
+        """Install an in-flight request admitted on another plane. The slot
+        is occupied immediately; admission-wait was already measured at the
+        original admission, so no wait statistics are recorded here."""
+        self.running[req.request_id] = req
+
+    def take_queued(self, session_id: str) -> List[Request]:
+        """Remove and return this session's queued (not yet admitted)
+        requests, preserving FIFO order within each class — they follow
+        the session to its new anchor instead of being served here."""
+        taken: List[Request] = []
+        for q in self.queues.values():
+            if any(r.session_id == session_id for r in q):
+                taken.extend(r for r in q if r.session_id == session_id)
+                kept = [r for r in q if r.session_id != session_id]
+                q.clear()
+                q.extend(kept)
+        return taken
+
+    def put_queued(self, reqs: List[Request]) -> None:
+        """Enqueue requests handed over from another plane, preserving
+        their original submit times (no resubmission accounting)."""
+        for r in reqs:
+            self.queues[r.klass].append(r)
+
     def queue_depth(self) -> int:
         return sum(len(q) for q in self.queues.values())
 

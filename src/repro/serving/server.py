@@ -22,7 +22,6 @@ from repro.serving.engine import InferenceEngine
 from repro.serving.plane import (RealEngineBackend, ServingPlane,
                                  PlaneResult)
 from repro.serving.scheduler import Request
-from repro.serving import state_transfer
 
 
 class EngineFleet:
@@ -63,16 +62,10 @@ class AIaaSServer:
                 site_id=site_id)
             site.attach_plane(plane)
             self.planes[site_id] = plane
-        # engine-level data plane for make-before-break migration
-        orch.migrations.transfer_fn = self._transfer
-
-    def _transfer(self, session: AISession, src_site, dst_site) -> float:
-        src = self.fleet.engine_for(src_site.spec.site_id)
-        dst = self.fleet.engine_for(dst_site.spec.site_id)
-        if session.session_id in src._slot_map:
-            meta = state_transfer.transfer(src, dst, session.session_id)
-            return meta["wire_s_at_link"]
-        return 0.0
+        # make-before-break migration rides the orchestrator's default
+        # PlaneTransferPath, which resolves these attached planes: export on
+        # the source engine → fingerprint-verified import on the target →
+        # mid-stream requests keep streaming on the target after the swap
 
     # ------------------------------------------------------------------
     def submit(self, session: AISession, *, prompt_tokens: int = 16,

@@ -1,25 +1,66 @@
 """Session-state transfer: the data plane of make-before-break migration.
 
-``transfer(src_engine, dst_engine, session_id)`` exports the slot state on
+``transfer(src_backend, dst_backend, session_id)`` exports the slot state on
 the source anchor, re-shards it for the destination (between meshes this is
 a ``jax.device_put`` with the destination shardings; on one host it is a
 copy), verifies integrity, and installs it into a destination slot while
 the source keeps serving. Only after the destination confirms does the
 caller release the source slot (MigrationController drives the ordering).
 
+Both sides speak the engine slot protocol (``export_slot`` / ``import_slot``
+/ ``release_slot``): a raw :class:`~repro.serving.engine.InferenceEngine`,
+a plane backend wrapping one (``RealEngineBackend``), or the stateful
+``SimulatedEngine`` of the §V simulation arm — the same transfer code moves
+all of them, which is what lets the VirtualClock scenarios exercise the
+identical abort paths the real engines hit.
+
 Family-specific payloads (DESIGN.md §4):
     dense/moe : full or windowed KV pages       (largest payload)
     hybrid    : RG-LRU states + window rings
     ssm       : conv + SSD states               (O(1) in context — cheapest)
+
+Failure injection (``TransferInjections``) exposes every stage of the data
+plane to tests: export failure, wire corruption (fingerprint mismatch),
+import failure, target admission denial, and extra wire time that blows
+τ_mig mid-transfer. Import-side failures roll the provisional destination
+slot back before propagating, so an abort can never leak target state.
 """
 
 from __future__ import annotations
 
 import hashlib
 import time
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
 import numpy as np
+
+
+class AdmissionDenied(RuntimeError):
+    """Target refused the migrated-in session (no free slot / injected
+    refusal) — the caller maps this to COMPUTE_SCARCITY, distinct from
+    STATE_TRANSFER_FAILURE in the Eq. (12) cause partition."""
+
+
+@dataclass
+class TransferInjections:
+    """Plane-level failure-injection points for the migration data plane.
+
+    Attach to ``ServingPlane.migration_inject``: export-side hooks fire on
+    the SOURCE plane's injector, import-side hooks on the TARGET plane's.
+    """
+    #: called with the exported payload; raise to fail the export stage
+    on_export: Optional[Callable[[dict], None]] = None
+    #: called after the destination installed the payload; raise to fail the
+    #: import stage (the provisional destination slot is rolled back)
+    on_import: Optional[Callable[[dict], None]] = None
+    #: payload -> payload applied "on the wire" (fingerprint corruption)
+    corrupt: Optional[Callable[[dict], dict]] = None
+    #: target refuses the session outright (admission denial)
+    deny_admission: bool = False
+    #: extra modeled wire seconds (τ_mig expiry mid-transfer)
+    extra_wire_s: float = 0.0
 
 
 def payload_bytes(payload) -> int:
@@ -37,31 +78,55 @@ def fingerprint(payload) -> str:
 
 def transfer(src_engine, dst_engine, session_id: str, *,
              dst_shardings=None, link_bw: float = 5e9,
-             verify: bool = True, fail_injector=None) -> dict:
-    """Move one session between engines. Returns transfer metadata.
+             verify: bool = True, fail_injector=None,
+             inject: Optional[TransferInjections] = None,
+             clock=None) -> dict:
+    """Move one session between engines/backends. Returns transfer metadata.
 
-    ``fail_injector``: test hook — callable that may raise mid-transfer to
-    exercise the abort path (source must stay intact).
+    ``fail_injector``: legacy test hook — callable that may raise after the
+    export to exercise the abort path (source must stay intact).
+    ``inject``: staged :class:`TransferInjections`.
+    ``clock``: when given, wall time is measured on it (VirtualClock arms
+    measure zero wall — the modeled ``wire_s_at_link`` is what counts there).
     """
-    t0 = time.perf_counter()
+    _now = clock.now if clock is not None else time.perf_counter
+    t0 = _now()
     payload = src_engine.export_slot(session_id)
+    if inject is not None and inject.on_export is not None:
+        inject.on_export(payload)
     nbytes = payload_bytes(payload)
     src_fp = fingerprint(payload) if verify else None
 
     if fail_injector is not None:
         fail_injector(payload)
 
+    wire_payload = payload
     if dst_shardings is not None:
-        payload = dict(payload)
-        payload["cache"] = jax.device_put(payload["cache"], dst_shardings)
+        wire_payload = dict(payload)
+        wire_payload["cache"] = jax.device_put(payload["cache"],
+                                               dst_shardings)
+    if inject is not None and inject.corrupt is not None:
+        wire_payload = inject.corrupt(dict(wire_payload))
+    if inject is not None and inject.deny_admission:
+        raise AdmissionDenied(
+            f"target admission denied: {session_id} refused by injector")
 
-    dst_engine.import_slot(session_id, payload)
-    if verify:
-        dst_payload = dst_engine.export_slot(session_id)
-        dst_fp = fingerprint(dst_payload)
-        if dst_fp != src_fp:
-            dst_engine.release_slot(session_id)
-            raise IOError(f"state transfer corruption: {src_fp} != {dst_fp}")
-    wall_s = time.perf_counter() - t0
+    dst_engine.import_slot(session_id, wire_payload)
+    try:
+        if inject is not None and inject.on_import is not None:
+            inject.on_import(wire_payload)
+        if verify:
+            dst_payload = dst_engine.export_slot(session_id)
+            dst_fp = fingerprint(dst_payload)
+            if dst_fp != src_fp:
+                raise IOError(
+                    f"state transfer corruption: {src_fp} != {dst_fp}")
+    except BaseException:
+        # provisional destination slot must never survive a failed import
+        dst_engine.release_slot(session_id)
+        raise
+    wall_s = _now() - t0
+    extra = inject.extra_wire_s if inject is not None else 0.0
     return {"bytes": nbytes, "wall_s": wall_s,
-            "wire_s_at_link": nbytes / link_bw, "fingerprint": src_fp}
+            "wire_s_at_link": nbytes / link_bw + extra,
+            "fingerprint": src_fp}

@@ -1,5 +1,7 @@
 from repro.sim.latency import LatencyModel, SimConfig  # noqa: F401
 from repro.sim.scenarios import (simulate_endpoint, simulate_neaiaas,  # noqa: F401
                                  simulate_multiclass, simulate_bursty,
-                                 simulate_load_mobility)
+                                 simulate_load_mobility,
+                                 simulate_migration_under_load,
+                                 simulate_payload_asymmetry)
 from repro.sim.mobility import simulate_mobility  # noqa: F401

@@ -9,7 +9,13 @@ a VirtualClock — over a mobility trace, under two handover mechanisms:
 * ``mbb``        — NE-AIaaS make-before-break migration: the target anchor is
   prepared and committed while the source keeps serving; interruption only
   if migration fails (state-transfer failure / deadline expiry) AND the
-  source lease meanwhile lapses.
+  source lease meanwhile lapses. Transfer is the closed-form wire model
+  with injectable failures.
+* ``mbb-plane``  — the same control plane, but every handover moves REAL
+  session state through the sites' ServingPlane backends
+  (export → fingerprint verify → import via ``state_transfer``), with
+  export failures injected at the plane's injection points — the live
+  data plane under ``VirtualClock``.
 
 Handover events arrive as a Poisson process with rate v / cell_diameter.
 """
@@ -52,18 +58,33 @@ def simulate_mobility(speed_kmh: float, mechanism: str, *,
         clock = VirtualClock()
         orch = Orchestrator(clock=clock)
         # make migration failures injectable & deterministic per session
-        fail_draws = iter(rng.random(64))
+        fail_draws = iter(rng.random(1024))
 
-        def flaky_transfer(session, src, dst, _draws=fail_draws):
-            if next(_draws) < transfer_fail_prob:
-                from repro.core.failures import FailureCause
-                raise SessionError(FailureCause.STATE_TRANSFER_FAILURE,
-                                   "injected transfer failure")
-            return 0.040  # 40 ms of state movement
-
-        orch.migrations.transfer_fn = flaky_transfer
         asp = default_asp(mobility=MobilityClass.VEHICULAR)
         session = orch.establish(asp, invoker=f"ue-{s_idx}", zone="zone-a")
+
+        if mechanism == "mbb-plane":
+            # live data plane: serve once so the session has real state in
+            # its plane backend, then inject export failures at the plane
+            from repro.serving.state_transfer import TransferInjections
+            orch.serve(session, prompt_tokens=96, gen_tokens=16)
+
+            def flaky_export(payload, _draws=fail_draws):
+                if next(_draws) < transfer_fail_prob:
+                    raise IOError("injected export failure")
+
+            inj = TransferInjections(on_export=flaky_export)
+            for site in orch.sites.values():
+                orch.plane_for(site).migration_inject = inj
+        else:
+            def flaky_transfer(session, src, dst, _draws=fail_draws):
+                if next(_draws) < transfer_fail_prob:
+                    from repro.core.failures import FailureCause
+                    raise SessionError(FailureCause.STATE_TRANSFER_FAILURE,
+                                       "injected transfer failure")
+                return 0.040  # 40 ms of state movement
+
+            orch.migrations.transfer_fn = flaky_transfer
 
         n_ho = rng.poisson(rate_per_s * window_s)
         total_handover += n_ho
@@ -82,7 +103,7 @@ def simulate_mobility(speed_kmh: float, mechanism: str, *,
                     break
                 if resetup_ms > tolerable_gap_ms:
                     session_interrupted = True
-            else:  # make-before-break
+            else:  # make-before-break (closed-form or live plane transfer)
                 out = orch.migrations.migrate(session, "zone-a")
                 gaps.append(out.interruption_ms)
                 if out.migrated:

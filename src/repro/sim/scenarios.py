@@ -20,7 +20,7 @@ mixes, bursty arrivals, load + mobility at 10k+ concurrent sessions).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -351,3 +351,159 @@ def simulate_load_mobility(*, n_sessions: int = 10_000,
         / max(len(all_results), 1),
         p99_wait_ms=float(np.quantile(waits, 0.99)),
         per_site_served=per_site)
+
+
+# ----------------------------------------------------------------------
+# migration under load: the LIVE data plane under VirtualClock
+# ----------------------------------------------------------------------
+@dataclass
+class MigrationLoadResult:
+    """Aggregate of driving real make-before-break migrations (through the
+    sites' SimulatedEngine planes and ``state_transfer``) under load."""
+    n_sessions: int
+    n_attempts: int
+    migrated: int
+    aborted: int
+    abort_rate: float
+    causes: Dict[str, int]
+    max_interruption_ms: float
+    mean_transfer_ms: float
+    bytes_moved: int
+    outcomes: List[object] = field(default_factory=list)  # MigrationOutcome
+
+
+def simulate_migration_under_load(*, n_sessions: int = 40, rounds: int = 3,
+                                  handover_prob: float = 0.35,
+                                  target_pressure: float = 0.0,
+                                  export_fail_prob: float = 0.0,
+                                  seed: int = 0) -> MigrationLoadResult:
+    """Sessions serve through the sites' planes (their SimulatedEngine state
+    evolves per request) while a mobility process triggers LIVE migrations:
+    each one exports the session's sim state, fingerprint-verifies it into
+    the target plane's backend, and swaps the binding make-before-break —
+    the §V arm exercising the exact abort paths the real engines hit.
+
+    ``target_pressure`` pre-occupies that fraction of every site's decode
+    slots with confirmed leases, so re-paging hits COMPUTE_SCARCITY on
+    PREPARE (target-site admission pressure forcing aborts).
+    ``export_fail_prob`` injects export failures at the source plane.
+    """
+    from repro.core import Orchestrator, default_asp
+    from repro.core.asp import MobilityClass
+    from repro.core.failures import SessionError
+    from repro.serving.state_transfer import TransferInjections
+
+    rng = np.random.default_rng(seed)
+    clock = VirtualClock()
+    orch = Orchestrator(clock=clock)
+    sessions = []
+    for i in range(n_sessions):
+        s = orch.establish(default_asp(mobility=MobilityClass.VEHICULAR),
+                           invoker=f"ue-{i}", zone="zone-a")
+        sessions.append(s)
+
+    if target_pressure > 0.0:
+        model = orch.catalog.get(sessions[0].binding.model_id,
+                                 sessions[0].binding.model_version)
+        for site in orch.sites.values():
+            free = site.spec.decode_slots - site.slots_in_use()
+            take = min(int(site.spec.decode_slots * target_pressure), free)
+            if take > 0:
+                lease = site.prepare(model, slots=take, cache_bytes=0.0,
+                                     ttl_s=1e9)
+                site.confirm(lease.lease_id, lease_s=1e9)
+
+    if export_fail_prob > 0.0:
+        draws = iter(rng.random(4 * n_sessions * rounds + 64))
+
+        def flaky_export(payload):
+            if next(draws) < export_fail_prob:
+                raise IOError("injected export failure")
+
+        inj = TransferInjections(on_export=flaky_export)
+        for site in orch.sites.values():
+            orch.plane_for(site).migration_inject = inj
+
+    outcomes = []
+    handover_draws = rng.random(rounds * n_sessions)
+    for r in range(rounds):
+        for i, s in enumerate(sessions):
+            if not s.committed():
+                continue
+            clock.advance(0.005)
+            orch.heartbeat(s)           # renew leases under virtual time
+            try:
+                orch.serve(s, prompt_tokens=64, gen_tokens=16)
+            except SessionError:
+                continue
+            if handover_draws[r * n_sessions + i] < handover_prob:
+                outcomes.append(orch.migrations.migrate(s, "zone-a"))
+
+    migrated = sum(1 for o in outcomes if o.migrated)
+    aborted = sum(1 for o in outcomes if o.aborted)
+    causes: Dict[str, int] = {}
+    for o in outcomes:
+        if o.cause is not None:
+            causes[o.cause.value] = causes.get(o.cause.value, 0) + 1
+    ok = [o for o in outcomes if o.migrated]
+    return MigrationLoadResult(
+        n_sessions=n_sessions, n_attempts=len(outcomes),
+        migrated=migrated, aborted=aborted,
+        abort_rate=aborted / max(len(outcomes), 1), causes=causes,
+        max_interruption_ms=max((o.interruption_ms for o in outcomes),
+                                default=0.0),
+        mean_transfer_ms=float(np.mean([o.transfer_ms for o in ok]))
+        if ok else 0.0,
+        bytes_moved=sum(o.transfer_bytes for o in ok),
+        outcomes=outcomes)
+
+
+# ----------------------------------------------------------------------
+# payload asymmetry: dense KV vs O(1) SSM state under τ_mig
+# ----------------------------------------------------------------------
+@dataclass
+class PayloadAsymmetryRow:
+    model_id: str
+    family: str
+    context_tokens: int
+    payload_bytes: int
+    transfer_ms: float
+    migrated: bool
+    cause: Optional[str]
+
+
+def simulate_payload_asymmetry(*, context_tokens: Tuple[int, ...] =
+                               (4_096, 32_768, 131_072),
+                               models: Tuple[str, ...] =
+                               ("minitron-8b", "recurrentgemma-2b",
+                                "mamba2-1.3b"),
+                               seed: int = 0) -> List[PayloadAsymmetryRow]:
+    """Migrate long-lived sessions of each payload family at growing context
+    lengths: dense KV grows linearly and blows τ_mig on the inter-site link,
+    hybrid RG-LRU sits in between, SSM state is O(1) in context and always
+    fits — the continuity argument for state-space anchors (§IV-B)."""
+    from repro.core import Orchestrator, default_asp
+    from repro.core.asp import MobilityClass, QualityTier
+    from repro.core.catalog import Catalog, default_catalog
+
+    full = default_catalog()
+    rows: List[PayloadAsymmetryRow] = []
+    for model_id in models:
+        entry = full.get(model_id)
+        for ctx in context_tokens:
+            cat = Catalog()
+            cat.register(entry)
+            orch = Orchestrator(clock=VirtualClock(), catalog=cat)
+            asp = default_asp(mobility=MobilityClass.VEHICULAR,
+                              tier=QualityTier.BASIC)
+            s = orch.establish(asp, invoker=f"ue-{model_id}", zone="zone-a")
+            orch.serve(s, prompt_tokens=64, gen_tokens=16)  # live state
+            s.context_tokens = ctx        # long-lived session fast-forward
+            out = orch.migrations.migrate(s, "zone-a")
+            rows.append(PayloadAsymmetryRow(
+                model_id=model_id, family=entry.cfg.family,
+                context_tokens=ctx,
+                payload_bytes=entry.session_state_bytes(ctx),
+                transfer_ms=out.transfer_ms, migrated=out.migrated,
+                cause=out.cause.value if out.cause else None))
+    return rows

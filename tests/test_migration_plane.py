@@ -1,0 +1,427 @@
+"""Live make-before-break migration through the ServingPlane (tentpole of
+the migration-data-plane PR): mid-stream handover on real engines, the
+plane-level failure-injection points, context-sized PREPARE reservations,
+and deterministic VirtualClock scenario outcomes.
+
+Continuity criterion (§IV-B, Eq. 14): a session mid-decode migrates between
+two plane sites with zero contract-gap time, verified by fingerprint
+equality and bit-exact stream continuation — and EVERY injected failure
+mode aborts without tearing down the source.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import Orchestrator, default_asp
+from repro.core.asp import MobilityClass
+from repro.core.clock import VirtualClock
+from repro.core.failures import FailureCause
+from repro.core.session import SessionState
+from repro.serving.engine import InferenceEngine
+from repro.serving.server import AIaaSServer
+from repro.serving.state_transfer import TransferInjections
+
+
+def mk_server(slots=4, max_len=96):
+    orch = Orchestrator(clock=VirtualClock())
+    return AIaaSServer(orch, "edge-tiny", slots=slots, max_len=max_len), orch
+
+
+def vehicular(orch, name="car"):
+    return orch.establish(default_asp(mobility=MobilityClass.VEHICULAR),
+                          invoker=name, zone="zone-a")
+
+
+class TestMidStreamHandover:
+    """The hard case: the session is DECODING when the anchor swaps."""
+
+    def test_stream_continues_bit_exact_on_target(self):
+        srv, orch = mk_server()
+        s = vehicular(orch)
+        src = s.binding.site_id
+        src_plane = srv.planes[src]
+        prompt = np.arange(9, dtype=np.int32)
+        gen = 12
+
+        # reference: the same stream with NO migration (shared weights)
+        eng = srv.fleet.engine_for(src)
+        ref = InferenceEngine(eng.cfg, params=eng.params, slots=1, max_len=96)
+        pre = ref.prefill_session("ref", prompt)
+        expect = [pre["first_token"]] + \
+            [ref.decode_round()["ref"] for _ in range(gen - 1)]
+
+        srv.submit(s, prompt=prompt, gen_tokens=gen)
+        for _ in range(3):                     # tokens flow on the source
+            src_plane._round()
+
+        out = orch.migrations.migrate(s, "zone-a")
+        assert out.migrated and out.mid_stream
+        assert out.interruption_ms == 0.0      # zero contract-gap time
+        assert out.fingerprint is not None     # verified state transfer
+        assert out.transfer_bytes > 0
+        dst = s.binding.site_id
+        assert dst != src
+
+        # the break: source slot released, occupancy followed the session
+        assert not eng.has_slot(s.session_id)
+        assert srv.fleet.engine_for(dst).has_slot(s.session_id)
+        assert not any(r.session_id == s.session_id
+                       for r in src_plane.scheduler.running.values())
+        dst_plane = srv.planes[dst]
+        assert any(r.session_id == s.session_id
+                   for r in dst_plane.scheduler.running.values())
+
+        # the stream finishes on the TARGET, bit-identical to no-migration
+        dst_plane.drain()
+        results = orch.record_results(orch.sites[dst])
+        mine = [r for r in results if r.session_id == s.session_id]
+        assert len(mine) == 1 and mine[0].failed is None
+        assert mine[0].tokens == gen
+        assert mine[0].token_ids == expect
+        # completion (and charging context) accounted on the target plane
+        assert dst_plane.scheduler.stats.completed >= 1
+        assert len(orch.telemetry[s.session_id]) == 1
+        assert s.context_tokens == len(prompt) + gen
+
+    def test_queued_requests_follow_the_session(self):
+        """A queued (not yet admitted) request of the migrating session must
+        NOT be served at the old anchor: it re-queues on the target."""
+        srv, orch = mk_server()
+        s = vehicular(orch, "car-queued")
+        src = s.binding.site_id
+        src_plane = srv.planes[src]
+        prompt = np.arange(5, dtype=np.int32)
+        srv.submit(s, prompt=prompt, gen_tokens=6)      # running
+        srv.submit(s, prompt=prompt, gen_tokens=4)      # queued (exclusive)
+        assert src_plane.scheduler.queue_depth() == 1
+        src_plane._round()
+
+        out = orch.migrations.migrate(s, "zone-a")
+        assert out.migrated and out.mid_stream
+        dst = s.binding.site_id
+        dst_plane = srv.planes[dst]
+        # nothing of this session remains on the source plane
+        assert src_plane.scheduler.queue_depth() == 0
+        assert not any(r.session_id == s.session_id
+                       for r in src_plane.scheduler.running.values())
+        assert dst_plane.scheduler.queue_depth() == 1
+
+        dst_plane.drain()
+        results = orch.record_results(orch.sites[dst])
+        mine = [r for r in results if r.session_id == s.session_id]
+        assert len(mine) == 2
+        assert sorted(r.tokens for r in mine) == [4, 6]
+        assert all(r.failed is None for r in mine)
+        # both served by the TARGET engine; source engine holds nothing
+        assert not srv.fleet.engine_for(src).has_slot(s.session_id)
+
+    def test_abort_resumes_stream_on_source(self):
+        """A mid-stream abort re-attaches the in-flight request: the stream
+        completes on the SOURCE as if migration was never attempted."""
+        srv, orch = mk_server()
+        s = vehicular(orch, "car-abort")
+        src = s.binding.site_id
+        src_plane = srv.planes[src]
+        prompt = np.arange(7, dtype=np.int32)
+        gen = 10
+
+        eng = srv.fleet.engine_for(src)
+        ref = InferenceEngine(eng.cfg, params=eng.params, slots=1, max_len=96)
+        pre = ref.prefill_session("ref", prompt)
+        expect = [pre["first_token"]] + \
+            [ref.decode_round()["ref"] for _ in range(gen - 1)]
+
+        srv.submit(s, prompt=prompt, gen_tokens=gen)
+        for _ in range(2):
+            src_plane._round()
+
+        def boom(payload):
+            raise IOError("injected export failure")
+
+        src_plane.migration_inject = TransferInjections(on_export=boom)
+        out = orch.migrations.migrate(s, "zone-a")
+        assert out.aborted
+        assert out.cause is FailureCause.STATE_TRANSFER_FAILURE
+        assert s.committed() and s.binding.site_id == src
+        assert eng.has_slot(s.session_id)
+
+        src_plane.migration_inject = None
+        src_plane.drain()
+        results = orch.record_results(orch.sites[src])
+        mine = [r for r in results if r.session_id == s.session_id]
+        assert len(mine) == 1 and mine[0].tokens == gen
+        assert mine[0].token_ids == expect
+
+
+class TestFailureInjection:
+    """Every plane-level failure mode must abort leaving: the source slot
+    intact, the session COMMITTED on the source, and the target's
+    provisional leases (and any provisionally imported state) rolled back."""
+
+    def _armed(self):
+        srv, orch = mk_server()
+        s = vehicular(orch, "car-inj")
+        eng = srv.fleet.engine_for(s.binding.site_id)
+        eng.prefill_session(s.session_id, np.arange(9, dtype=np.int32))
+        slots_before = {sid: site.slots_in_use()
+                        for sid, site in orch.sites.items()}
+        return srv, orch, s, eng, slots_before
+
+    def _assert_clean_abort(self, orch, srv, s, eng, slots_before, out,
+                            cause):
+        src = s.binding.site_id
+        assert out.aborted and not out.migrated
+        assert out.cause is cause
+        assert out.to_site is None
+        assert out.interruption_ms == 0.0
+        # session still COMMITTED on the source, slot intact
+        assert s.state is SessionState.COMMITTED
+        assert s.committed() and s.binding.site_id == src
+        assert eng.has_slot(s.session_id)
+        # target leases rolled back (no slots leaked anywhere)
+        after = {sid: site.slots_in_use() for sid, site in orch.sites.items()}
+        assert after == slots_before, "provisional target leases leaked"
+        # no provisional state left on ANY other site's backend
+        for sid, plane in srv.planes.items():
+            if sid != src:
+                assert not plane.backend.has_slot(s.session_id)
+
+    def _inject(self, srv, s, side, inj):
+        src = s.binding.site_id
+        for sid, plane in srv.planes.items():
+            if (side == "src") == (sid == src):
+                plane.migration_inject = inj
+
+    def test_export_failure(self):
+        srv, orch, s, eng, before = self._armed()
+
+        def boom(payload):
+            raise IOError("injected export failure")
+
+        self._inject(srv, s, "src", TransferInjections(on_export=boom))
+        out = orch.migrations.migrate(s, "zone-a")
+        self._assert_clean_abort(orch, srv, s, eng, before, out,
+                                 FailureCause.STATE_TRANSFER_FAILURE)
+
+    def test_import_failure_rolls_back_target_state(self):
+        srv, orch, s, eng, before = self._armed()
+
+        def boom(payload):
+            raise IOError("injected import failure")
+
+        self._inject(srv, s, "dst", TransferInjections(on_import=boom))
+        out = orch.migrations.migrate(s, "zone-a")
+        self._assert_clean_abort(orch, srv, s, eng, before, out,
+                                 FailureCause.STATE_TRANSFER_FAILURE)
+
+    def test_fingerprint_corruption(self):
+        srv, orch, s, eng, before = self._armed()
+
+        def corrupt(payload):
+            payload = dict(payload)
+            payload["position"] = payload["position"] + 1
+            return payload
+
+        self._inject(srv, s, "src", TransferInjections(corrupt=corrupt))
+        out = orch.migrations.migrate(s, "zone-a")
+        self._assert_clean_abort(orch, srv, s, eng, before, out,
+                                 FailureCause.STATE_TRANSFER_FAILURE)
+
+    def test_target_admission_denial_injected(self):
+        srv, orch, s, eng, before = self._armed()
+        self._inject(srv, s, "dst",
+                     TransferInjections(deny_admission=True))
+        out = orch.migrations.migrate(s, "zone-a")
+        self._assert_clean_abort(orch, srv, s, eng, before, out,
+                                 FailureCause.COMPUTE_SCARCITY)
+
+    def test_target_admission_denial_real_slot_exhaustion(self):
+        """Target engines genuinely full (not injected): import_slot raises
+        and the abort maps to COMPUTE_SCARCITY."""
+        srv, orch = mk_server(slots=2, max_len=64)
+        s = vehicular(orch, "car-full")
+        src = s.binding.site_id
+        eng = srv.fleet.engine_for(src)
+        eng.prefill_session(s.session_id, np.arange(5, dtype=np.int32))
+        for sid in srv.planes:
+            if sid != src:
+                other = srv.fleet.engine_for(sid)
+                for k in range(2):
+                    other.prefill_session(f"hog-{sid}-{k}",
+                                          np.arange(5, dtype=np.int32))
+        before = {sid: site.slots_in_use()
+                  for sid, site in orch.sites.items()}
+        out = orch.migrations.migrate(s, "zone-a")
+        self._assert_clean_abort(orch, srv, s, eng, before, out,
+                                 FailureCause.COMPUTE_SCARCITY)
+        # the hogs were untouched by the rollback
+        for sid in srv.planes:
+            if sid != src:
+                assert srv.fleet.engine_for(sid).free_slots() == 0
+
+    def test_tau_mig_expiry_mid_transfer(self):
+        srv, orch, s, eng, before = self._armed()
+        self._inject(srv, s, "src",
+                     TransferInjections(extra_wire_s=orch.timers.tau_mig * 5))
+        out = orch.migrations.migrate(s, "zone-a")
+        self._assert_clean_abort(orch, srv, s, eng, before, out,
+                                 FailureCause.STATE_TRANSFER_FAILURE)
+
+
+class TestSimArmMigration:
+    """The §V VirtualClock arm migrates REAL (simulated-engine) state."""
+
+    def test_sim_state_follows_session(self):
+        from repro.serving import state_transfer
+        orch = Orchestrator(clock=VirtualClock())
+        s = vehicular(orch, "sim-ue")
+        orch.serve(s, prompt_tokens=64, gen_tokens=16)
+        src = s.binding.site_id
+        src_backend = orch.plane_for(orch.sites[src]).backend
+        assert src_backend.has_slot(s.session_id)
+        fp0 = state_transfer.fingerprint(
+            src_backend.export_slot(s.session_id))
+        out = orch.migrations.migrate(s, "zone-a")
+        assert out.migrated and out.interruption_ms == 0.0
+        assert out.fingerprint == fp0
+        dst_backend = orch.plane_for(orch.sites[s.binding.site_id]).backend
+        assert dst_backend.has_slot(s.session_id)
+        assert not src_backend.has_slot(s.session_id)
+        fp1 = state_transfer.fingerprint(
+            dst_backend.export_slot(s.session_id))
+        assert fp1 == fp0
+
+    def test_release_frees_backend_session_state(self):
+        """Orchestrator.release drops the anchor backend's serialized
+        session state along with the leases (no unbounded growth)."""
+        orch = Orchestrator(clock=VirtualClock())
+        s = vehicular(orch, "sim-release")
+        orch.serve(s, prompt_tokens=64, gen_tokens=16)
+        backend = orch.plane_for(orch.sites[s.binding.site_id]).backend
+        assert backend.has_slot(s.session_id)
+        orch.release(s)
+        assert not backend.has_slot(s.session_id)
+
+    def test_sim_plane_injection_aborts(self):
+        orch = Orchestrator(clock=VirtualClock())
+        s = vehicular(orch, "sim-inj")
+        orch.serve(s, prompt_tokens=64, gen_tokens=16)
+        src = s.binding.site_id
+        for sid, site in orch.sites.items():
+            if sid != src:
+                orch.plane_for(site).migration_inject = \
+                    TransferInjections(deny_admission=True)
+        out = orch.migrations.migrate(s, "zone-a")
+        assert out.aborted and out.cause is FailureCause.COMPUTE_SCARCITY
+        assert s.committed() and s.binding.site_id == src
+        assert orch.plane_for(orch.sites[src]).backend.has_slot(s.session_id)
+
+
+class TestContextSizedPrepare:
+    """Regression: migrate() must size the PREPARE cache reservation and
+    transfer payload from the session's ACTUAL context length, not a
+    hardcoded 2048."""
+
+    def test_prepare_reservation_tracks_served_context(self):
+        orch = Orchestrator(clock=VirtualClock())
+        s = vehicular(orch, "ctx-ue")
+        orch.serve(s, prompt_tokens=300, gen_tokens=100)
+        assert s.context_tokens == 400
+        out = orch.migrations.migrate(s, "zone-a")
+        assert out.migrated
+        model = orch.catalog.get(s.binding.model_id, s.binding.model_version)
+        lease = orch.sites[s.binding.site_id]._leases[
+            s.binding.compute_lease_id]
+        assert lease.hbm_bytes == model.session_state_bytes(400)
+        assert lease.hbm_bytes != model.session_state_bytes(2048)
+
+    def test_default_transfer_scales_with_context(self):
+        orch = Orchestrator(clock=VirtualClock())
+        s = vehicular(orch, "ctx-wire")
+        ctrl = orch.migrations
+        short = ctrl._default_transfer(s, None, None, context_tokens=256)
+        long = ctrl._default_transfer(s, None, None, context_tokens=8192)
+        assert long > short > 0.0
+
+    def test_transfer_wire_time_tracks_context(self):
+        """The modeled wire time of the plane path grows with the served
+        context (the payload is not a constant)."""
+        outs = []
+        for p, g in ((64, 16), (2048, 512)):
+            orch = Orchestrator(clock=VirtualClock())
+            s = vehicular(orch, f"ctx-{p}")
+            orch.serve(s, prompt_tokens=p, gen_tokens=g)
+            outs.append(orch.migrations.migrate(s, "zone-a"))
+        assert all(o.migrated for o in outs)
+        assert outs[1].transfer_ms > outs[0].transfer_ms
+
+
+class TestDeterministicOutcomes:
+    """Same trace + seed ⇒ byte-identical MigrationOutcome sequences (CI
+    reproducibility). Session ids are the only process-global state, so the
+    test pins the counter the way two fresh CI processes would see it."""
+
+    def _run(self, seed):
+        import repro.core.session as session_mod
+        session_mod._ids = itertools.count(50_000)
+        from repro.sim import simulate_migration_under_load
+        return simulate_migration_under_load(
+            n_sessions=16, rounds=2, handover_prob=0.5,
+            export_fail_prob=0.25, seed=seed)
+
+    def test_same_seed_identical_outcomes(self):
+        a = self._run(seed=11)
+        b = self._run(seed=11)
+        assert len(a.outcomes) > 0
+        assert a.outcomes == b.outcomes          # dataclass field equality
+        assert a.causes == b.causes
+        assert a.bytes_moved == b.bytes_moved
+
+    def test_different_seed_differs(self):
+        a = self._run(seed=11)
+        c = self._run(seed=12)
+        assert a.outcomes != c.outcomes
+
+
+class TestMigrationScenarios:
+    def test_under_load_all_make_before_break(self):
+        from repro.sim import simulate_migration_under_load
+        r = simulate_migration_under_load(n_sessions=24, rounds=2,
+                                          handover_prob=0.5, seed=0)
+        assert r.n_attempts > 5
+        assert r.abort_rate == 0.0
+        assert r.max_interruption_ms == 0.0
+        assert r.bytes_moved > 0
+
+    def test_target_pressure_forces_clean_aborts(self):
+        from repro.sim import simulate_migration_under_load
+        r = simulate_migration_under_load(n_sessions=10, rounds=2,
+                                          handover_prob=0.9,
+                                          target_pressure=1.0, seed=1)
+        assert r.n_attempts > 0
+        assert r.abort_rate == 1.0
+        assert set(r.causes) == {"compute scarcity"}
+        assert r.max_interruption_ms == 0.0      # aborts gap nothing
+
+    def test_payload_asymmetry_ssm_always_fits(self):
+        from repro.sim import simulate_payload_asymmetry
+        rows = simulate_payload_asymmetry(
+            context_tokens=(4_096, 131_072),
+            models=("minitron-8b", "mamba2-1.3b"))
+        dense = [r for r in rows if r.family == "dense"]
+        ssm = [r for r in rows if r.family == "ssm"]
+        # dense KV grows with context and eventually blows τ_mig
+        assert dense[0].migrated and not dense[1].migrated
+        assert dense[1].cause == "state transfer failure"
+        # SSM state is O(1) in context: same payload, always migrates
+        assert all(r.migrated for r in ssm)
+        assert ssm[0].payload_bytes == ssm[1].payload_bytes
+
+    def test_mobility_mbb_plane_mechanism(self):
+        from repro.sim import simulate_mobility
+        r = simulate_mobility(90, "mbb-plane", n_sessions=6,
+                              transfer_fail_prob=0.2)
+        assert r.mechanism == "mbb-plane"
+        assert r.interruption_prob == 0.0        # aborts keep the source

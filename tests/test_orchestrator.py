@@ -89,9 +89,18 @@ class TestRealEngineIntegration:
         prompt = np.arange(12, dtype=np.int32)
         eng.prefill_session(s.session_id, prompt)
         pre_tok = [eng.decode_round()[s.session_id] for _ in range(3)]
+        # oracle: continuation the SOURCE would produce, captured on a probe
+        # engine before the swap (the source slot is released at commit)
+        from repro.serving import state_transfer
+        from repro.serving.engine import InferenceEngine
+        probe = InferenceEngine(eng.cfg, params=eng.params, slots=1,
+                                max_len=96)
+        state_transfer.transfer(eng, probe, s.session_id)
+        src_would = [probe.decode_round()[s.session_id] for _ in range(3)]
         out = orch.migrations.migrate(s, "zone-a")
         assert out.migrated and s.committed()
+        assert not eng.has_slot(s.session_id), \
+            "source slot must be released after the MBB swap"
         dst = server.fleet.engine_for(s.binding.site_id)
         post = [dst.decode_round()[s.session_id] for _ in range(3)]
-        src_would = [eng.decode_round()[s.session_id] for _ in range(3)]
         assert post == src_would, "state transfer changed generation"
