@@ -40,7 +40,7 @@ def main() -> None:
     n_req = 4000 if args.fast else 20_000
     n_sess = 15 if args.fast else 40
 
-    from benchmarks import migration_bench, plane_bench  # noqa: E402
+    from benchmarks import gateway_bench, migration_bench, plane_bench  # noqa: E402
     benches = [
         ("fig2_p99_vs_load",
          lambda: figures.fig2_p99_vs_load(n_requests=n_req)),
@@ -51,6 +51,9 @@ def main() -> None:
         ("table1_requirements", figures.table1_requirements),
         ("plane_throughput",
          lambda: plane_bench.figure_rows(n_requests=n_req)),
+        ("gateway_overhead",
+         lambda: gateway_bench.figure_rows(
+             n_requests=400 if args.fast else 2000)),
         ("migration_continuity",
          lambda: migration_bench.figure_rows(
              n_sessions=3 if args.fast else 10)),

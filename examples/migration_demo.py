@@ -1,13 +1,16 @@
-"""Make-before-break migration with REAL state transfer.
+"""Make-before-break migration with REAL state transfer, driven and
+observed through the northbound session API.
 
     PYTHONPATH=src python examples/migration_demo.py
 
-A vehicular session decodes on an edge engine; mid-generation the session is
-migrated to another site (KV cache exported → fingerprint-verified →
-imported; target committed BEFORE source release), and generation continues
-bit-identically. Also demonstrates the abort path: an injected transfer
-failure leaves the source binding committed (the session never leaves the
-Committed(t) domain).
+A vehicular session decodes on an edge engine; a heartbeat with tightened
+Eq. (14) trigger thresholds fires a LIVE migration to another site (KV
+cache exported → fingerprint-verified → imported; target committed BEFORE
+source release), generation continues bit-identically, and the invoker is
+notified with a migration SessionEvent on its subscription. Also
+demonstrates the abort path: an injected transfer failure leaves the source
+binding committed (the session never leaves the Committed(t) domain) and
+surfaces its Eq. (12) cause on the wire.
 """
 
 import sys
@@ -16,6 +19,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
+from repro.api.client import SessionClient
 from repro.core import Orchestrator, default_asp
 from repro.core.asp import MobilityClass
 from repro.core.clock import VirtualClock
@@ -28,17 +32,19 @@ def main():
     orch = Orchestrator(clock=clock)
     server = AIaaSServer(orch, "edge-tiny", slots=4, max_len=128)
     asp = default_asp(mobility=MobilityClass.VEHICULAR)
-    session = orch.establish(asp, invoker="car-7", zone="zone-a")
-    src_site = session.binding.site_id
-    print(f"session {session.session_id} committed at {src_site}")
+    client = SessionClient(server.gateway, asp, invoker="car-7",
+                           zone="zone-a").establish()
+    session = orch.sessions[client.session_id]
+    src_site = client.record["anchor"]
+    print(f"session {client.session_id} committed at {src_site}")
 
-    # start generating on the source engine
+    # start generating on the source engine (data-plane view of the stream)
     eng_src = server.fleet.engine_for(src_site)
     prompt = np.arange(16, dtype=np.int32)
-    pre = eng_src.prefill_session(session.session_id, prompt)
+    pre = eng_src.prefill_session(client.session_id, prompt)
     toks = [pre["first_token"]]
     for _ in range(5):
-        toks.append(eng_src.decode_round()[session.session_id])
+        toks.append(eng_src.decode_round()[client.session_id])
     print(f"generated on source: {toks}")
 
     # oracle: what the NEXT 5 tokens would be without migration — captured
@@ -46,22 +52,28 @@ def main():
     # commit, so the source can't be replayed afterwards)
     probe = type(eng_src)(eng_src.cfg, params=eng_src.params, slots=2,
                           max_len=128)
-    state_transfer.transfer(eng_src, probe, session.session_id)
-    src_cont = [probe.decode_round()[session.session_id] for _ in range(5)]
+    state_transfer.transfer(eng_src, probe, client.session_id)
+    src_cont = [probe.decode_round()[client.session_id] for _ in range(5)]
 
-    # make-before-break migration through the control plane
-    out = orch.migrations.migrate(session, "zone-a")
-    print(f"migration: migrated={out.migrated} {out.from_site} → {out.to_site} "
-          f"interruption={out.interruption_ms:.1f}ms "
-          f"transfer={out.transfer_ms:.2f}ms")
+    # make-before-break migration, fired northbound: a heartbeat with
+    # δ = δ' = 0 makes the Eq. (14) risk check trigger unconditionally
+    ack = client.heartbeat(trigger_l99=0.0, trigger_ttfb=0.0)
+    out = ack.migration
+    print(f"migration: migrated={out['migrated']} {out['from_site']} → "
+          f"{out['to_site']} interruption={out['interruption_ms']:.1f}ms "
+          f"transfer={out['transfer_ms']:.2f}ms")
     assert session.committed(), "never left the committed domain"
+    events = [e for e in client.events() if e.event == "migration"]
+    assert events and events[0].detail["to_site"] == out["to_site"]
+    print(f"invoker notified: SessionEvent(migration) → "
+          f"anchor now {client.anchor}")
 
-    dst = server.fleet.engine_for(session.binding.site_id)
-    cont = [dst.decode_round()[session.session_id] for _ in range(5)]
+    dst = server.fleet.engine_for(client.anchor)
+    cont = [dst.decode_round()[client.session_id] for _ in range(5)]
     print(f"continued on target:   {cont}")
     print(f"source would have said: {src_cont}")
     assert cont == src_cont, "migration changed the generation!"
-    assert not eng_src.has_slot(session.session_id), \
+    assert not eng_src.has_slot(client.session_id), \
         "source slot must be released after the swap"
     print("bit-identical continuation ✓ (make-before-break preserved state, "
           "source slot released)")
@@ -73,9 +85,10 @@ def main():
         raise SessionError(FailureCause.STATE_TRANSFER_FAILURE, "injected")
 
     orch.migrations.transfer_fn = always_fail
-    out2 = orch.migrations.migrate(session, "zone-a")
-    print(f"\ninjected failure: migrated={out2.migrated} "
-          f"cause={out2.cause.value} — still committed: {session.committed()}")
+    ack2 = client.heartbeat(trigger_l99=0.0, trigger_ttfb=0.0)
+    out2 = ack2.migration
+    print(f"\ninjected failure: migrated={out2['migrated']} "
+          f"cause={out2['cause']} — still committed: {session.committed()}")
 
 
 if __name__ == "__main__":

@@ -1,69 +1,75 @@
-"""Quickstart: establish an AI Session and serve requests through it.
+"""Quickstart: establish an AI Session over the northbound API and stream
+generations through it.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Walks the full NE-AIaaS lifecycle on a laptop: an ASP with measurable
-objectives → DISCOVER (annotated candidates) → AI PAGING (risk-minimising
-anchor) → atomic PREPARE/COMMIT → SERVE with boundary telemetry →
-compliance report (Eq. 5/16) → consent revocation (Eq. 6) → release.
+Walks the full NE-AIaaS lifecycle the way a remote application-service-
+provider would — every step a JSON message through the NorthboundGateway:
+DISCOVER (annotated candidates) → AI PAGING (risk-minimising anchor) →
+idempotent PREPARE/COMMIT → streaming SERVE with boundary telemetry →
+compliance report (Eq. 5/16) → consent revocation (Eq. 6, typed error) →
+release.
 """
 
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import Orchestrator, default_asp, SessionError
+from repro.api import NorthboundGateway, SessionClient, ConsentRevoked
+from repro.core import default_asp
 from repro.core.asp import MobilityClass
 from repro.core.clock import VirtualClock
-from repro.core.discovery import discover
 
 
 def main():
-    clock = VirtualClock()
-    orch = Orchestrator(clock=clock)
+    gw = NorthboundGateway(clock=VirtualClock())
     asp = default_asp(mobility=MobilityClass.NOMADIC)
     print(f"ASP digest {asp.digest()}  objectives: ttfb≤{asp.objectives.ttfb_ms}ms "
           f"p99≤{asp.objectives.p99_ms}ms ρ≥{asp.objectives.rho_min} "
           f"T_max={asp.objectives.t_max_ms}ms")
 
-    # 1. DISCOVER — annotated candidate set 𝒦 (Eq. 7/8)
-    cands = discover(asp, orch.catalog, orch.sites, orch.predictors, "zone-a",
-                     analytics=orch.analytics)
-    print("\nDISCOVER: top candidates by slack Δ(m,e):")
-    for c in [c for c in cands if c.admissible][:5]:
-        p = c.prediction
-        print(f"  {c.model.model_id:22s} @ {c.site_id:10s} "
-              f"T̂ff={p.t_ff_ms:7.1f}ms L̂99={p.l99_ms:7.1f}ms "
-              f"Γ̂={p.cost_per_1k:.3f}/1k Δ={c.slack:8.1f}")
+    client = SessionClient(gw, asp, invoker="alice", zone="zone-a")
+    with client:
+        # 1. DISCOVER ran as its own wire message — annotated 𝒦 (Eq. 7/8)
+        print("\nDISCOVER: top candidates by slack Δ(m,e):")
+        for c in [c for c in client.candidates if c["admissible"]][:5]:
+            print(f"  {c['model_id']:22s} @ {c['site_id']:10s} "
+                  f"class={c['klass']:11s} Δ={c['slack']:8.1f}")
 
-    # 2-4. PAGE + PREPARE/COMMIT (atomic co-reservation)
-    session = orch.establish(asp, invoker="alice", zone="zone-a")
-    rec = session.record()
-    print(f"\nAIS {rec['session_id']} COMMITTED: model={rec['model']} "
-          f"anchor={rec['anchor']} qfi={rec['qfi']}")
-    print(f"  Committed(t) = v_cmp ∧ v_qos = {session.committed()}")
+        # 2-4. PAGE + idempotent PREPARE/COMMIT happened inside establish()
+        rec = client.record
+        print(f"\nAIS {rec['session_id']} COMMITTED: model={rec['model']} "
+              f"anchor={rec['anchor']} qfi={rec['qfi']}")
 
-    # 5. SERVE with boundary telemetry
-    for i in range(20):
-        orch.serve(session, prompt_tokens=256, gen_tokens=48)
-    rep = orch.compliance(session)
-    z = rep.z
-    print(f"\nSERVE ×20 → Z(t): ttfb={z.t_ff_ms:.1f}ms q95={z.q95_ms:.1f}ms "
-          f"q99={z.q99_ms:.1f}ms ρ̂={z.rho:.3f} ν̂={z.nu_tokens_per_s:.1f} tok/s")
-    print(f"  in compliance with ASP: {rep.in_compliance}")
-    charge = orch.policy.charging(session.charging_ref)
-    print(f"  metered: {charge.tokens} tokens, cost {charge.cost:.4f} "
-          f"(session-scoped accounting, R8)")
+        # 5. streaming SERVE: chunk-by-chunk over the wire
+        stream = client.generate(prompt_tokens=256, gen_tokens=48)
+        n = sum(1 for _ in stream)
+        print(f"\nfirst generation streamed {n} chunks "
+              f"(ttfb={stream.complete.ttfb_ms:.1f}ms "
+              f"latency={stream.complete.latency_ms:.1f}ms)")
+        for _ in range(19):
+            list(client.generate(prompt_tokens=256, gen_tokens=48))
+        rep = client.compliance()
+        z = rep.z
+        print(f"SERVE ×20 → Z(t): ttfb={z['t_ff_ms']:.1f}ms "
+              f"q95={z['q95_ms']:.1f}ms q99={z['q99_ms']:.1f}ms "
+              f"ρ̂={z['rho']:.3f} ν̂={z['nu_tokens_per_s']:.1f} tok/s")
+        print(f"  in compliance with ASP: {rep.in_compliance}")
 
-    # 6. consent revocation ⇒ ServeDisabled (Eq. 6)
-    orch.policy.revoke(session.authz_ref)
-    try:
-        orch.serve(session)
-    except SessionError as e:
-        print(f"\nafter revocation: serve denied with cause "
-              f"'{e.cause.value}' (Eq. 6 holds)")
-    orch.release(session)
-    print(f"released: state={session.state.value}")
+        # lifecycle notifications delivered on the invoker's subscription
+        print("  events:", [e.state or e.event for e in client.events()])
+
+        # 6. consent revocation ⇒ ServeDisabled (Eq. 6) as a TYPED error
+        gw.orch.policy.revoke(gw.orch.sessions[client.session_id].authz_ref)
+        try:
+            list(client.generate())
+        except ConsentRevoked as e:
+            print(f"\nafter revocation: serve denied with code {e.code} "
+                  f"cause '{e.cause.value}' (Eq. 6 holds)")
+        ack = client.release()
+        print(f"released: state={ack.state} "
+              f"metered {ack.tokens} tokens, cost {ack.total_cost:.4f} "
+              f"(session-scoped accounting, R8)")
 
 
 if __name__ == "__main__":

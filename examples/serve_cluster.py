@@ -1,10 +1,12 @@
-"""End-to-end serving driver: REAL model, batched requests, QoS scheduling.
+"""End-to-end serving driver: REAL model, batched requests, QoS scheduling,
+driven through the northbound session API.
 
     PYTHONPATH=src python examples/serve_cluster.py [--requests 24]
 
 Runs the edge-tiny LM on actual engines at every execution site (continuous
 batching with per-slot positions), establishes AI Sessions for a mix of
-premium/best-effort invokers, pushes batched requests through the per-site
+premium/best-effort invokers — each one a SessionClient speaking JSON to
+the NorthboundGateway — pushes batched requests through the per-site
 QoS-scheduled ServingPlanes (class-ordered admission, premium reservation,
 deadline fast-fail), and prints per-class boundary telemetry — the
 end-to-end driver for the paper's serving scenario.
@@ -20,6 +22,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.api.client import SessionClient
 from repro.core import Orchestrator, default_asp
 from repro.core.asp import QualityTier
 from repro.core.clock import Clock
@@ -48,23 +51,21 @@ def main():
     server = AIaaSServer(orch, "edge-tiny", slots=args.slots, max_len=192)
     rng = np.random.default_rng(0)
 
-    # establish sessions: premium tier and basic tier invokers
-    sessions = {}
+    # establish sessions northbound: premium tier and basic tier invokers
+    clients = []
     for i in range(6):
         tier = QualityTier.PREMIUM if i % 2 == 0 else QualityTier.BASIC
-        asp = cpu_scaled_asp(tier)
-        s = orch.establish(asp, invoker=f"ue-{i}", zone="zone-a")
-        sessions[s.session_id] = s
-        print(f"established {s.session_id} tier={tier.name} "
-              f"anchor={s.binding.site_id} qfi={s.binding.qfi}")
+        c = SessionClient(server.gateway, cpu_scaled_asp(tier),
+                          invoker=f"ue-{i}", zone="zone-a").establish()
+        clients.append((c, tier))
+        print(f"established {c.session_id} tier={tier.name} "
+              f"anchor={c.record['anchor']} qfi={c.record['qfi']}")
 
-    # submit a burst of requests through the per-site serving planes —
-    # the planes decide admission order (premium first, reserved share)
-    sids = list(sessions)
+    # submit a burst of requests through the northbound API — the per-site
+    # planes decide admission order (premium first, reserved share)
     for r in range(args.requests):
-        sid = sids[r % len(sids)]
-        server.submit(sessions[sid],
-                      prompt_tokens=int(rng.integers(8, 48)), gen_tokens=8)
+        c, _ = clients[r % len(clients)]
+        c.submit(prompt_tokens=int(rng.integers(8, 48)), gen_tokens=8)
 
     t0 = time.perf_counter()
     results = server.drain()
@@ -79,12 +80,13 @@ def main():
                 print(f"  {plane.site_id}/{klass:12s} "
                       f"admitted={len(waits):3d} "
                       f"mean wait={np.mean(waits):7.2f}ms")
-    for sid, s in sessions.items():
-        rep = orch.compliance(s)
-        if rep:
-            print(f"  {sid} tier={s.asp.tier.name:8s} q99={rep.z.q99_ms:8.1f}ms "
-                  f"ρ̂={rep.z.rho:.2f} compliant={rep.in_compliance}")
-        orch.release(s)
+    for c, tier in clients:
+        rep = c.compliance()
+        if rep.n:
+            print(f"  {c.session_id} tier={tier.name:8s} "
+                  f"q99={rep.z['q99_ms']:8.1f}ms "
+                  f"ρ̂={rep.z['rho']:.2f} compliant={rep.in_compliance}")
+        c.release()
 
 
 if __name__ == "__main__":

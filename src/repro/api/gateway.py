@@ -1,0 +1,493 @@
+"""NorthboundGateway — the single CAPIF-style entry point to the AIS
+lifecycle.
+
+Everything an invoker can do goes through :meth:`handle` (typed messages)
+or :meth:`handle_json` (the actual wire): DISCOVER / AI-PAGING / PREPARE /
+COMMIT stepwise, streaming or async SERVE, HEARTBEAT (with Eq. 14 trigger
+overrides), COMPLIANCE, RELEASE, and per-invoker event subscriptions that
+surface state transitions and migration outcomes as
+:class:`~repro.api.messages.SessionEvent` notifications.
+
+Gateway guarantees on top of the orchestrator:
+
+* **schema-version negotiation** — messages (and the embedded ASP record)
+  whose major version disagrees with the gateway's are refused with
+  ``E_SCHEMA_VERSION`` before touching any lifecycle state;
+* **idempotent PREPARE/COMMIT** — a retried request with the same
+  ``idempotency_key`` returns the original outcome (success *or* error)
+  instead of reserving twice; the same key with a different payload is an
+  ``E_IDEMPOTENCY_CONFLICT``;
+* **structured failure semantics** — every ``SessionError`` maps onto its
+  distinct Eq. (12) error code (:data:`~repro.api.messages.ERROR_CODE_TABLE`);
+  gateway-layer refusals use disjoint codes.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Callable, Deque, Dict, Iterator, List, Optional, Tuple, Union
+
+from repro.api import messages as m
+from repro.core.asp import SchemaVersionError
+from repro.core.failures import SessionError
+from repro.core.migration import MigrationTriggers
+from repro.core.orchestrator import Orchestrator
+from repro.core.session import AISession
+
+Reply = Union[m.Message, List[m.Message]]
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Establishment state between stepwise procedures. The stored
+    responses make keyless PAGE/PREPARE retries replay-safe: a duplicate
+    (response lost in transport) returns the original outcome instead of
+    tripping the state machine into FAILED."""
+    session: AISession
+    candidates: Optional[list] = None
+    chosen: object = None
+    prepared: object = None
+    page_response: Optional[m.PageResponse] = None
+    prepare_response: Optional[m.PrepareResponse] = None
+
+
+class NorthboundGateway:
+    def __init__(self, orch: Optional[Orchestrator] = None, *, clock=None,
+                 event_queue_len: int = 1024,
+                 completion_buffer_len: int = 1 << 20,
+                 idempotency_window: int = 4096,
+                 establishment_window: int = 4096):
+        self.orch = orch if orch is not None else Orchestrator(clock=clock)
+        self.orch.result_sinks.append(self._on_result)
+        self._pending: Dict[str, _Pending] = {}
+        self._prepared_refs: Dict[str, str] = {}     # ref -> session_id
+        #: bounded retry window: oldest keys age out so a long-lived
+        #: gateway does not grow with total session count
+        self._idem: "collections.OrderedDict[str, Tuple[str, Reply]]" = \
+            collections.OrderedDict()
+        self._idempotency_window = idempotency_window
+        #: abandoned-handshake bound: oldest in-flight establishments are
+        #: evicted past the window (their provisional 2PC leases expire by
+        #: TTL on the resource planes regardless)
+        self._establishment_window = establishment_window
+        self._subs: Dict[str, Deque[m.SessionEvent]] = {}
+        #: async completions are buffered ONLY for requests that entered
+        #: through submit() — unary serves (gateway or direct orchestrator
+        #: callers) return their result inline and must not reappear here
+        self._async_pending: set = set()
+        self._completions: Deque[m.ServeComplete] = collections.deque(
+            maxlen=completion_buffer_len)
+        self._refs = itertools.count(1)
+        self._event_queue_len = event_queue_len
+
+    # ------------------------------------------------------------------
+    # wire entry points
+    # ------------------------------------------------------------------
+    def handle_json(self, payload: str) -> Union[str, List[str]]:
+        """The actual northbound wire: JSON in, JSON out (a streaming
+        request returns a list of JSON frames, chunks then completion)."""
+        try:
+            msg = m.from_json(payload)
+        except SchemaVersionError as e:
+            return m.ErrorResponse("E_SCHEMA_VERSION",
+                                   detail=str(e)).to_json()
+        except ValueError as e:
+            return m.ErrorResponse("E_BAD_REQUEST",
+                                   detail=str(e)).to_json()
+        except (TypeError, KeyError) as e:
+            return m.ErrorResponse("E_BAD_REQUEST",
+                                   detail=repr(e)).to_json()
+        out = self.handle(msg)
+        if isinstance(out, list):
+            return [o.to_json() for o in out]
+        return out.to_json()
+
+    def handle(self, msg: m.Message) -> Reply:
+        """Typed dispatch (the JSON path normalizes into here)."""
+        ver = getattr(msg, "schema_version", m.SCHEMA_VERSION)
+        if str(ver).split(".")[0] != m.SCHEMA_VERSION.split(".")[0]:
+            return m.ErrorResponse(
+                "E_SCHEMA_VERSION",
+                detail=f"protocol {ver!r} incompatible with gateway "
+                       f"{m.SCHEMA_VERSION!r}")
+        handler = self._DISPATCH.get(type(msg))
+        if handler is None:
+            return m.ErrorResponse(
+                "E_BAD_REQUEST",
+                detail=f"{msg.TYPE!r} is not an invoker-initiated message")
+        try:
+            return handler(self, msg)
+        except _Unknown as e:
+            return m.ErrorResponse("E_UNKNOWN_SESSION", detail=str(e),
+                                   session_id=e.session_id)
+        except SessionError as e:
+            return m.ErrorResponse.from_session_error(
+                e, session_id=getattr(msg, "session_id", None))
+        except Exception as e:                       # noqa: BLE001
+            return m.ErrorResponse(
+                "E_INTERNAL", detail=f"{type(e).__name__}: {e}",
+                session_id=getattr(msg, "session_id", None))
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _session(self, session_id: str) -> AISession:
+        s = self.orch.sessions.get(session_id)
+        if s is None:
+            raise _Unknown(session_id)
+        return s
+
+    def _emit(self, session: AISession, event: str, *,
+              state: Optional[str] = None, detail: Optional[dict] = None
+              ) -> None:
+        q = self._subs.get(session.invoker)
+        if q is None:
+            return
+        q.append(m.SessionEvent(
+            session_id=session.session_id, event=event,
+            state=state if state is not None else session.state.value,
+            detail=detail or {}, at_s=self.orch.clock.now()))
+
+    def subscribe(self, invoker: str) -> None:
+        """Open (or reset) the invoker's event subscription."""
+        self._subs[invoker] = collections.deque(
+            maxlen=self._event_queue_len)
+
+    def poll_events(self, invoker: str) -> List[m.SessionEvent]:
+        q = self._subs.get(invoker)
+        if q is None:
+            return []
+        out = list(q)
+        q.clear()
+        return out
+
+    def _idempotent(self, key: Optional[str], req: m.Message,
+                    fn: Callable[[], Reply]) -> Reply:
+        if key is not None and key in self._idem:
+            fingerprint, reply = self._idem[key]
+            if fingerprint != req.to_json():
+                return m.ErrorResponse(
+                    "E_IDEMPOTENCY_CONFLICT",
+                    detail=f"key {key!r} was used for a different request",
+                    session_id=getattr(req, "session_id", None))
+            return reply
+        reply = fn()
+        if key is not None:
+            self._idem[key] = (req.to_json(), reply)
+            while len(self._idem) > self._idempotency_window:
+                self._idem.popitem(last=False)
+        return reply
+
+    def _drop_establishment_state(self, session_id: str) -> None:
+        self._pending.pop(session_id, None)
+        for ref in [r for r, sid in self._prepared_refs.items()
+                    if sid == session_id]:
+            del self._prepared_refs[ref]
+
+    def _establishment_step(self, session: AISession,
+                            fn: Callable[[], Reply]) -> Reply:
+        """Run one establishment procedure; a SessionError fails the session
+        (mirror of Orchestrator.establish) and maps to its error code."""
+        try:
+            return fn()
+        except SessionError as e:
+            session.fail(e.cause, str(e))
+            self._drop_establishment_state(session.session_id)
+            self._emit(session, "state-transition", state="failed",
+                       detail={"cause": e.cause.value})
+            return m.ErrorResponse.from_session_error(
+                e, session_id=session.session_id)
+
+    # ------------------------------------------------------------------
+    # lifecycle procedures
+    # ------------------------------------------------------------------
+    def discover(self, msg: m.DiscoverRequest) -> Reply:
+        try:
+            session = self.orch.begin_session(msg.asp, msg.invoker,
+                                              msg.zone)
+        except ValueError as e:
+            # contract refused before any lifecycle state exists (invalid
+            # ASP, or objectives incompatible with this gateway's Eq. 11
+            # timer configuration) — an input refusal, not an internal error
+            return m.ErrorResponse("E_BAD_REQUEST", detail=str(e))
+        while len(self._pending) >= self._establishment_window:
+            oldest = next(iter(self._pending))
+            self._drop_establishment_state(oldest)
+        self._pending[session.session_id] = _Pending(session)
+
+        def run():
+            cands = self.orch.discover_for(session)
+            self._pending[session.session_id].candidates = cands
+            self._emit(session, "state-transition")
+            wire = [{
+                "model_id": c.model.model_id,
+                "model_version": c.model.version,
+                "site_id": c.site_id, "klass": c.klass.name,
+                "admissible": c.admissible,
+                "slack": c.slack if c.prediction is not None else None,
+                "exclusion_reason": c.exclusion_reason,
+            } for c in cands]
+            return m.DiscoverResponse(session_id=session.session_id,
+                                      candidates=wire)
+        return self._establishment_step(session, run)
+
+    def page(self, msg: m.PageRequest) -> Reply:
+        session = self._session(msg.session_id)
+        pending = self._pending.get(msg.session_id)
+        if pending is None or pending.candidates is None:
+            return m.ErrorResponse(
+                "E_BAD_REQUEST", detail="PAGE before DISCOVER",
+                session_id=msg.session_id)
+        if pending.page_response is not None:
+            return pending.page_response         # lost-response retry
+
+        def run():
+            chosen = self.orch.page_for(session, pending.candidates,
+                                        tuple(msg.exclude_sites))
+            pending.chosen = chosen
+            self._emit(session, "state-transition")
+            pending.page_response = m.PageResponse(
+                session_id=session.session_id,
+                model_id=chosen.model.model_id,
+                model_version=chosen.model.version,
+                site_id=chosen.site_id, klass=chosen.klass.name,
+                predicted_cost_per_1k=chosen.prediction.cost_per_1k)
+            return pending.page_response
+        return self._establishment_step(session, run)
+
+    def prepare(self, msg: m.PrepareRequest) -> Reply:
+        session = self._session(msg.session_id)
+        pending = self._pending.get(msg.session_id)
+        if pending is None or pending.chosen is None:
+            return m.ErrorResponse(
+                "E_BAD_REQUEST", detail="PREPARE before PAGE",
+                session_id=msg.session_id)
+        if pending.prepare_response is not None:
+            return pending.prepare_response      # lost-response retry
+
+        def run():
+            def do():
+                prepared = self.orch.prepare_for(session, pending.chosen)
+                pending.prepared = prepared
+                ref = f"prep-{next(self._refs):06d}"
+                self._prepared_refs[ref] = session.session_id
+                self._emit(session, "state-transition")
+                pending.prepare_response = m.PrepareResponse(
+                    session_id=session.session_id, prepared_ref=ref,
+                    site_id=prepared.site_id, qfi=prepared.qfi)
+                return pending.prepare_response
+            return self._establishment_step(session, do)
+        return self._idempotent(msg.idempotency_key, msg, run)
+
+    def commit(self, msg: m.CommitRequest) -> Reply:
+        session = self._session(msg.session_id)
+
+        def run():
+            pending = self._pending.get(msg.session_id)
+            if self._prepared_refs.get(msg.prepared_ref) != msg.session_id \
+                    or pending is None or pending.prepared is None:
+                return m.ErrorResponse(
+                    "E_BAD_REQUEST",
+                    detail=f"no commitable PREPARE under ref "
+                           f"{msg.prepared_ref!r}",
+                    session_id=msg.session_id)
+
+            def do():
+                self.orch.commit_for(session, pending.chosen,
+                                     pending.prepared)
+                self._pending.pop(msg.session_id, None)
+                self._prepared_refs.pop(msg.prepared_ref, None)
+                self._emit(session, "state-transition")
+                return m.CommitResponse(
+                    session_id=session.session_id, record=session.record(),
+                    lease_s=self.orch.timers.lease_s,
+                    at_s=self.orch.clock.now())
+            return self._establishment_step(session, do)
+        return self._idempotent(msg.idempotency_key, msg, run)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def _handle_serve(self, msg: m.ServeRequest) -> Reply:
+        if msg.stream:
+            return list(self.serve_stream(msg))
+        return self.submit(msg)
+
+    def serve_stream(self, msg: m.ServeRequest) -> Iterator[m.Message]:
+        """Unary-streaming serve: one ServeChunk per generated token, then
+        a ServeComplete with the boundary-observable timings."""
+        try:
+            session = self._session(msg.session_id)
+            prompt = None
+            if msg.prompt is not None:
+                import numpy as np
+                prompt = np.asarray(msg.prompt, np.int32)
+            res = self.orch.serve(
+                session, prompt_tokens=msg.prompt_tokens,
+                gen_tokens=msg.gen_tokens, prompt=prompt,
+                request_id=msg.request_id)
+        except SessionError as e:
+            yield m.ErrorResponse.from_session_error(
+                e, session_id=msg.session_id)
+            return
+        for i in range(res.text_tokens):
+            yield m.ServeChunk(
+                session_id=msg.session_id, request_id=res.request_id, seq=i,
+                token_id=res.token_ids[i] if res.token_ids else None)
+        yield m.ServeComplete(
+            session_id=msg.session_id, request_id=res.request_id,
+            klass=res.klass, tokens=res.text_tokens,
+            prompt_tokens=msg.prompt_tokens,
+            ttfb_ms=res.ttfb_ms, latency_ms=res.latency_ms,
+            queue_wait_ms=res.queue_wait_ms, completed=res.completed,
+            error_code=m.code_for_cause(res.failed) if res.failed else None,
+            token_ids=res.token_ids, at_s=self.orch.clock.now())
+
+    def submit(self, msg: m.ServeRequest) -> Reply:
+        """Async serve: enqueue on the anchor plane, acknowledge admission;
+        the completion arrives through ``drain()`` / ``pump()``."""
+        session = self._session(msg.session_id)
+        prompt = None
+        if msg.prompt is not None:
+            import numpy as np
+            prompt = np.asarray(msg.prompt, np.int32)
+        req = self.orch.submit(
+            session, prompt_tokens=msg.prompt_tokens,
+            gen_tokens=msg.gen_tokens, prompt=prompt,
+            request_id=msg.request_id)
+        if req is not None:
+            self._async_pending.add(req.request_id)
+        return m.SubmitAck(
+            session_id=msg.session_id,
+            request_id=req.request_id if req is not None else msg.request_id,
+            accepted=req is not None, at_s=self.orch.clock.now())
+
+    def _on_result(self, site, res) -> None:
+        """Orchestrator result sink: every async-submitted request's
+        PlaneResult becomes a buffered ServeComplete, whichever path
+        (heartbeat/pump/drain) popped it; unary serves already returned
+        their result inline and are not re-announced."""
+        if res.request_id not in self._async_pending:
+            return
+        self._async_pending.discard(res.request_id)
+        self._completions.append(m.ServeComplete(
+            session_id=res.session_id, request_id=res.request_id,
+            klass=res.klass, tokens=res.tokens,
+            prompt_tokens=res.prompt_tokens, ttfb_ms=res.ttfb_ms,
+            latency_ms=res.latency_ms, queue_wait_ms=res.queue_wait_ms,
+            completed=res.completed,
+            error_code=m.code_for_cause(res.failed) if res.failed else None,
+            token_ids=res.token_ids, at_s=self.orch.clock.now()))
+
+    def pump(self, until_s: float) -> None:
+        """Advance every site plane to absolute time ``until_s`` (virtual
+        clocks) and record the completions that fell due."""
+        for site in self.orch.sites.values():
+            if site.plane is not None:
+                site.plane.run_until(until_s)
+                self.orch.record_results(site)
+
+    def drain(self) -> List[m.ServeComplete]:
+        """Run every plane to completion and return ALL completions
+        recorded since the last drain (async submits + heartbeat pickups)."""
+        for site in self.orch.sites.values():
+            if site.plane is not None:
+                site.plane.drain()
+                self.orch.record_results(site)
+        out = list(self._completions)
+        self._completions.clear()
+        return out
+
+    def poll_completions(self, invoker: str) -> List[m.ServeComplete]:
+        """Wire counterpart of ``drain()`` for ONE invoker: hand over (and
+        remove) the buffered async completions of that invoker's sessions.
+        Does not force the planes forward — completions appear as serves,
+        heartbeats, and pump/drain cycles record them."""
+        mine, keep = [], []
+        for c in self._completions:
+            s = self.orch.sessions.get(c.session_id)
+            if s is not None and s.invoker == invoker:
+                mine.append(c)
+            else:
+                keep.append(c)
+        self._completions = collections.deque(
+            keep, maxlen=self._completions.maxlen)
+        return mine
+
+    def _handle_completion_poll(self, msg: m.CompletionPoll) -> Reply:
+        return list(self.poll_completions(msg.invoker))
+
+    # ------------------------------------------------------------------
+    # continuity + teardown
+    # ------------------------------------------------------------------
+    def heartbeat(self, msg: m.HeartbeatReport) -> Reply:
+        session = self._session(msg.session_id)
+        trig = None
+        if msg.trigger_l99 is not None or msg.trigger_ttfb is not None:
+            base = MigrationTriggers()
+            trig = MigrationTriggers(
+                delta_l99=msg.trigger_l99 if msg.trigger_l99 is not None
+                else base.delta_l99,
+                delta_ttfb=msg.trigger_ttfb if msg.trigger_ttfb is not None
+                else base.delta_ttfb)
+        outcome = self.orch.heartbeat(session, trig)
+        wire = None
+        if outcome is not None:
+            wire = m.outcome_to_wire(outcome)
+            self._emit(session, "migration", detail=wire)
+        return m.HeartbeatAck(
+            session_id=msg.session_id, committed=session.committed(),
+            lease_s=self.orch.timers.lease_s, migration=wire,
+            at_s=self.orch.clock.now())
+
+    def compliance(self, msg: m.ComplianceRequest) -> Reply:
+        session = self._session(msg.session_id)
+        rep = self.orch.compliance(session)
+        tele = self.orch.telemetry.get(msg.session_id)
+        if rep is None:
+            return m.ComplianceReport(session_id=msg.session_id)
+        return m.ComplianceReport(
+            session_id=msg.session_id, in_compliance=rep.in_compliance,
+            z=dataclasses.asdict(rep.z), n=len(tele) if tele else 0)
+
+    def release(self, msg: m.ReleaseRequest) -> Reply:
+        session = self._session(msg.session_id)
+        tokens, cost = 0, 0.0
+        if session.charging_ref is not None:
+            rec = self.orch.policy.charging(session.charging_ref)
+            tokens, cost = rec.tokens, rec.cost
+        self.orch.release(session)
+        self._drop_establishment_state(msg.session_id)
+        self._emit(session, "state-transition")
+        return m.ReleaseAck(session_id=msg.session_id,
+                            state=session.state.value,
+                            tokens=tokens, total_cost=cost)
+
+    def _handle_event_poll(self, msg: m.EventPoll) -> Reply:
+        return list(self.poll_events(msg.invoker))
+
+    # ------------------------------------------------------------------
+    _DISPATCH: Dict[type, Callable] = {
+        m.DiscoverRequest: discover,
+        m.PageRequest: page,
+        m.PrepareRequest: prepare,
+        m.CommitRequest: commit,
+        m.ServeRequest: _handle_serve,
+        m.HeartbeatReport: heartbeat,
+        m.ComplianceRequest: compliance,
+        m.ReleaseRequest: release,
+        m.EventPoll: _handle_event_poll,
+        m.CompletionPoll: _handle_completion_poll,
+    }
+
+
+class _Unknown(Exception):
+    """Unknown session id — a gateway-layer refusal (``E_UNKNOWN_SESSION``),
+    deliberately NOT a SessionError: no Eq. (12) cause applies because the
+    request never reached the lifecycle machinery."""
+
+    def __init__(self, session_id: str):
+        super().__init__(f"unknown session {session_id!r}")
+        self.session_id = session_id

@@ -20,6 +20,17 @@ from dataclasses import dataclass, field, asdict
 from typing import Tuple
 
 
+#: wire-schema version of the ASP record. Bound into ``digest()`` so two
+#: parties hashing the same intent under different field sets can never
+#: collide silently; the northbound gateway refuses mismatched majors.
+ASP_SCHEMA_VERSION = "1.0"
+
+
+class SchemaVersionError(ValueError):
+    """Incompatible wire-schema major — distinct from malformed input so
+    the gateway can classify it structurally, not by message text."""
+
+
 class Modality(enum.Enum):
     TEXT_GEN = "text-generation"
     CODE_GEN = "code-generation"
@@ -95,14 +106,68 @@ class ASP:
             raise ValueError("empty sovereignty scope admits no site")
         if self.telemetry_scope not in ("aggregate", "per-request", "none"):
             raise ValueError("unknown telemetry scope")
+        if self.max_cost_per_1k_tokens <= 0:
+            raise ValueError("cost envelope needs max_cost_per_1k_tokens > 0")
+        if self.max_session_cost <= 0:
+            raise ValueError("cost envelope needs max_session_cost > 0")
+        for model_id, tier in self.fallback_ladder:
+            try:
+                QualityTier(int(tier))
+            except (ValueError, TypeError):
+                raise ValueError(
+                    f"fallback ladder entry ({model_id!r}, {tier!r}) names "
+                    f"no valid QualityTier") from None
+
+    # ------------------------------------------------------------------
+    # wire codec (northbound exposure) + versioned digest
+    # ------------------------------------------------------------------
+    def to_wire(self) -> dict:
+        """JSON-able record of the full intent contract, with an explicit
+        ``schema_version`` so the digest stays comparable across future
+        field additions (absent-vs-default is disambiguated by version)."""
+        return {
+            "schema_version": ASP_SCHEMA_VERSION,
+            "modality": self.modality.value,
+            "interaction": self.interaction.value,
+            "objectives": asdict(self.objectives),
+            "tier": int(self.tier),
+            "allowed_regions": list(self.allowed_regions),
+            "telemetry_scope": self.telemetry_scope,
+            "state_transfer_allowed": self.state_transfer_allowed,
+            "mobility": self.mobility.value,
+            "max_cost_per_1k_tokens": self.max_cost_per_1k_tokens,
+            "max_session_cost": self.max_session_cost,
+            "fallback_ladder": [[m, int(t)] for m, t in self.fallback_ladder],
+        }
+
+    @classmethod
+    def from_wire(cls, d: dict) -> "ASP":
+        ver = str(d.get("schema_version", ""))
+        if ver.split(".")[0] != ASP_SCHEMA_VERSION.split(".")[0]:
+            raise SchemaVersionError(
+                f"ASP schema version {ver!r} incompatible with "
+                f"{ASP_SCHEMA_VERSION!r}")
+        asp = cls(
+            modality=Modality(d["modality"]),
+            interaction=InteractionMode(d["interaction"]),
+            objectives=Objectives(**d["objectives"]),
+            tier=QualityTier(int(d["tier"])),
+            allowed_regions=tuple(d["allowed_regions"]),
+            telemetry_scope=d["telemetry_scope"],
+            state_transfer_allowed=bool(d["state_transfer_allowed"]),
+            mobility=MobilityClass(d["mobility"]),
+            max_cost_per_1k_tokens=float(d["max_cost_per_1k_tokens"]),
+            max_session_cost=float(d["max_session_cost"]),
+            fallback_ladder=tuple((m, int(t))
+                                  for m, t in d["fallback_ladder"]),
+        )
+        asp.validate()
+        return asp
 
     def digest(self) -> str:
-        """Stable digest bound into the AIS record (Section III-B)."""
-        def enc(o):
-            if isinstance(o, enum.Enum):
-                return o.value
-            raise TypeError(type(o))
-        body = json.dumps(asdict(self), sort_keys=True, default=enc)
+        """Stable digest bound into the AIS record (Section III-B); hashes
+        the versioned wire form, so the schema version is part of identity."""
+        body = json.dumps(self.to_wire(), sort_keys=True)
         return hashlib.sha256(body.encode()).hexdigest()[:16]
 
     def continuity_required(self) -> bool:

@@ -42,6 +42,9 @@ class ServeResult:
     completed: bool
     queue_wait_ms: float = 0.0
     failed: Optional[FailureCause] = None
+    request_id: str = ""
+    klass: str = ""                    # QoS class the request rode
+    token_ids: Optional[list] = None   # real-engine backends only
 
 
 class Orchestrator:
@@ -71,44 +74,76 @@ class Orchestrator:
             self.plane_for, clock=self.clock)
         self.telemetry: Dict[str, BoundaryTelemetry] = {}
         self.sessions: Dict[str, AISession] = {}
+        #: callables ``(site, PlaneResult)`` notified for every result the
+        #: single recorder drains — the northbound gateway subscribes here
+        #: so async completions reach the invoker whichever path pops them
+        self.result_sinks: list = []
 
     # ------------------------------------------------------------------
-    def establish(self, asp: ASP, invoker: str, zone: str) -> AISession:
-        """DISCOVER → PAGING → PREPARE/COMMIT under Eq. (11) deadlines."""
+    # stepwise lifecycle procedures — each northbound-drivable on its own;
+    # establish() composes them under the Eq. (11) deadline chain
+    # ------------------------------------------------------------------
+    def begin_session(self, asp: ASP, invoker: str, zone: str) -> AISession:
+        """Create the AIS record and bind consent (R7) before any
+        reservation is attempted."""
         self.timers.validate(asp.objectives.t_max_ms / 1e3)
         session = AISession(asp, invoker, zone, self.clock,
                             sites=self.sites, qos=self.qos,
                             policy=self.policy)
         self.sessions[session.session_id] = session
+        session.authz_ref = self.policy.grant_consent(
+            invoker, asp.allowed_regions)
+        return session
+
+    def discover_for(self, session: AISession) -> list:
+        """DISCOVER (Eq. 7/8): annotated candidate set under τ_disc."""
+        t0 = self.clock.now()
+        cands = discover(session.asp, self.catalog, self.sites,
+                         self.predictors, session.zone,
+                         analytics=self.analytics)
+        if self.clock.now() - t0 > self.timers.tau_disc:
+            raise SessionError(FailureCause.DEADLINE_EXPIRY,
+                               "DISCOVER exceeded τ_disc")
+        session.mark_discovered()
+        return cands
+
+    def page_for(self, session: AISession, cands: list,
+                 exclude_sites: tuple = ()):
+        """AI-PAGING (Eq. 9) + policy admission against the chosen anchor."""
+        chosen = page(session.asp, cands, exclude_sites=exclude_sites)
+        session.mark_anchored()
+        # cost-envelope admission (policy role)
+        self.policy.admit_cost(session.asp, chosen.prediction.cost_per_1k)
+        # sovereignty re-check against the concrete site (consent scope)
+        self.policy.check_region(
+            session.authz_ref, self.sites[chosen.site_id].spec.region)
+        return chosen
+
+    def prepare_for(self, session: AISession, chosen):
+        """PREPARE: provisional co-reservation on both planes (2PC stage 1)."""
+        session.mark_preparing()
+        prepared = self.coordinator.prepare(
+            chosen.model, chosen.site_id, session.zone, chosen.klass,
+            slots=1, cache_bytes=chosen.model.session_state_bytes(2048))
+        session.mark_prepared()
+        return prepared
+
+    def commit_for(self, session: AISession, chosen, prepared) -> AISession:
+        """COMMIT: confirm both leases, bind, open charging + telemetry."""
+        binding = self.coordinator.commit(prepared, chosen.model)
+        session.charging_ref = self.policy.open_charging(session.session_id)
+        session.bind(binding)
+        self.telemetry[session.session_id] = BoundaryTelemetry()
+        return session
+
+    def establish(self, asp: ASP, invoker: str, zone: str) -> AISession:
+        """DISCOVER → PAGING → PREPARE/COMMIT under Eq. (11) deadlines."""
+        session = self.begin_session(asp, invoker, zone)
         try:
-            # consent/authorization binding (R7) precedes any reservation
-            session.authz_ref = self.policy.grant_consent(
-                invoker, asp.allowed_regions)
-            t0 = self.clock.now()
-            cands = discover(asp, self.catalog, self.sites, self.predictors,
-                             zone, analytics=self.analytics)
-            if self.clock.now() - t0 > self.timers.tau_disc:
-                raise SessionError(FailureCause.DEADLINE_EXPIRY,
-                                   "DISCOVER exceeded τ_disc")
-            session.mark_discovered()
-            chosen = page(asp, cands)
-            session.mark_anchored()
-            # cost-envelope admission (policy role)
-            self.policy.admit_cost(asp, chosen.prediction.cost_per_1k)
-            # sovereignty re-check against the concrete site (consent scope)
-            self.policy.check_region(
-                session.authz_ref,
-                self.sites[chosen.site_id].spec.region)
-            session.mark_preparing()
-            prepared = self.coordinator.prepare(
-                chosen.model, chosen.site_id, zone, chosen.klass, slots=1,
-                cache_bytes=chosen.model.session_state_bytes(2048))
-            session.mark_prepared()
-            binding = self.coordinator.commit(prepared, chosen.model)
-            session.charging_ref = self.policy.open_charging(
-                session.session_id)
-            session.bind(binding)
-            self.telemetry[session.session_id] = BoundaryTelemetry()
+            cands = self.discover_for(session)
+            chosen = self.page_for(session, cands)
+            prepared = self.prepare_for(session, chosen)
+            self.commit_for(session, chosen, prepared)
             return session
         except SessionError as e:
             session.fail(e.cause, str(e))
@@ -176,11 +211,61 @@ class Orchestrator:
                     chip_s=service_s * site.spec.chips
                     / max(site.spec.decode_slots, 1),
                     unit_price=price)
+            for sink in self.result_sinks:
+                sink(site, res)
         return popped
 
     # ------------------------------------------------------------------
+    def _service_hints(self, session: AISession, plane, model, site, klass,
+                       prompt_tokens: int, gen_tokens: int):
+        """Predictor-supplied (ttfb, total) service-time hints, only for
+        backends that declare they need them (capability check, not
+        type-sniffing of serving internals)."""
+        if not getattr(plane.backend, "needs_service_hints", False):
+            return None, None
+        pred = self.predictors.predict(session.asp, model, site,
+                                       session.zone, klass,
+                                       prompt_tokens=prompt_tokens,
+                                       gen_tokens=gen_tokens)
+        return (pred.t_ff_ms,
+                pred.t_ff_ms + gen_tokens * pred.decode_ms_per_token)
+
+    def _serve_checked(self, session: AISession):
+        """Common serve-side admission: Eq. (6) consent + committed domain;
+        returns (site, model, plane, klass) for the session's anchor."""
+        if not session.serve_allowed():
+            if not session.v_sigma():
+                raise SessionError(FailureCause.CONSENT_VIOLATION,
+                                   "consent revoked ⇒ ServeDisabled (Eq. 6)")
+            raise SessionError(FailureCause.DEADLINE_EXPIRY,
+                               "session not in committed domain")
+        b = session.binding
+        site = self.sites[b.site_id]
+        model = self.catalog.get(b.model_id, b.model_version)
+        return site, model, self.plane_for(site), self.qos_class(session)
+
+    # ------------------------------------------------------------------
+    def submit(self, session: AISession, *, prompt_tokens: int = 512,
+               gen_tokens: int = 64, prompt=None,
+               request_id: Optional[str] = None):
+        """Async path: enqueue one request on the anchor plane without
+        driving it (batched serving / open-loop simulation); returns the
+        scheduler Request, or None when admission control rejects it.
+        Completions surface through ``record_results`` → ``result_sinks``."""
+        site, model, plane, klass = self._serve_checked(session)
+        hint_ttfb, hint_total = self._service_hints(
+            session, plane, model, site, klass, prompt_tokens, gen_tokens)
+        return plane.submit(
+            session_id=session.session_id, klass=klass.name,
+            prompt_tokens=prompt_tokens, gen_tokens=gen_tokens,
+            t_max_ms=session.asp.objectives.t_max_ms,
+            hint_ttfb_ms=hint_ttfb, hint_total_ms=hint_total,
+            request_id=request_id, prompt=prompt)
+
+    # ------------------------------------------------------------------
     def serve(self, session: AISession, *, prompt_tokens: int = 512,
-              gen_tokens: int = 64) -> ServeResult:
+              gen_tokens: int = 64, prompt=None,
+              request_id: Optional[str] = None) -> ServeResult:
         """One request through the anchor site's ServingPlane.
 
         The QoS class comes from the binding's QFI; admission is
@@ -191,38 +276,19 @@ class Orchestrator:
         boundary telemetry and metering are identical — that's the
         falsifiability point.
         """
-        if not session.serve_allowed():
-            if not session.v_sigma():
-                raise SessionError(FailureCause.CONSENT_VIOLATION,
-                                   "consent revoked ⇒ ServeDisabled (Eq. 6)")
-            raise SessionError(FailureCause.DEADLINE_EXPIRY,
-                               "session not in committed domain")
-        b = session.binding
-        site = self.sites[b.site_id]
-        model = self.catalog.get(b.model_id, b.model_version)
-        plane = self.plane_for(site)
-        klass = self.qos_class(session)
-
-        hint_ttfb = hint_total = None
-        from repro.serving.plane import SimulatedEngine
-        if isinstance(plane.backend, SimulatedEngine) and \
-                plane.backend.service_sampler is None:
-            pred = self.predictors.predict(session.asp, model, site,
-                                           session.zone, klass,
-                                           prompt_tokens=prompt_tokens,
-                                           gen_tokens=gen_tokens)
-            hint_ttfb = pred.t_ff_ms
-            hint_total = pred.t_ff_ms + gen_tokens * pred.decode_ms_per_token
-
+        site, model, plane, klass = self._serve_checked(session)
+        hint_ttfb, hint_total = self._service_hints(
+            session, plane, model, site, klass, prompt_tokens, gen_tokens)
         res = plane.serve(
             session_id=session.session_id, klass=klass.name,
             prompt_tokens=prompt_tokens, gen_tokens=gen_tokens,
-            t_max_ms=session.asp.objectives.t_max_ms,
-            hint_ttfb_ms=hint_ttfb, hint_total_ms=hint_total)
+            t_max_ms=session.asp.objectives.t_max_ms, request_id=request_id,
+            hint_ttfb_ms=hint_ttfb, hint_total_ms=hint_total, prompt=prompt)
         self.record_results(site)
         return ServeResult(res.tokens, res.ttfb_ms, res.latency_ms,
                            res.completed, queue_wait_ms=res.queue_wait_ms,
-                           failed=res.failed)
+                           failed=res.failed, request_id=res.request_id,
+                           klass=res.klass, token_ids=res.token_ids)
 
     # ------------------------------------------------------------------
     def heartbeat(self, session: AISession,

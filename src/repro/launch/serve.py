@@ -1,21 +1,25 @@
-"""NE-AIaaS serving launcher: control plane + real engines behind
-QoS-scheduled serving planes.
+"""NE-AIaaS serving launcher: real engines behind QoS-scheduled serving
+planes, driven END-TO-END through the northbound session API.
 
     PYTHONPATH=src python -m repro.launch.serve --model edge-tiny \
         --sessions 4 --requests 12
 
-Production path: on a pod, the engine's prefill/decode jit under
-``make_production_mesh()`` with the decode plan's shardings (the dry-run
-proves every assigned arch compiles there); on this container it runs the
-small configs for real. Either way the AIS lifecycle, QoS-scheduled
-admission (class order + premium reservation + deadline fast-fail),
-telemetry, and charging are identical — that is the paper's point.
+Every session here is established, served, and released by a
+:class:`~repro.api.client.SessionClient` speaking JSON to the
+:class:`~repro.api.gateway.NorthboundGateway` — the exact wire surface a
+remote application-service-provider would use. Production path: on a pod,
+the engine's prefill/decode jit under ``make_production_mesh()`` with the
+decode plan's shardings; on this container it runs the small configs for
+real. Either way the AIS lifecycle, QoS-scheduled admission (class order +
+premium reservation + deadline fast-fail), telemetry, and charging are
+identical — that is the paper's point.
 """
 
 from __future__ import annotations
 
 import argparse
 
+from repro.api.client import SessionClient
 from repro.configs import ARCH_IDS
 from repro.core import Orchestrator, default_asp
 from repro.core.asp import QualityTier
@@ -34,7 +38,7 @@ def serve(model: str = "edge-tiny", *, sessions: int = 4, requests: int = 12,
     server = AIaaSServer(orch, model, slots=slots, max_len=max_len)
     rng = np.random.default_rng(seed)
 
-    live = {}
+    clients = []
     for i in range(sessions):
         tier = QualityTier.PREMIUM if i % 2 == 0 else QualityTier.BASIC
         asp = default_asp(tier=tier)
@@ -42,19 +46,19 @@ def serve(model: str = "edge-tiny", *, sessions: int = 4, requests: int = 12,
             asp, objectives=dataclasses.replace(
                 asp.objectives, ttfb_ms=t_max_ms / 10, p95_ms=t_max_ms / 3,
                 p99_ms=t_max_ms / 2, t_max_ms=t_max_ms, nu_min=0.0))
-        s = orch.establish(asp, invoker=f"ue-{i}", zone="zone-a")
-        live[s.session_id] = s
+        c = SessionClient(server.gateway, asp, invoker=f"ue-{i}",
+                          zone="zone-a").establish()
+        clients.append(c)
         if not quiet:
-            print(f"AIS {s.session_id} tier={tier.name} "
-                  f"anchor={s.binding.site_id} qfi={s.binding.qfi}")
+            print(f"AIS {c.session_id} tier={tier.name} "
+                  f"anchor={c.record['anchor']} qfi={c.record['qfi']}")
 
-    # submit everything through the anchor sites' serving planes — admission
-    # order (premium first, reserved share, fast-fail) is the planes' job
-    sids = list(live)
+    # submit everything through the northbound API — admission order
+    # (premium first, reserved share, fast-fail) is the site planes' job
     for r in range(requests):
-        s = live[sids[r % len(sids)]]
-        server.submit(s, prompt_tokens=int(rng.integers(8, 32)),
-                      gen_tokens=gen_tokens)
+        c = clients[r % len(clients)]
+        c.submit(prompt_tokens=int(rng.integers(8, 32)),
+                 gen_tokens=gen_tokens)
     results = server.drain()
     served = sum(1 for res in results.values()
                  if res.failed is None)
@@ -62,15 +66,15 @@ def serve(model: str = "edge-tiny", *, sessions: int = 4, requests: int = 12,
                       for p in server.planes.values())
 
     reports = {}
-    for sid, s in live.items():
-        rep = orch.compliance(s)
-        reports[sid] = rep
-        if not quiet and rep:
-            print(f"{sid} q99={rep.z.q99_ms:9.1f}ms ρ̂={rep.z.rho:.2f} "
-                  f"ν̂={rep.z.nu_tokens_per_s:7.1f} tok/s "
-                  f"compliant={rep.in_compliance} "
-                  f"cost={orch.policy.charging(s.charging_ref).cost:.4f}")
-        orch.release(s)
+    for c in clients:
+        rep = c.compliance()
+        reports[c.session_id] = rep
+        ack = c.release()
+        if not quiet and rep.n:
+            z = rep.z
+            print(f"{c.session_id} q99={z['q99_ms']:9.1f}ms ρ̂={z['rho']:.2f} "
+                  f"ν̂={z['nu_tokens_per_s']:7.1f} tok/s "
+                  f"compliant={rep.in_compliance} cost={ack.total_cost:.4f}")
     if not quiet:
         print(f"served {served}/{requests} "
               f"(fast-failed {fast_failed} on deadline)")

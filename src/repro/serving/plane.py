@@ -104,6 +104,9 @@ class RealEngineBackend:
     """
 
     exclusive_sessions = True
+    #: real engines measure their own service times (per-token EWMA) — the
+    #: control plane never needs to supply predictor hints
+    needs_service_hints = False
 
     def __init__(self, engine, clock: Clock, *, seed: int = 0):
         self.engine = engine
@@ -209,6 +212,12 @@ class SimulatedEngine:
         self.default_service_ms = default_service_ms
         self.import_capacity = import_capacity
         self._sessions: Dict[str, dict] = {}
+
+    @property
+    def needs_service_hints(self) -> bool:
+        """Without a sampler the backend has no service-time source of its
+        own — callers must pass predictor hints on each request."""
+        return self.service_sampler is None
 
     # -- plane interface -------------------------------------------------
     def predicted_service_ms(self, req: Request) -> float:
@@ -526,6 +535,7 @@ class ServingPlane:
 
     def serve(self, *, session_id: str, klass: str, prompt_tokens: int,
               gen_tokens: int, t_max_ms: float,
+              request_id: Optional[str] = None,
               hint_ttfb_ms: Optional[float] = None,
               hint_total_ms: Optional[float] = None,
               prompt=None) -> PlaneResult:
@@ -534,7 +544,7 @@ class ServingPlane:
         rounds are shared)."""
         req = self.submit(
             session_id=session_id, klass=klass, prompt_tokens=prompt_tokens,
-            gen_tokens=gen_tokens, t_max_ms=t_max_ms,
+            gen_tokens=gen_tokens, t_max_ms=t_max_ms, request_id=request_id,
             hint_ttfb_ms=hint_ttfb_ms, hint_total_ms=hint_total_ms,
             prompt=prompt)
         if req is None:

@@ -1,12 +1,14 @@
-"""NE-AIaaS serving front: binds the control plane (Orchestrator) to real
-engines at the execution sites, behind QoS-scheduled serving planes.
+"""NE-AIaaS serving front: binds the control plane to real engines at the
+execution sites, behind QoS-scheduled serving planes, and exposes them
+northbound.
 
 ``AIaaSServer`` owns per-(site, model) engines, wraps each in a
 :class:`~repro.serving.plane.ServingPlane` attached to the ExecutionSite —
-so ``Orchestrator.serve`` goes through class-ordered slot admission with
-premium reservation and deadline fast-fail — and implements the engine-level
-migration data plane used by the MigrationController (make-before-break with
-fingerprint verification).
+so every serve goes through class-ordered slot admission with premium
+reservation and deadline fast-fail — and fronts the whole deployment with a
+:class:`~repro.api.gateway.NorthboundGateway`: the server's own submit /
+request / drain paths are gateway message flows, so the in-process driver
+exercises the exact surface a remote invoker would.
 """
 
 from __future__ import annotations
@@ -15,13 +17,14 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.api import messages as wire
+from repro.api.gateway import NorthboundGateway
 from repro.core.catalog import Catalog
 from repro.core.orchestrator import Orchestrator
 from repro.core.session import AISession
 from repro.serving.engine import InferenceEngine
 from repro.serving.plane import (RealEngineBackend, ServingPlane,
                                  PlaneResult)
-from repro.serving.scheduler import Request
 
 
 class EngineFleet:
@@ -48,7 +51,8 @@ class EngineFleet:
 class AIaaSServer:
     def __init__(self, orch: Orchestrator, model_id: str = "edge-tiny",
                  *, slots: int = 8, max_len: int = 256,
-                 premium_reserved_frac: float = 0.25):
+                 premium_reserved_frac: float = 0.25,
+                 gateway: Optional[NorthboundGateway] = None):
         self.orch = orch
         self.fleet = EngineFleet(orch.catalog, model_id, slots=slots,
                                  max_len=max_len)
@@ -62,6 +66,10 @@ class AIaaSServer:
                 site_id=site_id)
             site.attach_plane(plane)
             self.planes[site_id] = plane
+        # the northbound exposure point: sessions established through it and
+        # sessions established directly on the orchestrator serve identically
+        self.gateway = gateway if gateway is not None \
+            else NorthboundGateway(orch)
         # make-before-break migration rides the orchestrator's default
         # PlaneTransferPath, which resolves these attached planes: export on
         # the source engine → fingerprint-verified import on the target →
@@ -70,41 +78,47 @@ class AIaaSServer:
     # ------------------------------------------------------------------
     def submit(self, session: AISession, *, prompt_tokens: int = 16,
                gen_tokens: int = 16,
-               prompt: Optional[np.ndarray] = None) -> Optional[Request]:
-        """Async path: enqueue on the anchor site's plane (QoS class from
-        the binding's QFI); drive with ``drain()``."""
-        plane = self.planes[session.binding.site_id]
-        klass = self.orch.qos_class(session)
-        return plane.submit(
-            session_id=session.session_id, klass=klass.name,
+               prompt: Optional[np.ndarray] = None) -> Optional[str]:
+        """Async path through the gateway: enqueue on the anchor site's
+        plane (QoS class from the binding's QFI); drive with ``drain()``.
+        Returns the request id, or None when admission control rejects."""
+        ack = self.gateway.submit(wire.ServeRequest(
+            session_id=session.session_id,
             prompt_tokens=len(prompt) if prompt is not None else prompt_tokens,
             gen_tokens=gen_tokens,
-            t_max_ms=session.asp.objectives.t_max_ms, prompt=prompt)
+            prompt=[int(t) for t in prompt] if prompt is not None else None,
+            stream=False))
+        return ack.request_id if ack.accepted else None
 
     def drain(self) -> Dict[str, PlaneResult]:
-        """Run every plane to completion; telemetry + charging recorded by
-        the orchestrator's single recorder (exactly once per request)."""
+        """Run every plane to completion through the gateway; telemetry +
+        charging recorded by the orchestrator's single recorder (exactly
+        once per request)."""
         out: Dict[str, PlaneResult] = {}
-        for site_id, plane in self.planes.items():
-            plane.drain()
-            for res in self.orch.record_results(self.orch.sites[site_id]):
-                out[res.request_id] = res
+        for res in self.gateway.drain():
+            out[res.request_id] = PlaneResult(
+                request_id=res.request_id, session_id=res.session_id,
+                klass=res.klass, ttfb_ms=res.ttfb_ms,
+                latency_ms=res.latency_ms, queue_wait_ms=res.queue_wait_ms,
+                tokens=res.tokens, completed=res.completed,
+                failed=wire.cause_for_code(res.error_code)
+                if res.error_code else None,
+                token_ids=res.token_ids, prompt_tokens=res.prompt_tokens)
         return out
 
     # ------------------------------------------------------------------
     def request(self, session: AISession, prompt: np.ndarray,
                 gen_tokens: int = 16) -> dict:
-        """Unary path kept for compatibility: serve one request through the
-        plane synchronously, on the CALLER's prompt, returning the engine's
-        generated token ids and timings (engine.serve-style)."""
-        site = self.orch.sites[session.binding.site_id]
-        plane = self.planes[session.binding.site_id]
-        klass = self.orch.qos_class(session)
-        res = plane.serve(
-            session_id=session.session_id, klass=klass.name,
+        """Unary path kept for compatibility: one streamed serve through
+        the gateway on the CALLER's prompt, returning the engine's generated
+        token ids and timings (engine.serve-style)."""
+        frames = list(self.gateway.serve_stream(wire.ServeRequest(
+            session_id=session.session_id,
             prompt_tokens=len(prompt), gen_tokens=gen_tokens,
-            t_max_ms=session.asp.objectives.t_max_ms,
-            prompt=np.asarray(prompt, np.int32))
-        self.orch.record_results(site)
-        return {"tokens": res.token_ids or [], "ttfb_ms": res.ttfb_ms,
-                "latency_ms": res.latency_ms}
+            prompt=[int(t) for t in np.asarray(prompt)])))
+        done = frames[-1]
+        if isinstance(done, wire.ErrorResponse):
+            from repro.api.client import raise_for
+            raise_for(done)
+        return {"tokens": done.token_ids or [], "ttfb_ms": done.ttfb_ms,
+                "latency_ms": done.latency_ms}

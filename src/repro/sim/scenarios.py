@@ -6,15 +6,20 @@ mixes, bursty arrivals, load + mobility at 10k+ concurrent sessions).
   ALL requests are accepted and accumulate in the server queue (Lindley
   recursion); violation probability is computed over all requests (queueing
   is part of the user-perceived service).
-* **NE-AIaaS** — session-oriented: every request is driven through the REAL
+* **NE-AIaaS** — session-oriented AND network-exposed: the arm establishes
+  its session through the :class:`~repro.api.gateway.NorthboundGateway`
+  (DISCOVER → PAGE → PREPARE/COMMIT wire messages) and submits every
+  request northbound, so the queueing machinery it measures is the REAL
   :class:`~repro.serving.plane.ServingPlane` + ``QoSScheduler`` under a
   ``VirtualClock`` — slot admission with a bounded queue rejects offered
   load past the committed capacity (the 2PC admission cap at session
-  granularity), admitted requests occupy decode slots for a service time
-  sampled from ``LatencyModel`` (its ONLY remaining role on this arm), and
-  transport rides the QoS-provisioned class. Violation probability is
-  "served-and-failed" over admitted requests (Eq. 16 semantics). There is
-  no parallel closed-form queue model on this arm.
+  granularity; a rejected ``SubmitAck`` IS the loss event), admitted
+  requests occupy decode slots for a service time sampled from
+  ``LatencyModel`` (its ONLY remaining role on this arm), heartbeats renew
+  the leases across the run, and transport rides the QoS-provisioned
+  class. Violation probability is "served-and-failed" over admitted
+  requests (Eq. 16 semantics). There is no parallel closed-form queue
+  model on this arm.
 """
 
 from __future__ import annotations
@@ -65,7 +70,7 @@ def simulate_endpoint(rho: float, model: LatencyModel, *, ell99: float,
 
 
 # ----------------------------------------------------------------------
-# plane-driven NE-AIaaS arm
+# gateway-driven NE-AIaaS arm
 # ----------------------------------------------------------------------
 def _drive_plane(plane: ServingPlane, clock: VirtualClock,
                  arrivals_s: np.ndarray, submit_kwargs) -> None:
@@ -75,6 +80,50 @@ def _drive_plane(plane: ServingPlane, clock: VirtualClock,
         plane.run_until(float(t))
         plane.submit(**submit_kwargs(i))
     plane.drain()
+
+
+def _neaiaas_gateway(clock: VirtualClock, cap: int, sampler, t_max: float):
+    """One committed-capacity execution site fronted by the northbound
+    gateway: the bounded-queue plane (the 2PC admission point) is attached
+    to the site BEFORE establishment, so the session's serve path runs the
+    exact scheduler the Monte-Carlo measures."""
+    import dataclasses as _dc
+
+    from repro.api.client import SessionClient
+    from repro.api.gateway import NorthboundGateway
+    from repro.core import Orchestrator, default_asp
+    from repro.core.asp import QualityTier
+    from repro.core.catalog import Catalog, default_catalog
+    from repro.core.failures import Timers
+    from repro.core.sites import ExecutionSite, SiteSpec
+
+    cat = Catalog()
+    cat.register(default_catalog().get("edge-tiny"))
+    spec = SiteSpec("neaiaas", "edge", "eu", chips=16,
+                    hbm_bytes_total=16 * 16e9, peak_flops=16 * 197e12,
+                    hbm_bw=16 * 819e9, decode_slots=cap,
+                    rtt_ms={"zone-a": 2.0},
+                    hosted_models=("edge-tiny@1.0",),
+                    price_per_chip_s=2.0e-4)
+    sites = {"neaiaas": ExecutionSite(spec, clock)}
+    t_max_s = t_max / 1e3
+    orch = Orchestrator(clock=clock, catalog=cat, sites=sites,
+                        timers=Timers(tau_mig=min(2.0, 0.9 * t_max_s)))
+    plane = ServingPlane(
+        clock, SimulatedEngine(clock, service_sampler=sampler),
+        slots=cap, premium_reserved_frac=0.0, max_queue=0,
+        site_id="neaiaas")
+    sites["neaiaas"].attach_plane(plane)
+    gw = NorthboundGateway(orch)
+    # BASIC tier admits the edge-tiny entry; with zero premium reservation
+    # and a single class the admission order is class-independent
+    asp = default_asp(tier=QualityTier.BASIC)
+    asp = _dc.replace(asp, objectives=_dc.replace(
+        asp.objectives, ttfb_ms=0.3 * t_max, p95_ms=0.6 * t_max,
+        p99_ms=0.9 * t_max, t_max_ms=t_max, nu_min=0.0))
+    client = SessionClient(gw, asp, invoker="asp-0", zone="zone-a",
+                           subscribe_events=False).establish()
+    return gw, client
 
 
 def simulate_neaiaas(rho: float, model: LatencyModel, *, ell99: float,
@@ -96,21 +145,19 @@ def simulate_neaiaas(rho: float, model: LatencyModel, *, ell99: float,
         idx["i"] += 1
         return 0.0, float(infer[i % n])
 
-    plane = ServingPlane(
-        clock, SimulatedEngine(clock, service_sampler=sampler),
-        slots=cap, premium_reserved_frac=0.0, max_queue=0,
-        site_id="neaiaas")
+    gw, client = _neaiaas_gateway(clock, cap, sampler, t_max)
 
     # offered load ρ is measured against the site's FULL slot capacity, the
     # same normalisation as the endpoint arm
     lam_per_ms = rho * slots / float(infer.mean())
     arrivals_s = np.cumsum(rng.exponential(1.0 / lam_per_ms, size=n)) / 1e3
-    _drive_plane(plane, clock, arrivals_s,
-                 lambda i: dict(session_id=f"s{i}", klass="premium",
-                                prompt_tokens=128, gen_tokens=16,
-                                t_max_ms=t_max))
+    for t in arrivals_s:
+        gw.pump(float(t))
+        # the SDK's auto-renew keeps both leases valid across the span
+        client.submit(prompt_tokens=128, gen_tokens=16)
+    completions = gw.drain()
 
-    results = [r for r in plane.pop_results() if r.failed is None]
+    results = [r for r in completions if r.error_code is None]
     admitted = len(results)
     if admitted == 0:
         return LoadPointResult(rho, 0.0, 0.0, 0.0, 1.0, 0.0)
@@ -377,30 +424,40 @@ def simulate_migration_under_load(*, n_sessions: int = 40, rounds: int = 3,
                                   target_pressure: float = 0.0,
                                   export_fail_prob: float = 0.0,
                                   seed: int = 0) -> MigrationLoadResult:
-    """Sessions serve through the sites' planes (their SimulatedEngine state
-    evolves per request) while a mobility process triggers LIVE migrations:
-    each one exports the session's sim state, fingerprint-verifies it into
-    the target plane's backend, and swaps the binding make-before-break —
-    the §V arm exercising the exact abort paths the real engines hit.
+    """Sessions are established northbound (gateway wire messages) and
+    serve through the sites' planes (their SimulatedEngine state evolves
+    per request) while a mobility process triggers LIVE migrations via
+    heartbeats whose Eq. (14) thresholds are tightened to zero: each one
+    exports the session's sim state, fingerprint-verifies it into the
+    target plane's backend, and swaps the binding make-before-break — the
+    §V arm exercising the exact abort paths the real engines hit, with the
+    outcomes observed exactly as an invoker would (HeartbeatAck.migration).
 
     ``target_pressure`` pre-occupies that fraction of every site's decode
     slots with confirmed leases, so re-paging hits COMPUTE_SCARCITY on
     PREPARE (target-site admission pressure forcing aborts).
     ``export_fail_prob`` injects export failures at the source plane.
     """
+    from repro.api import messages as wire
+    from repro.api.gateway import NorthboundGateway
     from repro.core import Orchestrator, default_asp
     from repro.core.asp import MobilityClass
-    from repro.core.failures import SessionError
     from repro.serving.state_transfer import TransferInjections
 
     rng = np.random.default_rng(seed)
     clock = VirtualClock()
     orch = Orchestrator(clock=clock)
+    gw = NorthboundGateway(orch)
     sessions = []
     for i in range(n_sessions):
-        s = orch.establish(default_asp(mobility=MobilityClass.VEHICULAR),
-                           invoker=f"ue-{i}", zone="zone-a")
-        sessions.append(s)
+        disc = gw.handle(wire.DiscoverRequest(
+            invoker=f"ue-{i}", zone="zone-a",
+            asp=default_asp(mobility=MobilityClass.VEHICULAR)))
+        gw.handle(wire.PageRequest(session_id=disc.session_id))
+        prep = gw.handle(wire.PrepareRequest(session_id=disc.session_id))
+        gw.handle(wire.CommitRequest(session_id=disc.session_id,
+                                     prepared_ref=prep.prepared_ref))
+        sessions.append(orch.sessions[disc.session_id])
 
     if target_pressure > 0.0:
         model = orch.catalog.get(sessions[0].binding.model_id,
@@ -431,13 +488,21 @@ def simulate_migration_under_load(*, n_sessions: int = 40, rounds: int = 3,
             if not s.committed():
                 continue
             clock.advance(0.005)
-            orch.heartbeat(s)           # renew leases under virtual time
-            try:
-                orch.serve(s, prompt_tokens=64, gen_tokens=16)
-            except SessionError:
+            # renew leases under virtual time — northbound heartbeat
+            gw.handle(wire.HeartbeatReport(session_id=s.session_id))
+            frames = gw.handle(wire.ServeRequest(
+                session_id=s.session_id, prompt_tokens=64, gen_tokens=16))
+            if isinstance(frames, wire.ErrorResponse) or \
+                    isinstance(frames[0], wire.ErrorResponse):
                 continue
             if handover_draws[r * n_sessions + i] < handover_prob:
-                outcomes.append(orch.migrations.migrate(s, "zone-a"))
+                # mobility event: tightened Eq. (14) thresholds force the
+                # migration check to fire on this heartbeat
+                ack = gw.handle(wire.HeartbeatReport(
+                    session_id=s.session_id,
+                    trigger_l99=0.0, trigger_ttfb=0.0))
+                if isinstance(ack, wire.HeartbeatAck) and ack.migration:
+                    outcomes.append(wire.outcome_from_wire(ack.migration))
 
     migrated = sum(1 for o in outcomes if o.migrated)
     aborted = sum(1 for o in outcomes if o.aborted)

@@ -61,6 +61,28 @@ class TestASP:
         assert not default_asp(mobility=MobilityClass.STATIC).continuity_required()
         assert default_asp(mobility=MobilityClass.VEHICULAR).continuity_required()
 
+    @pytest.mark.parametrize("kw", [
+        dict(max_cost_per_1k_tokens=0.0),     # degenerate cost envelope
+        dict(max_cost_per_1k_tokens=-1.0),
+        dict(max_session_cost=0.0),
+        dict(max_session_cost=-5.0),
+        dict(fallback_ladder=(("edge-tiny", 0),)),    # no such tier
+        dict(fallback_ladder=(("edge-tiny", 4),)),
+        dict(fallback_ladder=(("a", 2), ("b", -1))),  # one bad entry taints
+    ])
+    def test_invalid_envelope_or_ladder_rejected(self, kw):
+        import dataclasses
+        asp = dataclasses.replace(default_asp(), **kw)
+        with pytest.raises(ValueError):
+            asp.validate()
+
+    def test_valid_ladder_accepted(self):
+        import dataclasses
+        asp = dataclasses.replace(
+            default_asp(),
+            fallback_ladder=(("minitron-8b", 3), ("edge-tiny", 1)))
+        asp.validate()
+
 
 class TestFailureSemantics:
     def test_exactly_nine_causes(self):

@@ -1,0 +1,328 @@
+"""Northbound acceptance: the full AIS lifecycle driven PURELY through the
+NorthboundGateway with JSON-serialized messages — no Orchestrator internals
+imported. DISCOVER, PAGE, PREPARE/COMMIT (idempotent), chunk-by-chunk
+streaming SERVE, migration SessionEvents, and RELEASE all cross the wire."""
+
+import pytest
+
+from repro.api import messages as m
+from repro.api import (NorthboundGateway, SessionClient, ConsentRevoked,
+                       DeadlineExpired, NorthboundError)
+from repro.core.asp import MobilityClass, QualityTier, default_asp
+from repro.core.clock import VirtualClock
+
+
+def send(gw, msg):
+    """One wire exchange: JSON out, JSON back, parsed."""
+    out = gw.handle_json(msg.to_json())
+    if isinstance(out, list):
+        return [m.from_json(o) for o in out]
+    return m.from_json(out)
+
+
+def first(reply):
+    """A refused streaming request arrives as a single error frame."""
+    return reply[0] if isinstance(reply, list) else reply
+
+
+@pytest.fixture
+def gw():
+    return NorthboundGateway(clock=VirtualClock())
+
+
+class TestLifecycleOverWire:
+    def test_full_lifecycle_with_migration_event(self, gw):
+        gw.subscribe("car-1")
+        asp = default_asp(mobility=MobilityClass.VEHICULAR)
+
+        disc = send(gw, m.DiscoverRequest(invoker="car-1", zone="zone-a",
+                                          asp=asp))
+        assert isinstance(disc, m.DiscoverResponse)
+        sid = disc.session_id
+        assert any(c["admissible"] for c in disc.candidates)
+
+        paged = send(gw, m.PageRequest(session_id=sid))
+        assert isinstance(paged, m.PageResponse)
+        src_site = paged.site_id
+
+        prep = send(gw, m.PrepareRequest(session_id=sid,
+                                         idempotency_key="p-1"))
+        assert isinstance(prep, m.PrepareResponse)
+        com = send(gw, m.CommitRequest(session_id=sid,
+                                       prepared_ref=prep.prepared_ref,
+                                       idempotency_key="c-1"))
+        assert isinstance(com, m.CommitResponse)
+        assert com.record["state"] == "committed"
+        assert com.record["anchor"] == src_site
+
+        # streaming serve: one chunk per generated token, then completion
+        frames = send(gw, m.ServeRequest(session_id=sid, prompt_tokens=64,
+                                         gen_tokens=8, stream=True))
+        chunks, done = frames[:-1], frames[-1]
+        assert len(chunks) == 8
+        assert all(isinstance(c, m.ServeChunk) for c in chunks)
+        assert [c.seq for c in chunks] == list(range(8))
+        assert isinstance(done, m.ServeComplete)
+        assert done.completed and done.error_code is None
+        assert done.tokens == 8 and done.ttfb_ms > 0
+
+        # heartbeat with tightened Eq. (14) thresholds fires a migration;
+        # the invoker sees it in the ack AND as a SessionEvent
+        hb = send(gw, m.HeartbeatReport(session_id=sid, trigger_l99=0.0,
+                                        trigger_ttfb=0.0))
+        assert isinstance(hb, m.HeartbeatAck)
+        assert hb.migration and hb.migration["migrated"]
+        assert hb.migration["from_site"] == src_site
+        assert hb.migration["to_site"] != src_site
+        assert hb.committed        # MBB: never left the committed domain
+
+        events = send(gw, m.EventPoll(invoker="car-1"))
+        states = [e.state for e in events if e.event == "state-transition"]
+        assert states[:4] == ["discovered", "anchored", "prepared",
+                              "committed"]
+        migs = [e for e in events if e.event == "migration"]
+        assert len(migs) == 1
+        assert migs[0].detail["to_site"] == hb.migration["to_site"]
+        assert migs[0].detail["interruption_ms"] == 0.0
+
+        # serving continues at the NEW anchor after the event
+        frames = send(gw, m.ServeRequest(session_id=sid, gen_tokens=4))
+        assert frames[-1].completed
+
+        rel = send(gw, m.ReleaseRequest(session_id=sid))
+        assert isinstance(rel, m.ReleaseAck)
+        assert rel.state == "released" and rel.tokens == 12
+
+        err = first(send(gw, m.ServeRequest(session_id=sid, gen_tokens=1)))
+        assert isinstance(err, m.ErrorResponse)
+        assert err.code == "E_DEADLINE"
+
+    def test_timer_incompatible_asp_is_bad_request(self, gw):
+        """An ASP whose T_max is below this gateway's τ_mig is refused as
+        an input error, never an E_INTERNAL leak."""
+        import dataclasses
+        asp = default_asp()
+        asp = dataclasses.replace(asp, objectives=dataclasses.replace(
+            asp.objectives, ttfb_ms=100.0, p95_ms=200.0, p99_ms=300.0,
+            t_max_ms=1500.0))
+        err = send(gw, m.DiscoverRequest(invoker="x", zone="zone-a",
+                                         asp=asp))
+        assert isinstance(err, m.ErrorResponse)
+        assert err.code == "E_BAD_REQUEST"
+
+    def test_unary_serves_do_not_become_phantom_completions(self, gw):
+        """drain()/CompletionPoll carry ONLY async-submitted results: a
+        unary serve (wire or direct orchestrator call) already returned
+        its result inline."""
+        with SessionClient(gw, default_asp(), invoker="ue-u") as c:
+            list(c.generate(gen_tokens=2))           # wire unary
+            s = gw.orch.sessions[c.session_id]
+            gw.orch.serve(s, prompt_tokens=8, gen_tokens=2)  # direct unary
+            rid = c.submit(prompt_tokens=8, gen_tokens=2)    # async
+            done = gw.drain()
+            assert [d.request_id for d in done] == [rid]
+
+    def test_failed_establishment_maps_cause_code(self, gw):
+        # BASIC tier + impossible cost envelope ⇒ every candidate excluded
+        import dataclasses
+        asp = dataclasses.replace(default_asp(),
+                                  max_cost_per_1k_tokens=1e-9)
+        disc = send(gw, m.DiscoverRequest(invoker="x", zone="zone-a",
+                                          asp=asp))
+        pg = send(gw, m.PageRequest(session_id=disc.session_id))
+        assert isinstance(pg, m.ErrorResponse)
+        assert pg.code == "E_NO_FEASIBLE_BINDING"
+        assert pg.cause == "no feasible binding"
+
+    def test_unknown_session_and_bad_json(self, gw):
+        err = first(send(gw, m.ServeRequest(session_id="ais-999999")))
+        assert err.code == "E_UNKNOWN_SESSION"
+        raw = gw.handle_json("{\"type\": \"no-such\"}")
+        assert m.from_json(raw).code == "E_BAD_REQUEST"
+        for payload in ("[]", "42", "null", "\"hi\""):
+            assert m.from_json(gw.handle_json(payload)).code == \
+                "E_BAD_REQUEST"
+
+    def test_stream_carries_invoker_request_id(self, gw):
+        disc = send(gw, m.DiscoverRequest(invoker="a", zone="zone-a",
+                                          asp=default_asp()))
+        sid = disc.session_id
+        send(gw, m.PageRequest(session_id=sid))
+        prep = send(gw, m.PrepareRequest(session_id=sid))
+        send(gw, m.CommitRequest(session_id=sid,
+                                 prepared_ref=prep.prepared_ref))
+        frames = send(gw, m.ServeRequest(session_id=sid, gen_tokens=3,
+                                         request_id="corr-7"))
+        assert all(f.request_id == "corr-7" for f in frames)
+
+    def test_schema_version_negotiation(self, gw):
+        req = m.ReleaseRequest(session_id="s", schema_version="2.0")
+        err = send(gw, req)
+        assert err.code == "E_SCHEMA_VERSION"
+        # incompatible ASP major embedded in an otherwise-valid request
+        wire = m.DiscoverRequest(invoker="x", zone="z",
+                                 asp=default_asp()).to_wire()
+        wire["asp"]["schema_version"] = "9.0"
+        import json
+        out = m.from_json(gw.handle_json(json.dumps(wire)))
+        assert out.code == "E_SCHEMA_VERSION"
+
+
+class TestIdempotency:
+    def _prepare(self, gw, key="pk"):
+        disc = send(gw, m.DiscoverRequest(invoker="a", zone="zone-a",
+                                          asp=default_asp()))
+        sid = disc.session_id
+        send(gw, m.PageRequest(session_id=sid))
+        prep = send(gw, m.PrepareRequest(session_id=sid,
+                                         idempotency_key=key))
+        return sid, prep
+
+    def test_duplicate_prepare_reserves_once(self, gw):
+        sid, prep = self._prepare(gw)
+        site = gw.orch.sites[prep.site_id]
+        before = site.slots_in_use()
+        again = send(gw, m.PrepareRequest(session_id=sid,
+                                          idempotency_key="pk"))
+        assert again == prep                     # original outcome replayed
+        assert site.slots_in_use() == before     # no second reservation
+
+    def test_duplicate_commit_does_not_double_reserve(self, gw):
+        sid, prep = self._prepare(gw)
+        req = m.CommitRequest(session_id=sid, prepared_ref=prep.prepared_ref,
+                              idempotency_key="ck")
+        com = send(gw, req)
+        assert isinstance(com, m.CommitResponse)
+        site = gw.orch.sites[prep.site_id]
+        slots, qos = site.slots_in_use(), com.record["qfi"]
+        again = send(gw, req)
+        assert again == com                      # byte-identical outcome
+        assert site.slots_in_use() == slots      # provably not re-reserved
+        assert again.record["qfi"] == qos
+        # a RETRY WITHOUT the key is not idempotent: the state machine
+        # refuses the second commit instead of silently re-reserving
+        fresh = send(gw, m.CommitRequest(session_id=sid,
+                                         prepared_ref=prep.prepared_ref,
+                                         idempotency_key="other"))
+        assert isinstance(fresh, m.ErrorResponse)
+        assert site.slots_in_use() == slots
+
+    def test_lost_response_page_and_prepare_replay(self, gw):
+        """A keyless duplicate PAGE/PREPARE (response lost in transport)
+        replays the original outcome; it must NOT fail the session."""
+        disc = send(gw, m.DiscoverRequest(invoker="a", zone="zone-a",
+                                          asp=default_asp()))
+        sid = disc.session_id
+        paged = send(gw, m.PageRequest(session_id=sid))
+        assert send(gw, m.PageRequest(session_id=sid)) == paged
+        prep = send(gw, m.PrepareRequest(session_id=sid))
+        again = send(gw, m.PrepareRequest(session_id=sid))
+        assert again == prep
+        site = gw.orch.sites[prep.site_id]
+        assert site.slots_in_use() == 1          # one reservation, not two
+        com = send(gw, m.CommitRequest(session_id=sid,
+                                       prepared_ref=prep.prepared_ref))
+        assert isinstance(com, m.CommitResponse)
+        assert com.record["state"] == "committed"
+
+    def test_commit_retry_after_failed_commit_is_structured(self, gw):
+        """A COMMIT refused by the state machine must leave the gateway in
+        a state where the retry gets a structured error, not E_INTERNAL."""
+        sid, prep = self._prepare(gw)
+        # let the provisional leases lapse: commit now fails cleanly
+        gw.orch.clock.advance(10 * gw.orch.timers.tau_com)
+        req = m.CommitRequest(session_id=sid,
+                              prepared_ref=prep.prepared_ref)
+        first_try = send(gw, req)
+        assert first_try.code == "E_DEADLINE"
+        retry = send(gw, req)
+        assert isinstance(retry, m.ErrorResponse)
+        assert retry.code == "E_BAD_REQUEST"     # ref gone, told so plainly
+
+    def test_key_reuse_with_different_payload_conflicts(self, gw):
+        sid, prep = self._prepare(gw)
+        com = send(gw, m.CommitRequest(session_id=sid,
+                                       prepared_ref=prep.prepared_ref,
+                                       idempotency_key="k"))
+        assert isinstance(com, m.CommitResponse)
+        err = send(gw, m.CommitRequest(session_id=sid,
+                                       prepared_ref="prep-bogus",
+                                       idempotency_key="k"))
+        assert err.code == "E_IDEMPOTENCY_CONFLICT"
+
+
+class TestSessionClient:
+    def test_context_managed_stream_and_release(self, gw):
+        asp = default_asp(tier=QualityTier.PREMIUM)
+        with SessionClient(gw, asp, invoker="ue-1") as c:
+            assert c.record["state"] == "committed"
+            stream = c.generate(prompt_tokens=32, gen_tokens=6)
+            assert len(list(stream)) == 6
+            assert stream.complete.completed
+            assert [e.state for e in c.events()].count("committed") == 1
+        # context exit released the session server-side
+        err = first(send(gw, m.ServeRequest(session_id=c.session_id)))
+        assert err.code == "E_DEADLINE"
+
+    def test_consent_revocation_is_typed(self, gw):
+        with SessionClient(gw, default_asp(), invoker="ue-2") as c:
+            gw.orch.policy.revoke(gw.orch.sessions[c.session_id].authz_ref)
+            with pytest.raises(ConsentRevoked) as ei:
+                list(c.generate())
+            assert ei.value.code == "E_CONSENT"
+            assert ei.value.cause.value == "consent violation"
+
+    def test_auto_lease_renewal(self, gw):
+        clock = gw.orch.clock
+        step = 0.27 * gw.orch.timers.lease_s     # 6 steps ≈ 1.6 leases
+        with SessionClient(gw, default_asp(), invoker="ue-3") as c:
+            for _ in range(6):
+                clock.advance(step)
+                list(c.generate(gen_tokens=2))   # renews past the margin
+            assert gw.orch.sessions[c.session_id].committed()
+
+        with SessionClient(gw, default_asp(), invoker="ue-4",
+                           auto_renew=False) as c2:
+            with pytest.raises(DeadlineExpired):
+                for _ in range(6):               # dies once the lease lapses
+                    clock.advance(step)
+                    list(c2.generate(gen_tokens=2))
+
+    def test_migration_updates_anchor(self, gw):
+        asp = default_asp(mobility=MobilityClass.VEHICULAR)
+        with SessionClient(gw, asp, invoker="car-9") as c:
+            old = c.anchor
+            ack = c.heartbeat(trigger_l99=0.0, trigger_ttfb=0.0)
+            assert ack.migration["migrated"]
+            assert c.anchor == ack.migration["to_site"] != old
+            assert any(e.event == "migration" for e in c.events())
+
+
+class TestServerlessParity:
+    """Sessions established northbound and sessions established directly on
+    the orchestrator serve through the same planes and meters."""
+
+    def test_async_submit_completions_over_wire(self, gw):
+        """stream=False serves are fully drivable northbound: SubmitAck,
+        then ServeComplete frames via CompletionPoll after a drain cycle."""
+        with SessionClient(gw, default_asp(), invoker="ue-async") as c:
+            rids = [c.submit(prompt_tokens=16, gen_tokens=4)
+                    for _ in range(3)]
+            assert all(rids)
+            # advance the planes without consuming the buffer (drain() is
+            # the in-process consumer; the wire consumer is CompletionPoll)
+            gw.pump(gw.orch.clock.now() + 60.0)
+            done = c.completions()
+            assert {d.request_id for d in done} == set(rids)
+            assert all(isinstance(d, m.ServeComplete) and d.tokens == 4
+                       for d in done)
+            assert c.completions() == []     # consumed exactly once
+
+    def test_wire_session_is_metered(self, gw):
+        with SessionClient(gw, default_asp(), invoker="ue-m") as c:
+            for _ in range(3):
+                list(c.generate(prompt_tokens=16, gen_tokens=4))
+            rep = c.compliance()
+            assert rep.n == 3
+            ack = c.release()
+            assert ack.tokens == 12 and ack.total_cost > 0

@@ -1,0 +1,217 @@
+"""Wire-layer property tests: every northbound message type survives the
+JSON round trip bit-identically, and the Eq. (12) failure-cause ↔ error-code
+mapping is exhaustive and bijective."""
+
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import messages as m
+from repro.core.asp import (ASP, ASP_SCHEMA_VERSION, InteractionMode,
+                            Modality, MobilityClass, Objectives, QualityTier,
+                            default_asp)
+from repro.core.failures import FailureCause
+
+
+def make_asp(tier=2, mobility="static", cost=1.0, ladder=()):
+    return ASP(
+        modality=Modality.TEXT_GEN,
+        interaction=InteractionMode.STREAMING,
+        objectives=Objectives(ttfb_ms=100.0, p95_ms=300.0, p99_ms=500.0,
+                              rho_min=0.99, t_max_ms=1000.0, nu_min=5.0),
+        tier=QualityTier(tier), mobility=MobilityClass(mobility),
+        max_cost_per_1k_tokens=cost,
+        fallback_ladder=tuple(ladder))
+
+
+#: one representative instance per wire type — the exhaustiveness test
+#: fails when a new message type is registered without an example here
+EXAMPLES = {
+    "discover_request": m.DiscoverRequest(
+        invoker="alice", zone="zone-a", asp=default_asp()),
+    "discover_response": m.DiscoverResponse(
+        session_id="ais-000001",
+        candidates=[{"model_id": "edge-tiny", "model_version": "1.0",
+                     "site_id": "edge-a", "klass": "premium",
+                     "admissible": True, "slack": 212.5,
+                     "exclusion_reason": ""}]),
+    "page_request": m.PageRequest(session_id="ais-000001",
+                                  exclude_sites=["edge-a"]),
+    "page_response": m.PageResponse(
+        session_id="ais-000001", model_id="edge-tiny", model_version="1.0",
+        site_id="edge-b", klass="premium", predicted_cost_per_1k=0.07),
+    "prepare_request": m.PrepareRequest(session_id="ais-000001",
+                                        idempotency_key="k-1"),
+    "prepare_response": m.PrepareResponse(
+        session_id="ais-000001", prepared_ref="prep-000001",
+        site_id="edge-b", qfi=7),
+    "commit_request": m.CommitRequest(session_id="ais-000001",
+                                      prepared_ref="prep-000001",
+                                      idempotency_key="k-2"),
+    "commit_response": m.CommitResponse(
+        session_id="ais-000001", record={"anchor": "edge-b", "qfi": 7},
+        lease_s=30.0, at_s=1.25),
+    "serve_request": m.ServeRequest(
+        session_id="ais-000001", prompt_tokens=64, gen_tokens=8,
+        prompt=[1, 2, 3], stream=True, request_id="r-1"),
+    "submit_ack": m.SubmitAck(session_id="ais-000001", request_id="r-1",
+                              accepted=True, at_s=2.0),
+    "serve_chunk": m.ServeChunk(session_id="ais-000001", request_id="r-1",
+                                seq=3, token_id=1440),
+    "serve_complete": m.ServeComplete(
+        session_id="ais-000001", request_id="r-1", klass="premium",
+        tokens=8, prompt_tokens=64, ttfb_ms=56.0, latency_ms=240.5,
+        queue_wait_ms=12.5, completed=True, error_code=None,
+        token_ids=[1, 2, 3], at_s=3.5),
+    "heartbeat_report": m.HeartbeatReport(
+        session_id="ais-000001", trigger_l99=0.0, trigger_ttfb=0.35),
+    "heartbeat_ack": m.HeartbeatAck(
+        session_id="ais-000001", committed=True, lease_s=30.0,
+        migration={"migrated": True, "to_site": "edge-b"}, at_s=4.0),
+    "session_event": m.SessionEvent(
+        session_id="ais-000001", event="migration", state="committed",
+        detail={"from_site": "edge-a", "to_site": "edge-b"}, at_s=5.0),
+    "event_poll": m.EventPoll(invoker="alice"),
+    "completion_poll": m.CompletionPoll(invoker="alice"),
+    "release_request": m.ReleaseRequest(session_id="ais-000001"),
+    "release_ack": m.ReleaseAck(session_id="ais-000001", state="released",
+                                tokens=960, total_cost=0.21),
+    "compliance_request": m.ComplianceRequest(session_id="ais-000001"),
+    "compliance_report": m.ComplianceReport(
+        session_id="ais-000001", in_compliance=True,
+        z={"q99_ms": 59.0, "rho": 1.0}, n=20),
+    "error": m.ErrorResponse(code="E_DEADLINE", cause="deadline expiry",
+                             detail="PREPARE exceeded τ",
+                             session_id="ais-000001"),
+}
+
+
+class TestRoundTrip:
+    def test_examples_cover_every_registered_type(self):
+        assert set(EXAMPLES) == set(m.message_types()), \
+            "add a round-trip example for every registered wire type"
+
+    @pytest.mark.parametrize("kind", sorted(EXAMPLES))
+    def test_json_round_trip_identical(self, kind):
+        msg = EXAMPLES[kind]
+        again = m.from_json(msg.to_json())
+        assert again == msg
+        assert type(again) is type(msg)
+        # the wire form is pure JSON (no object leaks through)
+        json.loads(msg.to_json())
+
+    @pytest.mark.parametrize("kind", sorted(EXAMPLES))
+    def test_version_envelope_present(self, kind):
+        wire = EXAMPLES[kind].to_wire()
+        assert wire["type"] == kind
+        assert wire["schema_version"] == m.SCHEMA_VERSION
+
+    def test_unknown_type_rejected(self):
+        with pytest.raises(ValueError):
+            m.from_wire({"type": "no-such-message"})
+
+    def test_non_object_frame_rejected(self):
+        with pytest.raises(ValueError):
+            m.from_wire([1, 2, 3])
+
+    def test_minor_version_extra_fields_ignored(self):
+        """Forward compatibility within a major: fields added by a newer
+        1.x peer decode cleanly instead of failing the request."""
+        wire = {"type": "page_request", "session_id": "s",
+                "exclude_sites": [], "schema_version": "1.3",
+                "priority": 7}                    # hypothetical 1.3 field
+        msg = m.from_wire(wire)
+        assert isinstance(msg, m.PageRequest)
+        assert msg.session_id == "s" and msg.schema_version == "1.3"
+
+
+class TestAspWire:
+    @given(tier=st.sampled_from([1, 2, 3]),
+           mobility=st.sampled_from(["static", "nomadic", "vehicular"]),
+           cost=st.floats(0.01, 50.0),
+           ladder_tier=st.sampled_from([1, 2, 3]))
+    @settings(max_examples=30)
+    def test_asp_round_trip(self, tier, mobility, cost, ladder_tier):
+        asp = make_asp(tier, mobility, cost,
+                       ladder=(("edge-tiny", ladder_tier),))
+        again = ASP.from_wire(asp.to_wire())
+        assert again == asp
+        assert again.digest() == asp.digest()
+
+    @given(tier=st.sampled_from([1, 2, 3]),
+           mobility=st.sampled_from(["static", "nomadic", "vehicular"]))
+    @settings(max_examples=10)
+    def test_discover_request_round_trip(self, tier, mobility):
+        req = m.DiscoverRequest(invoker="ue", zone="z",
+                                asp=make_asp(tier, mobility))
+        assert m.from_json(req.to_json()) == req
+
+    def test_digest_binds_schema_version(self):
+        wire = default_asp().to_wire()
+        assert wire["schema_version"] == ASP_SCHEMA_VERSION
+        # same fields under a different claimed version ⇒ different identity
+        import hashlib, json as _json
+        tampered = dict(wire, schema_version="999.0")
+        h = hashlib.sha256(
+            _json.dumps(tampered, sort_keys=True).encode()).hexdigest()[:16]
+        assert h != default_asp().digest()
+
+    def test_incompatible_major_rejected(self):
+        wire = default_asp().to_wire()
+        wire["schema_version"] = "2.0"
+        with pytest.raises(ValueError, match="schema version"):
+            ASP.from_wire(wire)
+
+    def test_minor_bump_accepted(self):
+        wire = default_asp().to_wire()
+        wire["schema_version"] = "1.7"
+        assert ASP.from_wire(wire) == default_asp()
+
+
+@given(prompt=st.lists(st.integers(0, 50_000), min_size=0, max_size=32),
+       prompt_tokens=st.integers(1, 4096), gen_tokens=st.integers(1, 1024))
+@settings(max_examples=25)
+def test_serve_request_round_trip(prompt, prompt_tokens, gen_tokens):
+    req = m.ServeRequest(session_id="s", prompt_tokens=prompt_tokens,
+                         gen_tokens=gen_tokens,
+                         prompt=prompt or None, stream=False)
+    assert m.from_json(req.to_json()) == req
+
+
+@given(ttfb=st.floats(0.0, 1e5), latency=st.floats(0.0, 1e6),
+       wait=st.floats(0.0, 1e5), tokens=st.integers(0, 100_000))
+@settings(max_examples=25)
+def test_serve_complete_round_trip(ttfb, latency, wait, tokens):
+    res = m.ServeComplete(
+        session_id="s", request_id="r", klass="assured", tokens=tokens,
+        ttfb_ms=ttfb, latency_ms=latency, queue_wait_ms=wait,
+        completed=latency <= 1e5, error_code="E_DEADLINE")
+    assert m.from_json(res.to_json()) == res
+
+
+class TestErrorCodes:
+    def test_mapping_is_exhaustive(self):
+        """Every Eq. (12) cause has a code — adding a cause without a code
+        is a wire-protocol break and must fail here."""
+        assert set(m.ERROR_CODE_TABLE) == set(FailureCause)
+
+    def test_codes_distinct_and_bijective(self):
+        codes = list(m.ERROR_CODE_TABLE.values())
+        assert len(set(codes)) == len(codes)
+        for cause in FailureCause:
+            assert m.cause_for_code(m.code_for_cause(cause)) is cause
+
+    def test_gateway_codes_disjoint(self):
+        assert not set(m.GATEWAY_CODES) & set(m.ERROR_CODE_TABLE.values())
+        for code in m.GATEWAY_CODES:
+            assert m.cause_for_code(code) is None
+
+    def test_error_response_from_session_error(self):
+        from repro.core.failures import SessionError
+        for cause in FailureCause:
+            err = m.ErrorResponse.from_session_error(
+                SessionError(cause, "why"), session_id="s")
+            assert err.code == m.code_for_cause(cause)
+            assert err.cause == cause.value
+            assert m.from_json(err.to_json()) == err
