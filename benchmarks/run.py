@@ -40,7 +40,8 @@ def main() -> None:
     n_req = 4000 if args.fast else 20_000
     n_sess = 15 if args.fast else 40
 
-    from benchmarks import gateway_bench, migration_bench, plane_bench  # noqa: E402
+    from benchmarks import (federation_bench, gateway_bench,  # noqa: E402
+                            migration_bench, plane_bench)
     benches = [
         ("fig2_p99_vs_load",
          lambda: figures.fig2_p99_vs_load(n_requests=n_req)),
@@ -57,6 +58,9 @@ def main() -> None:
         ("migration_continuity",
          lambda: migration_bench.figure_rows(
              n_sessions=3 if args.fast else 10)),
+        ("federation",
+         lambda: federation_bench.figure_rows(
+             60 if args.fast else 200)),
     ]
 
     os.makedirs("artifacts/bench", exist_ok=True)

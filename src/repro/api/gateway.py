@@ -59,6 +59,12 @@ class NorthboundGateway:
                  completion_buffer_len: int = 1 << 20,
                  idempotency_window: int = 4096,
                  establishment_window: int = 4096):
+        # a federation DomainController is accepted in place of its core:
+        # the gateway contract is unchanged, establishment just becomes
+        # home-routed (home first, then east-west offers)
+        if orch is not None and hasattr(orch, "core") and \
+                isinstance(orch.core, Orchestrator):
+            orch = orch.core
         self.orch = orch if orch is not None else Orchestrator(clock=clock)
         self.orch.result_sinks.append(self._on_result)
         self._pending: Dict[str, _Pending] = {}
@@ -221,14 +227,7 @@ class NorthboundGateway:
             cands = self.orch.discover_for(session)
             self._pending[session.session_id].candidates = cands
             self._emit(session, "state-transition")
-            wire = [{
-                "model_id": c.model.model_id,
-                "model_version": c.model.version,
-                "site_id": c.site_id, "klass": c.klass.name,
-                "admissible": c.admissible,
-                "slack": c.slack if c.prediction is not None else None,
-                "exclusion_reason": c.exclusion_reason,
-            } for c in cands]
+            wire = [c.to_wire() for c in cands]
             return m.DiscoverResponse(session_id=session.session_id,
                                       candidates=wire)
         return self._establishment_step(session, run)
@@ -253,7 +252,8 @@ class NorthboundGateway:
                 model_id=chosen.model.model_id,
                 model_version=chosen.model.version,
                 site_id=chosen.site_id, klass=chosen.klass.name,
-                predicted_cost_per_1k=chosen.prediction.cost_per_1k)
+                predicted_cost_per_1k=chosen.prediction.cost_per_1k,
+                domain=chosen.domain)
             return pending.page_response
         return self._establishment_step(session, run)
 

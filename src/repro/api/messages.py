@@ -28,8 +28,10 @@ from repro.core.asp import ASP
 from repro.core.failures import FailureCause, SessionError
 
 #: wire-schema version of the northbound protocol; majors must match
-#: between invoker and gateway (minor additions are backward-compatible)
-SCHEMA_VERSION = "1.0"
+#: between invoker and gateway (minor additions are backward-compatible).
+#: 1.1: federation — candidate entries and PageResponse carry the owning
+#: ``domain`` (and candidate ``region``); "" means the home domain.
+SCHEMA_VERSION = "1.1"
 
 _REGISTRY: Dict[str, type] = {}
 
@@ -112,7 +114,9 @@ class DiscoverResponse(Message):
     TYPE: ClassVar[str] = "discover_response"
     session_id: str
     #: annotated candidate set 𝒦 — each entry {model_id, model_version,
-    #: site_id, klass, admissible, slack, exclusion_reason}
+    #: site_id, klass, admissible, slack, exclusion_reason, domain,
+    #: region}; federated candidates carry domain-qualified site ids and
+    #: exclusion reasons prefixed with the owning domain
     candidates: List[dict] = field(default_factory=list)
     schema_version: str = SCHEMA_VERSION
 
@@ -136,6 +140,9 @@ class PageResponse(Message):
     site_id: str
     klass: str
     predicted_cost_per_1k: float = 0.0
+    #: administrative domain of the anchor ("" = the home domain) — the
+    #: client contract is otherwise unchanged by federation
+    domain: str = ""
     schema_version: str = SCHEMA_VERSION
 
 

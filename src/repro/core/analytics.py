@@ -48,6 +48,18 @@ class Analytics:
         self._p99: Dict[Tuple[str, str], EWMA] = {}
         self._mobility: Dict[str, EWMA] = {}   # invoker -> handover rate /s
         self._deny: set = set()                # A1-style site deny list
+        #: per-site load epoch: bumped whenever NEW evidence about a site
+        #: arrives (heartbeat load, measured latency, A1 policy) — the
+        #: invalidation key for predictor memoization
+        self._epochs: Dict[str, int] = {}
+
+    def _bump(self, site_id: str) -> None:
+        self._epochs[site_id] = self._epochs.get(site_id, 0) + 1
+
+    def load_epoch(self, site_id: str) -> int:
+        """Monotone counter of ξ updates for one site. Predictions cached
+        at epoch k are valid until the next observation arrives."""
+        return self._epochs.get(site_id, 0)
 
     # -- ingestion -------------------------------------------------------
     def observe_site(self, site_id: str, *, utilization: float,
@@ -55,9 +67,11 @@ class Analytics:
         self._util.setdefault(site_id, EWMA()).update(utilization)
         self._queue.setdefault(site_id, EWMA()).update(queue_depth)
         self._rate.setdefault(site_id, EWMA()).update(arrival_rate)
+        self._bump(site_id)
 
     def observe_latency(self, site_id: str, model_key: str, p99_ms: float) -> None:
         self._p99.setdefault((site_id, model_key), EWMA()).update(p99_ms)
+        self._bump(site_id)
 
     def observe_handover(self, invoker: str, rate_per_s: float) -> None:
         self._mobility.setdefault(invoker, EWMA(alpha=0.3)).update(rate_per_s)
@@ -65,9 +79,11 @@ class Analytics:
     def deny_site(self, site_id: str) -> None:
         """A1-style policy guidance: steer away from this site."""
         self._deny.add(site_id)
+        self._bump(site_id)
 
     def allow_site(self, site_id: str) -> None:
         self._deny.discard(site_id)
+        self._bump(site_id)
 
     # -- ξ exposure ---------------------------------------------------------
     def site_context(self, site_id: str) -> SiteContext:

@@ -166,9 +166,15 @@ class ASP:
 
     def digest(self) -> str:
         """Stable digest bound into the AIS record (Section III-B); hashes
-        the versioned wire form, so the schema version is part of identity."""
-        body = json.dumps(self.to_wire(), sort_keys=True)
-        return hashlib.sha256(body.encode()).hexdigest()[:16]
+        the versioned wire form, so the schema version is part of identity.
+        Cached on the (frozen) instance — the digest keys every memoized
+        prediction, so it must not cost a JSON dump per lookup."""
+        cached = self.__dict__.get("_digest_cache")
+        if cached is None:
+            body = json.dumps(self.to_wire(), sort_keys=True)
+            cached = hashlib.sha256(body.encode()).hexdigest()[:16]
+            object.__setattr__(self, "_digest_cache", cached)
+        return cached
 
     def continuity_required(self) -> bool:
         return self.mobility is not MobilityClass.STATIC

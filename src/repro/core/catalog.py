@@ -97,6 +97,14 @@ class Catalog:
             raise KeyError(model_id)
         return sorted(matches, key=lambda e: e.version)[-1]
 
+    def keys(self):
+        """All registered model keys ("model_id@version")."""
+        return tuple(self._entries.keys())
+
+    def entries(self):
+        """All registered ModelEntry records."""
+        return tuple(self._entries.values())
+
     def admissible(self, asp: ASP):
         """All entries whose constraints admit this ASP (hard filter of
         Eq. 7 — ranking happens in discovery)."""

@@ -14,6 +14,7 @@ attributable, Eq. 12).
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import List
 
@@ -33,6 +34,30 @@ class Candidate:
     klass: TransportClass
     admissible: bool
     exclusion_reason: str = ""
+    #: owning administrative domain of an east-west offer; "" = local.
+    #: In a merged federated set, exclusion reasons are prefixed with the
+    #: owning domain so NO_FEASIBLE_BINDING stays attributable (Eq. 12).
+    domain: str = ""
+    region: str = ""             # site region (sovereignty check w/o sites)
+
+    def to_wire(self, *, include_prediction: bool = False) -> dict:
+        """Annotated-candidate wire entry — the ONE shape both the
+        northbound ``DiscoverResponse`` and the east-west
+        ``DiscoverOffer`` carry (offers add the predicted boundary
+        quantities; the northbound surface exposes only the slack)."""
+        out = {
+            "model_id": self.model.model_id,
+            "model_version": self.model.version,
+            "site_id": self.site_id, "klass": self.klass.name,
+            "admissible": self.admissible,
+            "slack": self.slack if self.prediction is not None else None,
+            "exclusion_reason": self.exclusion_reason,
+            "domain": self.domain, "region": self.region,
+        }
+        if include_prediction:
+            out["prediction"] = dataclasses.asdict(self.prediction) \
+                if self.prediction is not None else None
+        return out
 
 
 def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
@@ -50,23 +75,36 @@ def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
     for model in models:
         key = f"{model.model_id}@{model.version}"
         for site_id, site in sites.items():
-            # ---- hard constraints (membership in 𝒦) -----------------
-            if site.spec.region not in asp.allowed_regions:
-                out.append(Candidate(model, site_id, None, float("-inf"),
-                                     klass, False, "sovereignty"))
+            # guest views of other domains' sites are reached through the
+            # east-west DISCOVER solicitation, never as local candidates
+            if getattr(site, "is_guest_view", False):
                 continue
-            if set(model.regions).isdisjoint({site.spec.region}):
-                out.append(Candidate(model, site_id, None, float("-inf"),
-                                     klass, False, "model-region-license"))
+            region = site.spec.region
+
+            def _excl(reason: str) -> Candidate:
+                return Candidate(model, site_id, None, float("-inf"),
+                                 klass, False, reason, region=region)
+
+            # ---- hard constraints (membership in 𝒦) -----------------
+            if region not in asp.allowed_regions:
+                out.append(_excl("sovereignty"))
+                continue
+            if set(model.regions).isdisjoint({region}):
+                out.append(_excl("model-region-license"))
                 continue
             if not site.hosts(key):
-                out.append(Candidate(model, site_id, None, float("-inf"),
-                                     klass, False, "not-resident"))
+                out.append(_excl("not-resident"))
+                continue
+            if site.slots_in_use() >= site.spec.decode_slots:
+                # current occupancy IS a feasibility signal: a saturated
+                # site would only fail later at PREPARE with
+                # COMPUTE_SCARCITY — surfacing it here lets home-first
+                # federation spill the establish instead
+                out.append(_excl("compute-saturated"))
                 continue
             if analytics is not None and \
                     not analytics.site_context(site_id).healthy:
-                out.append(Candidate(model, site_id, None, float("-inf"),
-                                     klass, False, "a1-denied"))
+                out.append(_excl("a1-denied"))
                 continue
             # ---- annotate with predicted boundary quantities ----------
             pred = predictors.predict(asp, model, site, zone, klass,
@@ -81,7 +119,7 @@ def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
                 "cost-envelope" if pred.cost_per_1k > asp.max_cost_per_1k_tokens
                 else "negative-slack")
             out.append(Candidate(model, site_id, pred, slack, klass,
-                                 admissible, reason))
+                                 admissible, reason, region=region))
     out.sort(key=lambda c: c.slack, reverse=True)
     return out
 
@@ -90,6 +128,18 @@ def admissible_set(candidates: List[Candidate]) -> List[Candidate]:
     k = [c for c in candidates if c.admissible]
     if not k:
         reasons = {c.exclusion_reason for c in candidates}
+        # strip federation domain prefixes for the cause decision — the
+        # full (domain-qualified) reasons stay in the detail string
+        bare = {r.split(":", 1)[-1] for r in reasons}
+        if bare and bare <= {"compute-saturated"}:
+            # every candidate exists and would bind — the anchors are just
+            # full right now. Eq. (12) keeps this distinct from "no
+            # feasible binding": the remediation is retry/backoff (or
+            # east-west spillover), not relaxing the objectives.
+            raise SessionError(
+                FailureCause.COMPUTE_SCARCITY,
+                f"all candidate sites saturated "
+                f"({', '.join(sorted(reasons))})")
         raise SessionError(
             FailureCause.NO_FEASIBLE_BINDING,
             f"all candidates excluded ({', '.join(sorted(reasons))})")

@@ -97,7 +97,8 @@ class PlaneTransferPath:
 
     def __init__(self, plane_for: Callable[[object], object], *,
                  link_bw: float = 5e9, verify: bool = True,
-                 overlap_rounds: int = 1, clock: Optional[Clock] = None):
+                 overlap_rounds: int = 1, clock: Optional[Clock] = None,
+                 ew_link_bw: float = 1.25e9):
         self.plane_for = plane_for
         self.link_bw = link_bw
         self.verify = verify
@@ -106,6 +107,18 @@ class PlaneTransferPath:
         #: prepares (set 0 to disable for pure control-plane callers)
         self.overlap_rounds = overlap_rounds
         self.clock = clock
+        #: inter-domain (east-west) link: roaming state crosses operator
+        #: boundaries over a peering link, not the intra-domain DCN
+        self.ew_link_bw = ew_link_bw
+
+    @staticmethod
+    def _boundary_scrub(payload: dict) -> dict:
+        """Exposure boundary for roaming transfers: only the slot-essential
+        state (cache tensors, position, last token) crosses the domain
+        boundary — any auxiliary per-request bookkeeping a backend attaches
+        stays home (§ federation trust boundary)."""
+        keep = ("cache", "position", "last_token")
+        return {k: v for k, v in payload.items() if k in keep}
 
     # ------------------------------------------------------------------
     def _injections(self, src_plane, dst_plane):
@@ -130,6 +143,9 @@ class PlaneTransferPath:
         dst_plane = self.plane_for(dst_site)
         sid = session.session_id
         backend = src_plane.backend
+        cross_domain = getattr(src_site, "domain_id", None) != \
+            getattr(dst_site, "domain_id", None)
+        link_bw = self.ew_link_bw if cross_domain else self.link_bw
         # source keeps streaming while the target prepares: run decode
         # rounds up to the swap point (tokens produced here are accounted
         # to the source plane's in-flight request as usual)
@@ -141,7 +157,7 @@ class PlaneTransferPath:
             # requests still follow the session to its new anchor; model
             # the wire time of the declared payload
             handoff = src_plane.detach_session(sid)
-            wire = (payload_bytes or 0) / self.link_bw
+            wire = (payload_bytes or 0) / link_bw
             inj = self._injections(src_plane, dst_plane)
             if inj is not None:
                 wire += inj.extra_wire_s
@@ -151,8 +167,9 @@ class PlaneTransferPath:
         try:
             meta = state_transfer.transfer(
                 backend, dst_plane.backend, sid,
-                link_bw=self.link_bw, verify=self.verify,
+                link_bw=link_bw, verify=self.verify,
                 inject=self._injections(src_plane, dst_plane),
+                scrub=self._boundary_scrub if cross_domain else None,
                 clock=self.clock)
         except SessionError:
             src_plane.attach_session(handoff)
@@ -166,10 +183,10 @@ class PlaneTransferPath:
             src_plane.attach_session(handoff)
             raise SessionError(FailureCause.STATE_TRANSFER_FAILURE, str(e))
         wire_bytes = max(meta["bytes"], int(payload_bytes or 0))
-        extra = meta["wire_s_at_link"] - meta["bytes"] / self.link_bw
+        extra = meta["wire_s_at_link"] - meta["bytes"] / link_bw
         return TransferTicket(
             sid, src_plane, dst_plane, handoff=handoff, moved_state=True,
-            wire_s=wire_bytes / self.link_bw + extra,
+            wire_s=wire_bytes / link_bw + extra,
             nbytes=meta["bytes"], fingerprint=meta["fingerprint"])
 
     def commit(self, ticket: TransferTicket) -> None:
@@ -208,6 +225,10 @@ class MigrationController:
         self.timers = timers
         self.transfer_fn = transfer_fn or self._default_transfer
         self.analytics = analytics
+        #: set by a federation DomainController: re-paging then considers
+        #: east-west offers, and a remote target drives the cross-domain
+        #: 2PC — roaming make-before-break through the same transfer path
+        self.federation = None
 
     # ------------------------------------------------------------------
     def context_tokens(self, session: AISession) -> int:
@@ -233,7 +254,12 @@ class MigrationController:
         if not session.committed():
             return False
         b = session.binding
-        model = self.catalog.get(b.model_id, b.model_version)
+        try:
+            model = self.catalog.get(b.model_id, b.model_version)
+        except KeyError:
+            # roaming on a model this domain does not carry: no local
+            # prediction basis — triggers come from the visited side
+            return False
         site = self.sites[b.site_id]
         from repro.core.qos import PREMIUM, BEST_EFFORT
         klass = PREMIUM if session.asp.tier >= 2 else BEST_EFFORT
@@ -252,21 +278,35 @@ class MigrationController:
         prepared = None
         ticket: Optional[TransferTicket] = None
         two_phase = hasattr(self.transfer_fn, "begin")
+        fed = self.federation
         try:
-            cands = discover(session.asp, self.catalog, self.sites,
-                             self.predictors, zone, analytics=self.analytics)
+            if fed is not None:
+                cands = fed.merged_discover(session, zone,
+                                            exclude_sites=(src,))
+            else:
+                cands = discover(session.asp, self.catalog, self.sites,
+                                 self.predictors, zone,
+                                 analytics=self.analytics)
             target = page(session.asp, cands, exclude_sites=(src,))
-            model = target.model
+            remote = fed is not None and fed.is_remote(target)
             ctx = self.context_tokens(session)
-            prepared = self.coord.prepare(
-                model, target.site_id, zone, target.klass, slots=1,
-                cache_bytes=model.session_state_bytes(ctx),
-                hold_s=self.timers.tau_mig)
+            if remote:
+                # roaming handshake: visited PREPARE held through τ_mig
+                prepared = fed.prepare_remote(
+                    session, target, hold_s=self.timers.tau_mig,
+                    context_tokens=ctx)
+                payload = int(prepared.cache_bytes)
+            else:
+                model = target.model
+                payload = model.session_state_bytes(ctx)
+                prepared = self.coord.prepare(
+                    model, target.site_id, zone, target.klass, slots=1,
+                    cache_bytes=payload, hold_s=self.timers.tau_mig)
             # ---- state transfer under τ_mig, source still committed -----
             if two_phase:
                 ticket = self.transfer_fn.begin(
                     session, self.sites[src], self.sites[target.site_id],
-                    payload_bytes=model.session_state_bytes(ctx))
+                    payload_bytes=payload)
                 transfer_s = ticket.wire_s
             else:
                 transfer_s = float(self.transfer_fn(
@@ -281,7 +321,10 @@ class MigrationController:
                 raise SessionError(FailureCause.DEADLINE_EXPIRY,
                                    "migration deadline expired")
             # ---- commit target, THEN the old binding is released ---------
-            binding = self.coord.commit(prepared, model)
+            if remote:
+                binding = fed.commit_remote(session, target, prepared)
+            else:
+                binding = self.coord.commit(prepared, model)
             session.bind(binding)   # make-before-break swap (session.bind)
             if ticket is not None:
                 # data-plane break: source slot released, stream resumes on
@@ -301,7 +344,10 @@ class MigrationController:
             if ticket is not None:
                 self.transfer_fn.abort(ticket)
             if prepared is not None:
-                self.coord.abort(prepared)
+                if getattr(prepared, "is_federated", False):
+                    fed.abort_remote(prepared, reason=e.cause.value)
+                else:
+                    self.coord.abort(prepared)
             if session.state.value == "migrating":
                 # still committed on the source ⇒ fall back without teardown
                 session.state = type(session.state).COMMITTED

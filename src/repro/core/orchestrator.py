@@ -54,7 +54,7 @@ class Orchestrator:
                  timers: Optional[Timers] = None):
         self.clock = clock or Clock()
         self.catalog = catalog or default_catalog()
-        hosted = tuple(self.catalog._entries.keys())
+        hosted = self.catalog.keys()
         self.sites = sites or default_sites(self.clock, hosted)
         self.qos = QoSFlowManager(self.clock)
         self.policy = PolicyControl(self.clock)
@@ -78,6 +78,11 @@ class Orchestrator:
         #: single recorder drains — the northbound gateway subscribes here
         #: so async completions reach the invoker whichever path pops them
         self.result_sinks: list = []
+        #: set by a federation DomainController: this orchestrator becomes
+        #: the HOME core of that domain — DISCOVER merges east-west offers
+        #: (home-first) and PREPARE/COMMIT route cross-domain for remote
+        #: candidates. None ⇒ single-domain behaviour, unchanged.
+        self.federation = None
 
     # ------------------------------------------------------------------
     # stepwise lifecycle procedures — each northbound-drivable on its own;
@@ -96,11 +101,16 @@ class Orchestrator:
         return session
 
     def discover_for(self, session: AISession) -> list:
-        """DISCOVER (Eq. 7/8): annotated candidate set under τ_disc."""
+        """DISCOVER (Eq. 7/8): annotated candidate set under τ_disc. With
+        a federation attached, this is home-routed: local candidates first,
+        east-west offers merged in (per the domain's solicit policy) with
+        exclusion reasons prefixed by the owning domain."""
         t0 = self.clock.now()
         cands = discover(session.asp, self.catalog, self.sites,
                          self.predictors, session.zone,
                          analytics=self.analytics)
+        if self.federation is not None:
+            cands = self.federation.augment(session, cands)
         if self.clock.now() - t0 > self.timers.tau_disc:
             raise SessionError(FailureCause.DEADLINE_EXPIRY,
                                "DISCOVER exceeded τ_disc")
@@ -114,23 +124,36 @@ class Orchestrator:
         session.mark_anchored()
         # cost-envelope admission (policy role)
         self.policy.admit_cost(session.asp, chosen.prediction.cost_per_1k)
-        # sovereignty re-check against the concrete site (consent scope)
-        self.policy.check_region(
-            session.authz_ref, self.sites[chosen.site_id].spec.region)
+        # sovereignty re-check against the concrete site (consent scope);
+        # east-west offers carry the region — the remote site table doesn't
+        # exist here
+        region = chosen.region or self.sites[chosen.site_id].spec.region
+        self.policy.check_region(session.authz_ref, region)
         return chosen
 
     def prepare_for(self, session: AISession, chosen):
-        """PREPARE: provisional co-reservation on both planes (2PC stage 1)."""
+        """PREPARE: provisional co-reservation on both planes (2PC stage 1).
+        A remote candidate routes the compute half east-west; the home
+        domain keeps only its transport share."""
         session.mark_preparing()
-        prepared = self.coordinator.prepare(
-            chosen.model, chosen.site_id, session.zone, chosen.klass,
-            slots=1, cache_bytes=chosen.model.session_state_bytes(2048))
+        if self.federation is not None and self.federation.is_remote(chosen):
+            prepared = self.federation.prepare_remote(session, chosen)
+        else:
+            prepared = self.coordinator.prepare(
+                chosen.model, chosen.site_id, session.zone, chosen.klass,
+                slots=1, cache_bytes=chosen.model.session_state_bytes(2048))
         session.mark_prepared()
         return prepared
 
     def commit_for(self, session: AISession, chosen, prepared) -> AISession:
-        """COMMIT: confirm both leases, bind, open charging + telemetry."""
-        binding = self.coordinator.commit(prepared, chosen.model)
+        """COMMIT: confirm both leases, bind, open charging + telemetry.
+        For a cross-domain PREPARE the visited half stays provisional until
+        this home COMMIT lands; failure on either side rolls both back."""
+        if getattr(prepared, "is_federated", False):
+            binding = self.federation.commit_remote(session, chosen,
+                                                    prepared)
+        else:
+            binding = self.coordinator.commit(prepared, chosen.model)
         session.charging_ref = self.policy.open_charging(session.session_id)
         session.bind(binding)
         self.telemetry[session.session_id] = BoundaryTelemetry()
@@ -157,6 +180,8 @@ class Orchestrator:
         are attached by AIaaSServer / launch.serve; absent those, a
         predictor-backed SimulatedEngine plane is created lazily so the
         control plane ALWAYS serves through the same scheduled path."""
+        if getattr(site, "is_guest_view", False):
+            return site.plane        # ensured by the owning domain's core
         if site.plane is None:
             from repro.serving.plane import ServingPlane, SimulatedEngine
             site.attach_plane(ServingPlane(
@@ -179,41 +204,67 @@ class Orchestrator:
         and charging — exactly once per request, for every session; returns
         the drained PlaneResults. This is the ONLY recorder: AIaaSServer
         and heartbeat both delegate here, so a request is billed identically
-        whichever path pops it first."""
+        whichever path pops it first. A guest view delegates to the OWNING
+        domain's recorder (which meters wholesale and forwards roaming
+        results home) so two domains never race on one plane's results."""
+        if getattr(site, "is_guest_view", False):
+            return site.record_results()
         plane = site.plane
         if plane is None:
             return []
         popped = plane.pop_results()
         for res in popped:
-            session = self.sessions.get(res.session_id)
-            if session is None:
-                continue
-            tele = self.telemetry.get(res.session_id)
-            if tele is not None:
-                tele.record(RequestRecord(
-                    t_submit=self.clock.now() - res.latency_ms / 1e3,
-                    ttfb_ms=res.ttfb_ms, latency_ms=res.latency_ms,
-                    completed=res.completed, tokens=res.tokens,
-                    queue_ms=res.queue_wait_ms))
-            # context accounting: the session's actual served context sizes
-            # any later migration payload / PREPARE cache reservation
-            if res.tokens:
-                session.note_context(res.prompt_tokens + res.tokens)
-            if session.charging_ref is not None and res.tokens:
-                b = session.binding
-                price = self.catalog.get(
-                    b.model_id, b.model_version).price_per_1k_tokens \
-                    if b else 0.0
-                # chip time = slot occupancy only; queue wait is not billed
-                service_s = max(res.latency_ms - res.queue_wait_ms, 0.0) / 1e3
-                self.policy.meter(
-                    session.charging_ref, tokens=res.tokens,
-                    chip_s=service_s * site.spec.chips
-                    / max(site.spec.decode_slots, 1),
-                    unit_price=price)
-            for sink in self.result_sinks:
-                sink(site, res)
+            self._record_one(site, res)
         return popped
+
+    def _record_one(self, site, res, *, price_override=None) -> None:
+        """Record ONE drained PlaneResult: telemetry, context accounting,
+        charging, result sinks. ``price_override`` replaces the catalog
+        price for roaming sessions whose model lives in another domain's
+        catalog (the retail price from the accepted east-west offer)."""
+        session = self.sessions.get(res.session_id)
+        if session is None:
+            return
+        tele = self.telemetry.get(res.session_id)
+        if tele is not None:
+            tele.record(RequestRecord(
+                t_submit=self.clock.now() - res.latency_ms / 1e3,
+                ttfb_ms=res.ttfb_ms, latency_ms=res.latency_ms,
+                completed=res.completed, tokens=res.tokens,
+                queue_ms=res.queue_wait_ms))
+        # context accounting: the session's actual served context sizes
+        # any later migration payload / PREPARE cache reservation
+        if res.tokens:
+            session.note_context(res.prompt_tokens + res.tokens)
+        if session.charging_ref is not None and res.tokens:
+            b = session.binding
+            if price_override is not None:
+                price = price_override
+            else:
+                model = self._model_entry(b)
+                price = model.price_per_1k_tokens if model else 0.0
+            # chip time = slot occupancy only; queue wait is not billed
+            service_s = max(res.latency_ms - res.queue_wait_ms, 0.0) / 1e3
+            self.policy.meter(
+                session.charging_ref, tokens=res.tokens,
+                chip_s=service_s * site.spec.chips
+                / max(site.spec.decode_slots, 1),
+                unit_price=price)
+        for sink in self.result_sinks:
+            sink(site, res)
+
+    # ------------------------------------------------------------------
+    def _model_entry(self, binding):
+        """The binding's ModelEntry, or None when the session roams on a
+        model this domain's catalog does not carry (predictor hints and
+        catalog pricing degrade gracefully; the visited domain holds the
+        authoritative entry)."""
+        if binding is None:
+            return None
+        try:
+            return self.catalog.get(binding.model_id, binding.model_version)
+        except KeyError:
+            return None
 
     # ------------------------------------------------------------------
     def _service_hints(self, session: AISession, plane, model, site, klass,
@@ -221,7 +272,8 @@ class Orchestrator:
         """Predictor-supplied (ttfb, total) service-time hints, only for
         backends that declare they need them (capability check, not
         type-sniffing of serving internals)."""
-        if not getattr(plane.backend, "needs_service_hints", False):
+        if model is None or \
+                not getattr(plane.backend, "needs_service_hints", False):
             return None, None
         pred = self.predictors.predict(session.asp, model, site,
                                        session.zone, klass,
@@ -241,8 +293,8 @@ class Orchestrator:
                                "session not in committed domain")
         b = session.binding
         site = self.sites[b.site_id]
-        model = self.catalog.get(b.model_id, b.model_version)
-        return site, model, self.plane_for(site), self.qos_class(session)
+        return (site, self._model_entry(b), self.plane_for(site),
+                self.qos_class(session))
 
     # ------------------------------------------------------------------
     def submit(self, session: AISession, *, prompt_tokens: int = 512,
@@ -299,6 +351,11 @@ class Orchestrator:
                                  SessionState.MIGRATING):
             return None
         session.renew(self.timers.lease_s)
+        # consent is a bounded authorization with a sliding window: an
+        # actively heartbeating session keeps its grant alive through the
+        # same northbound surface that renews the leases; revoked grants
+        # and sessions that stop heartbeating lapse (Eq. 6)
+        self.policy.renew_consent(session.authz_ref)
         site = self.sites[session.binding.site_id]
         # live congestion from the site's serving plane (NWDAF loop): queue
         # depth per slot and arrival rate are MEASURED, not assumed — this is

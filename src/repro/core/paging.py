@@ -25,12 +25,17 @@ class PagingWeights:
     w1: float = 1.0     # tail-latency violation risk
     w2: float = 1.0     # TTFB violation risk
     w3: float = 0.5     # migration risk (continuity classes weight higher)
+    #: home-routing bias: anchoring in another administrative domain costs
+    #: an east-west handshake on every later lifecycle verb, so a visited
+    #: anchor must beat the best home anchor by at least this much risk
+    w_domain: float = 0.05
 
 
 def risk(c: Candidate, w: PagingWeights) -> float:
     p = c.prediction
     return w.w1 * p.p_violate_l99 + w.w2 * p.p_violate_ttfb \
-        + w.w3 * p.p_migration
+        + w.w3 * p.p_migration \
+        + (w.w_domain if getattr(c, "domain", "") else 0.0)
 
 
 def page(asp: ASP, candidates: List[Candidate], *,

@@ -29,6 +29,14 @@ class ConsentGrant:
     allowed_regions: Tuple[str, ...]
     data_classes: Tuple[str, ...] = ("prompt", "generated")
     revoked: bool = False
+    #: absolute lapse time (clock domain of PolicyControl). Consent is a
+    #: *bounded* authorization: a grant that outlives its TTL lapses
+    #: exactly like a revocation — the serve path's Eq. (6) re-check maps
+    #: it to CONSENT_VIOLATION mid-session.
+    expires_at: float = float("inf")
+
+    def valid(self, now: float) -> bool:
+        return not self.revoked and now < self.expires_at
 
 
 @dataclass
@@ -42,16 +50,27 @@ class ChargingRecord:
 
 
 class PolicyControl:
-    def __init__(self, clock: Clock):
+    #: default consent TTL (seconds) — every grant is clock-bounded unless
+    #: the caller passes an explicit ttl_s
+    DEFAULT_CONSENT_TTL_S = 3600.0
+
+    def __init__(self, clock: Clock, *,
+                 consent_ttl_s: Optional[float] = None):
         self.clock = clock
+        self.consent_ttl_s = consent_ttl_s if consent_ttl_s is not None \
+            else self.DEFAULT_CONSENT_TTL_S
         self._grants: Dict[str, ConsentGrant] = {}
         self._charges: Dict[str, ChargingRecord] = {}
         self._ids = itertools.count(1)
 
     # -- consent (v_σ) ----------------------------------------------------
-    def grant_consent(self, invoker: str, regions: Tuple[str, ...]) -> str:
+    def grant_consent(self, invoker: str, regions: Tuple[str, ...],
+                      ttl_s: Optional[float] = None) -> str:
         ref = f"authz-{next(self._ids):06d}"
-        self._grants[ref] = ConsentGrant(ref, invoker, tuple(regions))
+        ttl = ttl_s if ttl_s is not None else self.consent_ttl_s
+        self._grants[ref] = ConsentGrant(
+            ref, invoker, tuple(regions),
+            expires_at=self.clock.now() + ttl)
         return ref
 
     def revoke(self, authz_ref: str) -> None:
@@ -59,15 +78,26 @@ class PolicyControl:
         if g:
             g.revoked = True
 
+    def renew_consent(self, authz_ref: str,
+                      ttl_s: Optional[float] = None) -> bool:
+        """Re-authorize (extend) a live grant; a revoked or lapsed grant
+        cannot be renewed — the invoker must re-acquire authorization."""
+        g = self._grants.get(authz_ref)
+        if g is None or not g.valid(self.clock.now()):
+            return False
+        g.expires_at = self.clock.now() + \
+            (ttl_s if ttl_s is not None else self.consent_ttl_s)
+        return True
+
     def consent_valid(self, authz_ref: Optional[str]) -> bool:
         if authz_ref is None:
             return False
         g = self._grants.get(authz_ref)
-        return bool(g and not g.revoked)
+        return bool(g and g.valid(self.clock.now()))
 
     def check_region(self, authz_ref: str, region: str) -> None:
         g = self._grants.get(authz_ref)
-        if g is None or g.revoked:
+        if g is None or not g.valid(self.clock.now()):
             raise SessionError(FailureCause.CONSENT_VIOLATION,
                                "no valid consent grant")
         if region not in g.allowed_regions:

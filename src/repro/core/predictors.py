@@ -50,11 +50,23 @@ class Prediction:
 
 
 class Predictors:
+    #: memo bound: cleared wholesale past this size (establish storms over
+    #: many ASPs; the epoch key already retires stale entries naturally)
+    _MEMO_MAX = 65_536
+
     def __init__(self, analytics: Analytics, *, mfu: float = 0.4,
                  bw_eff: float = 0.6):
         self.analytics = analytics
         self.mfu = mfu          # achievable fraction of peak FLOP/s
         self.bw_eff = bw_eff    # achievable fraction of HBM bandwidth
+        # memoized predictions keyed on (ASP digest, model, site, zone,
+        # class, request shape, site load-epoch): DISCOVER evaluates the
+        # full model×site cross product on EVERY establish, and federated
+        # discovery multiplies that by the number of solicited domains —
+        # identical ξ must not recompute the roofline/queue math
+        self._memo: dict = {}
+        self.memo_hits = 0
+        self.memo_misses = 0
 
     # -- execution-side service times ------------------------------------
     def prefill_ms(self, model: ModelEntry, site, prompt_tokens: int) -> float:
@@ -85,6 +97,29 @@ class Predictors:
     def predict(self, asp: ASP, model: ModelEntry, site, zone: str,
                 klass: TransportClass, *, prompt_tokens: int = 512,
                 gen_tokens: int = 256) -> Prediction:
+        # memo hit ⟺ same contract, placement, shape AND unchanged ξ —
+        # every heartbeat observation bumps the site's load epoch, so
+        # cached predictions can never outlive the evidence behind them
+        key = (asp.digest(), f"{model.model_id}@{model.version}",
+               site.spec.site_id, zone, klass.name,
+               prompt_tokens, gen_tokens,
+               self.analytics.load_epoch(site.spec.site_id))
+        cached = self._memo.get(key)
+        if cached is not None:
+            self.memo_hits += 1
+            return cached
+        self.memo_misses += 1
+        pred = self._predict(asp, model, site, zone, klass,
+                             prompt_tokens=prompt_tokens,
+                             gen_tokens=gen_tokens)
+        if len(self._memo) >= self._MEMO_MAX:
+            self._memo.clear()
+        self._memo[key] = pred
+        return pred
+
+    def _predict(self, asp: ASP, model: ModelEntry, site, zone: str,
+                 klass: TransportClass, *, prompt_tokens: int = 512,
+                 gen_tokens: int = 256) -> Prediction:
         rtt = site.spec.rtt_ms.get(zone, 60.0)
         transport_ms = rtt + klass.base_ms
         transport_p99 = rtt + min(

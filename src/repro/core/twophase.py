@@ -89,6 +89,20 @@ class TwoPhaseCoordinator:
                         prepared_at=self.clock.now(), hold_s=hold_s)
 
     # ------------------------------------------------------------------
+    def prepare_transport(self, path, klass: TransportClass, *,
+                          ttl_s: float):
+        """Home-side half of a CROSS-DOMAIN prepare: only the transport
+        plane is reserved locally (the access + inter-domain leg) — the
+        compute half is the visited domain's own coordinator, driven over
+        the east-west wire. Logged in the same WAL so a federated 2PC is
+        auditable end to end; returns the provisional QoS lease."""
+        t0 = self.clock.now()
+        self.log.append(("prepare_transport.begin", t0, path))
+        lease = self.qos.prepare(path, klass, ttl_s=ttl_s)
+        self.log.append(("prepare_transport.ok", self.clock.now(), path))
+        return lease
+
+    # ------------------------------------------------------------------
     def commit(self, prepared: Prepared, model: ModelEntry) -> Binding:
         """Stage 2: confirm both leases; on ANY failure release both."""
         t0 = self.clock.now()

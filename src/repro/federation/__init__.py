@@ -1,0 +1,25 @@
+"""Federated multi-domain control plane: east-west inter-domain API.
+
+One :class:`~repro.federation.domain.DomainController` per administrative
+domain (operator); domains advertise coarse
+:class:`~repro.federation.registry.CapabilityDigest` records into a
+:class:`~repro.federation.registry.FederationRegistry` and speak the typed
+:mod:`~repro.federation.eastwest` protocol for DISCOVER solicitation,
+cross-domain PREPARE/COMMIT/ABORT with SLA-budget decomposition, and
+roaming make-before-break migration.
+"""
+
+from repro.federation.domain import (DomainController, FederatedPrepared,
+                                     GuestSiteView, RemoteModelRef)
+from repro.federation.eastwest import (EW_SCHEMA_VERSION, EWTimeout,
+                                       SLABudget, apply_budget,
+                                       decompose_budget)
+from repro.federation.registry import (CapabilityDigest, FederationRegistry,
+                                       digest_of)
+
+__all__ = [
+    "DomainController", "FederatedPrepared", "GuestSiteView",
+    "RemoteModelRef", "EW_SCHEMA_VERSION", "EWTimeout", "SLABudget",
+    "apply_budget", "decompose_budget", "CapabilityDigest",
+    "FederationRegistry", "digest_of",
+]

@@ -80,18 +80,25 @@ def transfer(src_engine, dst_engine, session_id: str, *,
              dst_shardings=None, link_bw: float = 5e9,
              verify: bool = True, fail_injector=None,
              inject: Optional[TransferInjections] = None,
+             scrub: Optional[Callable[[dict], dict]] = None,
              clock=None) -> dict:
     """Move one session between engines/backends. Returns transfer metadata.
 
     ``fail_injector``: legacy test hook — callable that may raise after the
     export to exercise the abort path (source must stay intact).
     ``inject``: staged :class:`TransferInjections`.
+    ``scrub``: payload -> payload applied at the export boundary, BEFORE
+    fingerprinting — the exposure-boundary hook for transfers that leave
+    the administrative domain (roaming migration redacts everything but the
+    slot-essential state, so the fingerprint covers exactly what crossed).
     ``clock``: when given, wall time is measured on it (VirtualClock arms
     measure zero wall — the modeled ``wire_s_at_link`` is what counts there).
     """
     _now = clock.now if clock is not None else time.perf_counter
     t0 = _now()
     payload = src_engine.export_slot(session_id)
+    if scrub is not None:
+        payload = scrub(payload)
     if inject is not None and inject.on_export is not None:
         inject.on_export(payload)
     nbytes = payload_bytes(payload)

@@ -3,5 +3,7 @@ from repro.sim.scenarios import (simulate_endpoint, simulate_neaiaas,  # noqa: F
                                  simulate_multiclass, simulate_bursty,
                                  simulate_load_mobility,
                                  simulate_migration_under_load,
-                                 simulate_payload_asymmetry)
+                                 simulate_payload_asymmetry,
+                                 simulate_federated_roaming,
+                                 simulate_home_overload_spillover)
 from repro.sim.mobility import simulate_mobility  # noqa: F401

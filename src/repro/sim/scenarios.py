@@ -434,8 +434,10 @@ def simulate_migration_under_load(*, n_sessions: int = 40, rounds: int = 3,
     outcomes observed exactly as an invoker would (HeartbeatAck.migration).
 
     ``target_pressure`` pre-occupies that fraction of every site's decode
-    slots with confirmed leases, so re-paging hits COMPUTE_SCARCITY on
-    PREPARE (target-site admission pressure forcing aborts).
+    slots with confirmed leases, so re-paging hits COMPUTE_SCARCITY
+    (at full pressure, DISCOVER already sees every candidate site
+    saturated; below it, the race surfaces at PREPARE — either way the
+    abort is target-side admission pressure).
     ``export_fail_prob`` injects export failures at the source plane.
     """
     from repro.api import messages as wire
@@ -521,6 +523,206 @@ def simulate_migration_under_load(*, n_sessions: int = 40, rounds: int = 3,
         if ok else 0.0,
         bytes_moved=sum(o.transfer_bytes for o in ok),
         outcomes=outcomes)
+
+
+# ----------------------------------------------------------------------
+# federation: roaming across an operator boundary + overload spillover
+# ----------------------------------------------------------------------
+def _federation_pair(clock: VirtualClock, *, home_slots: int,
+                     visited_slots: int, transit_ms: float = 5.0,
+                     solicit: str = "fallback"):
+    """Two peered single-site domains sharing one VirtualClock: the home
+    edge is close to zone-a and hopeless from zone-b, the visited edge the
+    reverse — crossing the zone boundary is crossing the domain boundary."""
+    from repro.core import Orchestrator
+    from repro.core.catalog import Catalog, default_catalog
+    from repro.core.sites import ExecutionSite, SiteSpec
+    from repro.federation import DomainController, FederationRegistry
+
+    def cat():
+        c = Catalog()
+        c.register(default_catalog().get("edge-tiny"))
+        return c
+
+    def site(site_id, rtt, slots):
+        v5e_flops, v5e_bw, hbm = 197e12, 819e9, 16e9
+        return ExecutionSite(SiteSpec(
+            site_id, "edge", "eu", chips=16, hbm_bytes_total=16 * hbm,
+            peak_flops=16 * v5e_flops, hbm_bw=16 * v5e_bw,
+            decode_slots=slots, rtt_ms=dict(rtt),
+            hosted_models=("edge-tiny@1.0",),
+            price_per_chip_s=2.0e-4), clock)
+
+    registry = FederationRegistry(clock)
+    home = DomainController(
+        "home", registry, solicit=solicit,
+        orchestrator=Orchestrator(
+            clock=clock, catalog=cat(),
+            sites={"h-edge": site("h-edge",
+                                  {"zone-a": 2.0, "zone-b": 400.0},
+                                  home_slots)}))
+    visited = DomainController(
+        "visited", registry, solicit=solicit,
+        orchestrator=Orchestrator(
+            clock=clock, catalog=cat(),
+            sites={"v-edge": site("v-edge",
+                                  {"zone-a": 25.0, "zone-b": 2.0},
+                                  visited_slots)}))
+    home.connect(visited, transit_ms=transit_ms)
+    return home, visited
+
+
+@dataclass
+class FederatedRoamingResult:
+    n_sessions: int
+    roamed: int
+    aborted: int
+    causes: Dict[str, int]
+    mean_transfer_ms: float
+    bytes_moved: int
+    max_interruption_ms: float
+    p99_pre_ms: float            # serve latency while anchored home
+    p99_post_ms: float           # serve latency after roaming abroad
+
+
+def simulate_federated_roaming(*, n_sessions: int = 24,
+                               pre_requests: int = 2,
+                               post_requests: int = 2) -> FederatedRoamingResult:
+    """A fleet of vehicular sessions establishes at the home operator,
+    serves, then a mobility trace carries every invoker across the domain
+    boundary (zone-a → zone-b): the next heartbeat's Eq. (14) check finds
+    the home anchor infeasible from the new zone, solicits east-west
+    offers, and live-migrates the session make-before-break into the
+    visited operator through the typed handshake — tokens before and after
+    the boundary come from the same session, observed through the same
+    northbound contract."""
+    from repro.api.client import SessionClient
+    from repro.api.gateway import NorthboundGateway
+    from repro.core import default_asp
+    from repro.core.asp import MobilityClass, QualityTier
+
+    clock = VirtualClock()
+    home, visited = _federation_pair(
+        clock, home_slots=2 * n_sessions, visited_slots=2 * n_sessions)
+    gw = NorthboundGateway(home)
+    asp = default_asp(tier=QualityTier.BASIC,
+                      mobility=MobilityClass.VEHICULAR)
+    clients = [SessionClient(gw, asp, invoker=f"car-{i}", zone="zone-a",
+                             subscribe_events=False).establish()
+               for i in range(n_sessions)]
+
+    pre, post = [], []
+    for c in clients:
+        for _ in range(pre_requests):
+            clock.advance(0.002)
+            stream = c.generate(prompt_tokens=64, gen_tokens=16)
+            stream.tokens()
+            pre.append(stream.complete.latency_ms)
+
+    outcomes = []
+    for c in clients:
+        # boundary crossing: the invoker's access zone flips domains
+        home.core.sessions[c.session_id].zone = "zone-b"
+        clock.advance(0.002)
+        ack = c.heartbeat(trigger_l99=0.0, trigger_ttfb=0.0)
+        if ack.migration is not None:
+            from repro.api.messages import outcome_from_wire
+            outcomes.append(outcome_from_wire(ack.migration))
+
+    for c in clients:
+        for _ in range(post_requests):
+            clock.advance(0.002)
+            stream = c.generate(prompt_tokens=64, gen_tokens=16)
+            stream.tokens()
+            post.append(stream.complete.latency_ms)
+    for c in clients:
+        c.release()
+
+    ok = [o for o in outcomes if o.migrated]
+    causes: Dict[str, int] = {}
+    for o in outcomes:
+        if o.cause is not None:
+            causes[o.cause.value] = causes.get(o.cause.value, 0) + 1
+    return FederatedRoamingResult(
+        n_sessions=n_sessions, roamed=len(ok),
+        aborted=sum(1 for o in outcomes if o.aborted), causes=causes,
+        mean_transfer_ms=float(np.mean([o.transfer_ms for o in ok]))
+        if ok else 0.0,
+        bytes_moved=sum(o.transfer_bytes for o in ok),
+        max_interruption_ms=max((o.interruption_ms for o in outcomes),
+                                default=0.0),
+        p99_pre_ms=float(np.quantile(np.asarray(pre), 0.99)) if pre else 0.0,
+        p99_post_ms=float(np.quantile(np.asarray(post), 0.99))
+        if post else 0.0)
+
+
+@dataclass
+class SpilloverResult:
+    federated: bool
+    n_offered: int
+    established_home: int
+    established_visited: int
+    failed: int
+    served: int
+    p99_ms: float
+    admitted_frac: float
+
+
+def simulate_home_overload_spillover(*, n_sessions: int = 48,
+                                     home_slots: int = 16,
+                                     visited_slots: int = 256,
+                                     requests_per_session: int = 2,
+                                     federated: bool = True) -> SpilloverResult:
+    """Offered establishes exceed the home operator's committed capacity.
+    Single-domain, the overflow fails with COMPUTE_SCARCITY at DISCOVER
+    (every home site saturated); federated, the home-first gateway solicits
+    east-west offers and the overflow anchors in the visited domain — same
+    client contract, measured against the same p99."""
+    from repro.api.client import NorthboundError, SessionClient
+    from repro.api.gateway import NorthboundGateway
+    from repro.core import default_asp
+    from repro.core.asp import QualityTier
+
+    clock = VirtualClock()
+    home, visited = _federation_pair(
+        clock, home_slots=home_slots, visited_slots=visited_slots)
+    if not federated:
+        home.peers.clear()           # sever the east-west peering
+    gw = NorthboundGateway(home)
+    asp = default_asp(tier=QualityTier.BASIC)
+
+    clients, at_home, abroad, failed = [], 0, 0, 0
+    for i in range(n_sessions):
+        clock.advance(0.001)
+        c = SessionClient(gw, asp, invoker=f"asp-{i}", zone="zone-a",
+                          subscribe_events=False)
+        try:
+            c.establish()
+        except NorthboundError:
+            failed += 1
+            continue
+        clients.append(c)
+        if c.anchor.startswith("visited/"):
+            abroad += 1
+        else:
+            at_home += 1
+
+    lats = []
+    for _ in range(requests_per_session):
+        for c in clients:
+            clock.advance(0.001)
+            stream = c.generate(prompt_tokens=64, gen_tokens=16)
+            stream.tokens()
+            if stream.complete.completed:
+                lats.append(stream.complete.latency_ms)
+    for c in clients:
+        c.release()
+    return SpilloverResult(
+        federated=federated, n_offered=n_sessions,
+        established_home=at_home, established_visited=abroad,
+        failed=failed, served=len(lats),
+        p99_ms=float(np.quantile(np.asarray(lats), 0.99)) if lats else 0.0,
+        admitted_frac=(at_home + abroad) / max(n_sessions, 1))
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,566 @@
+"""Federated multi-domain control plane: cross-domain establish and roaming
+migration through the UNCHANGED SessionClient/NorthboundGateway contract,
+with every east-west lifecycle verb crossing the typed wire.
+
+Covers the acceptance criteria: a session established northbound can be
+anchored on — and live-migrated to — a site in a different DomainController;
+duplicate cross-domain COMMITs are idempotent; and every abort path leaves
+both domains' leases and charging state clean.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.api import messages as m
+from repro.api.client import ScarcityError, SessionClient
+from repro.api.gateway import NorthboundGateway
+from repro.core.asp import MobilityClass, QualityTier, default_asp
+from repro.core.catalog import Catalog, default_catalog
+from repro.core.clock import VirtualClock
+from repro.core.failures import FailureCause, SessionError
+from repro.core.orchestrator import Orchestrator
+from repro.core.sites import ExecutionSite, SiteSpec
+from repro.federation import (DomainController, EWTimeout,
+                              FederationRegistry, decompose_budget)
+from repro.federation import eastwest as ew
+
+
+def _site(site_id: str, region: str, rtt: dict, clock, *,
+          slots: int = 8) -> ExecutionSite:
+    v5e_flops, v5e_bw, hbm = 197e12, 819e9, 16e9
+    return ExecutionSite(SiteSpec(
+        site_id, "edge", region, chips=16, hbm_bytes_total=16 * hbm,
+        peak_flops=16 * v5e_flops, hbm_bw=16 * v5e_bw, decode_slots=slots,
+        rtt_ms=dict(rtt), hosted_models=("edge-tiny@1.0",),
+        price_per_chip_s=2.0e-4), clock)
+
+
+def _catalog() -> Catalog:
+    cat = Catalog()
+    cat.register(default_catalog().get("edge-tiny"))
+    return cat
+
+
+def make_federation(*, solicit: str = "fallback", home_slots: int = 8,
+                    visited_slots: int = 32, transit_ms: float = 5.0,
+                    registry_max_age: float = 30.0):
+    """Two peered single-site domains sharing a clock + registry: the home
+    site is close to zone-a and hopeless from zone-b; the visited site the
+    reverse — the zone flip is the roaming trigger."""
+    clock = VirtualClock()
+    registry = FederationRegistry(clock, max_age_s=registry_max_age)
+    home = DomainController(
+        "home", registry, solicit=solicit,
+        orchestrator=Orchestrator(
+            clock=clock, catalog=_catalog(),
+            sites={"h-edge": _site("h-edge", "eu",
+                                   {"zone-a": 2.0, "zone-b": 400.0},
+                                   clock, slots=home_slots)}))
+    visited = DomainController(
+        "visited", registry, solicit=solicit,
+        orchestrator=Orchestrator(
+            clock=clock, catalog=_catalog(),
+            sites={"v-edge": _site("v-edge", "eu",
+                                   {"zone-a": 25.0, "zone-b": 2.0},
+                                   clock, slots=visited_slots)}))
+    home.connect(visited, transit_ms=transit_ms)
+    return clock, home, visited
+
+
+def saturate(site: ExecutionSite, model) -> None:
+    free = site.spec.decode_slots - site.slots_in_use()
+    if free > 0:
+        lease = site.prepare(model, slots=free, cache_bytes=0.0, ttl_s=1e9)
+        site.confirm(lease.lease_id, lease_s=1e9)
+
+
+def _asp(**kw):
+    return default_asp(tier=QualityTier.BASIC, **kw)
+
+
+# ----------------------------------------------------------------------
+class TestCrossDomainEstablish:
+    def test_saturated_home_spills_to_visited_via_unchanged_client(self):
+        clock, home, visited = make_federation()
+        saturate(home.core.sites["h-edge"], home.core.catalog.get("edge-tiny"))
+        gw = NorthboundGateway(home)    # DomainController accepted as-is
+        with SessionClient(gw, _asp(), invoker="ue-f", zone="zone-a") as c:
+            assert c.anchor == "visited/v-edge"
+            # the candidate set is merged + domain-annotated
+            remote = [x for x in c.candidates if x["domain"] == "visited"]
+            assert remote and any(x["admissible"] for x in remote)
+            local = [x for x in c.candidates if not x["domain"]]
+            assert all(x["exclusion_reason"] == "home:compute-saturated"
+                       for x in local)
+            # serve runs on the visited plane, metered in BOTH domains
+            stream = c.generate(prompt_tokens=32, gen_tokens=8)
+            assert len(stream.tokens()) == 8
+            assert stream.complete.completed
+            sid = c.session_id
+            sess = home.core.sessions[sid]
+            assert sess.binding.site_id == "visited/v-edge"
+            assert sess.committed() and sess.serve_allowed()
+            home_rec = home.core.policy.charging(sess.charging_ref)
+            assert home_rec.tokens == 8          # retail (home) metering
+            guest = visited._guest_sessions[sid]
+            vis_rec = visited.core.policy.charging(guest.charging_ref)
+            assert vis_rec.tokens == 8           # wholesale (visited)
+            # heartbeat renews the visited leases over the east-west wire
+            ack = c.heartbeat()
+            assert ack.committed
+        # context-managed release: BOTH domains end clean
+        assert visited._guest_sessions == {}
+        assert visited._guest_by_ref == {}
+        base = visited.core.sites["v-edge"].slots_in_use()
+        assert base == 0
+        assert home._remote_bindings == {}
+
+    def test_duplicate_cross_domain_commit_is_idempotent(self):
+        clock, home, visited = make_federation()
+        saturate(home.core.sites["h-edge"], home.core.catalog.get("edge-tiny"))
+        orch = home.core
+        s = orch.begin_session(_asp(), "ue-i", "zone-a")
+        chosen = orch.page_for(s, orch.discover_for(s))
+        assert chosen.domain == "visited"
+        prepared = orch.prepare_for(s, chosen)
+        commit = ew.EWCommit(home_domain="home", session_ref=s.session_id,
+                             prepared_ref=prepared.prepared_ref)
+        r1 = visited.handle_eastwest_json(commit.to_json())
+        r2 = visited.handle_eastwest_json(commit.to_json())
+        assert r1 == r2
+        assert isinstance(ew.from_json(r1), ew.EWCommitted)
+        assert visited.core.sites["v-edge"].slots_in_use() == 1   # once
+        assert len(visited.core.policy._charges) == 1             # once
+
+    def test_home_commit_abort_rolls_back_visited_cleanly(self):
+        """Visited PREPARE granted, then the home COMMIT fails (transport
+        lease expired): the visited lease is rolled back and NO charging
+        was ever opened on the visited side."""
+        clock, home, visited = make_federation()
+        saturate(home.core.sites["h-edge"], home.core.catalog.get("edge-tiny"))
+        orch = home.core
+        s = orch.begin_session(_asp(), "ue-a", "zone-a")
+        chosen = orch.page_for(s, orch.discover_for(s))
+        prepared = orch.prepare_for(s, chosen)
+        assert visited.core.sites["v-edge"].slots_in_use() == 1
+        assert visited.core.policy._charges == {}    # held, not billed
+        clock.advance(orch.timers.tau_prep + orch.timers.tau_com + 1.0)
+        with pytest.raises(SessionError) as ei:
+            orch.commit_for(s, chosen, prepared)
+        assert ei.value.cause is FailureCause.DEADLINE_EXPIRY
+        assert visited.core.sites["v-edge"].slots_in_use() == 0
+        assert visited.core.policy._charges == {}    # never opened
+        assert visited._guest_by_ref == {}
+        assert visited._guest_sessions == {}
+        # home transport half is rolled back too
+        assert orch.qos.in_use(("zone-a", "ew:visited"), "best-effort") == 0
+
+    def test_lost_commit_reply_redrives_visited_to_clean_state(self):
+        """The EWCommit LANDS but its reply is lost: the home gives up
+        (DEADLINE_EXPIRY) and must re-drive the visited domain clean via
+        EWAbort — which degenerates to release post-COMMIT, so no guest
+        lease survives and nothing was ever metered."""
+        clock, home, visited = make_federation()
+        saturate(home.core.sites["h-edge"], home.core.catalog.get("edge-tiny"))
+        real = home.peers["visited"]
+
+        def lossy(payload: str) -> str:
+            reply = real(payload)
+            if '"type": "ew_commit"' in payload:
+                raise EWTimeout("commit reply lost in transit")
+            return reply
+
+        home.peers["visited"] = lossy
+        orch = home.core
+        s = orch.begin_session(_asp(), "ue-l", "zone-a")
+        chosen = orch.page_for(s, orch.discover_for(s))
+        prepared = orch.prepare_for(s, chosen)
+        with pytest.raises(SessionError) as ei:
+            orch.commit_for(s, chosen, prepared)
+        assert ei.value.cause is FailureCause.DEADLINE_EXPIRY
+        assert visited.core.sites["v-edge"].slots_in_use() == 0
+        assert visited._guest_by_ref == {} and visited._guest_sessions == {}
+        for rec in visited.core.policy._charges.values():
+            assert rec.tokens == 0 and rec.cost == 0.0   # never billed
+        assert orch.qos.in_use(("zone-a", "ew:visited"), "best-effort") == 0
+
+    def test_discover_query_carries_only_the_visited_budget_share(self):
+        """The east-west wire never leaks the raw home objectives or the
+        full cost envelope — a peer sees only the share it must meet."""
+        clock, home, visited = make_federation(solicit="always")
+        seen = []
+        real = home.peers["visited"]
+
+        def spy(payload: str) -> str:
+            seen.append(ew.from_json(payload))
+            return real(payload)
+
+        home.peers["visited"] = spy
+        orch = home.core
+        s = orch.begin_session(_asp(), "ue-w", "zone-a")
+        orch.discover_for(s)
+        queries = [q for q in seen if isinstance(q, ew.DiscoverQuery)]
+        assert queries
+        asp = _asp()
+        budget = decompose_budget(asp, home.transit_ms_for("visited"),
+                                  home_cost_share=home.home_cost_share)
+        wired = queries[0].asp
+        assert wired["objectives"]["ttfb_ms"] == budget.ttfb_ms
+        assert wired["objectives"]["p99_ms"] == budget.p99_ms
+        assert wired["max_cost_per_1k_tokens"] == budget.max_cost_per_1k
+        assert wired["objectives"]["ttfb_ms"] < asp.objectives.ttfb_ms
+
+    def test_offer_timeout_anchors_home(self):
+        clock, home, visited = make_federation(solicit="always")
+        home.peers["visited"] = _raise_timeout
+        gw = NorthboundGateway(home)
+        with SessionClient(gw, _asp(), invoker="ue-t", zone="zone-a") as c:
+            assert c.anchor == "h-edge"
+            notes = [x for x in c.candidates
+                     if x["exclusion_reason"] == "visited:offer-timeout"]
+            assert notes, "timeout must be an attributable exclusion"
+
+    def test_merged_no_feasible_binding_aggregates_domains(self):
+        clock, home, visited = make_federation()
+        asp = _asp()
+        asp = dataclasses.replace(asp, max_cost_per_1k_tokens=1e-9)
+        gw = NorthboundGateway(home)
+        client = SessionClient(gw, asp, invoker="ue-n", zone="zone-a")
+        with pytest.raises(ScarcityError) as ei:
+            client.establish()
+        assert ei.value.cause is FailureCause.NO_FEASIBLE_BINDING
+        assert "home:cost-envelope" in ei.value.detail
+        assert "visited:cost-envelope" in ei.value.detail
+
+    def test_elapsed_time_alone_does_not_stale_a_live_peer(self):
+        """A peer with a live advertisement provider is re-pulled when its
+        digest ages out — federation must not go dark just because the
+        clock moved."""
+        clock, home, visited = make_federation(registry_max_age=1.0)
+        saturate(home.core.sites["h-edge"], home.core.catalog.get("edge-tiny"))
+        clock.advance(60.0)                  # way past max_age_s
+        orch = home.core
+        s = orch.begin_session(_asp(), "ue-live", "zone-a")
+        chosen = orch.page_for(s, orch.discover_for(s))
+        assert chosen.domain == "visited"
+
+    def test_registry_staleness_is_attributable_and_recoverable(self):
+        """Staleness means the peer stopped answering the registry (dead
+        provider), is excluded attributably, and recovers when the peer
+        re-advertises."""
+        clock, home, visited = make_federation(registry_max_age=1.0)
+        saturate(home.core.sites["h-edge"], home.core.catalog.get("edge-tiny"))
+        home.registry.drop_provider("visited")   # peer goes silent
+        clock.advance(5.0)                       # its digest ages out
+        orch = home.core
+        s = orch.begin_session(_asp(), "ue-s", "zone-a")
+        with pytest.raises(SessionError) as ei:
+            orch.page_for(s, orch.discover_for(s))
+        assert ei.value.cause is FailureCause.NO_FEASIBLE_BINDING
+        assert "visited:registry-stale" in ei.value.detail
+        visited.advertise()                  # fresh digest ⇒ recoverable
+        s2 = orch.begin_session(_asp(), "ue-s2", "zone-a")
+        chosen = orch.page_for(s2, orch.discover_for(s2))
+        assert chosen.domain == "visited"
+
+    def test_guest_ref_collision_refused_not_clobbered(self):
+        """A session_ref naming a NATIVE visited session (or another
+        home's guest) is refused — ids are only unique per home domain."""
+        clock, home, visited = make_federation()
+        native = visited.core.establish(_asp(), "local-ue", "zone-b")
+        req = ew.EWPrepare(
+            home_domain="home", session_ref=native.session_id,
+            model_id="edge-tiny", model_version="1.0", site_id="v-edge",
+            klass="best-effort", zone="zone-a")
+        reply = ew.from_json(visited.handle_eastwest_json(req.to_json()))
+        assert isinstance(reply, ew.EWError)
+        assert reply.code == "E_POLICY"
+        assert native.committed()            # untouched
+
+    def test_abandoned_guest_leases_are_reaped_after_ttl(self):
+        """A home that prepares and vanishes leaves nothing behind once
+        the provisional leases expire — the next east-west exchange
+        sweeps the bookkeeping."""
+        clock, home, visited = make_federation()
+        saturate(home.core.sites["h-edge"], home.core.catalog.get("edge-tiny"))
+        orch = home.core
+        s = orch.begin_session(_asp(), "ue-gone", "zone-a")
+        chosen = orch.page_for(s, orch.discover_for(s))
+        orch.prepare_for(s, chosen)          # …and the home "crashes"
+        assert len(visited._guest_by_ref) == 1
+        clock.advance(orch.timers.tau_prep + orch.timers.tau_com + 1.0)
+        # any later inbound traffic triggers the sweep
+        probe = ew.DiscoverQuery(
+            home_domain="home", query_id="probe", zone="zone-a",
+            asp=_asp().to_wire(),
+            budget=decompose_budget(_asp(), 5.0).to_wire())
+        visited.handle_eastwest_json(probe.to_json())
+        assert visited._guest_by_ref == {}
+        assert visited.core.sites["v-edge"].slots_in_use() == 0
+        assert visited.core.policy._charges == {}
+
+    def test_budget_decomposition_infeasible_maps_to_no_feasible_binding(self):
+        asp = _asp()
+        with pytest.raises(SessionError) as ei:
+            decompose_budget(asp, asp.objectives.ttfb_ms + 1.0)
+        assert ei.value.cause is FailureCause.NO_FEASIBLE_BINDING
+        b = decompose_budget(asp, 50.0, home_cost_share=0.2)
+        assert b.ttfb_ms == asp.objectives.ttfb_ms - 50.0
+        assert b.max_cost_per_1k == pytest.approx(
+            0.8 * asp.max_cost_per_1k_tokens)
+        assert b.home_cost_per_1k == pytest.approx(
+            0.2 * asp.max_cost_per_1k_tokens)
+
+
+def _raise_timeout(payload: str) -> str:
+    raise EWTimeout("no offer within the solicitation window")
+
+
+# ----------------------------------------------------------------------
+class TestRoamingMigration:
+    def _establish_and_roam(self, *, serve_first=True):
+        clock, home, visited = make_federation()
+        gw = NorthboundGateway(home)
+        client = SessionClient(gw, _asp(mobility=MobilityClass.VEHICULAR),
+                               invoker="car-f", zone="zone-a").establish()
+        assert client.anchor == "h-edge"
+        if serve_first:
+            assert len(client.generate(prompt_tokens=64,
+                                       gen_tokens=8).tokens()) == 8
+        # mobility: the invoker crosses the domain boundary
+        session = home.core.sessions[client.session_id]
+        session.zone = "zone-b"
+        ack = client.heartbeat(trigger_l99=0.0, trigger_ttfb=0.0)
+        return clock, home, visited, gw, client, session, ack
+
+    def test_live_migration_to_visited_domain(self):
+        clock, home, visited, gw, client, session, ack = \
+            self._establish_and_roam()
+        mig = ack.migration
+        assert mig and mig["migrated"] and not mig["aborted"]
+        assert mig["from_site"] == "h-edge"
+        assert mig["to_site"] == "visited/v-edge"
+        assert mig["interruption_ms"] == 0.0          # make-before-break
+        assert mig["transfer_bytes"] > 0              # real state moved
+        assert mig["fingerprint"]                     # verified
+        assert client.anchor == "visited/v-edge"
+        assert session.committed()                    # never left Committed
+        # the home anchor's resources were released after the break
+        assert home.core.sites["h-edge"].slots_in_use() == 0
+        backend = visited.core.plane_for(
+            visited.core.sites["v-edge"]).backend
+        assert backend.has_slot(client.session_id)    # state lives abroad
+        # serving continues through the same northbound contract
+        stream = client.generate(prompt_tokens=32, gen_tokens=4)
+        assert len(stream.tokens()) == 4 and stream.complete.completed
+        # release settles BOTH domains
+        rel = client.release()
+        assert rel.state == "released"
+        assert visited._guest_sessions == {}
+        assert visited.core.sites["v-edge"].slots_in_use() == 0
+        assert not backend.has_slot(client.session_id)
+        assert home._remote_bindings == {}
+
+    def test_roaming_abort_keeps_home_anchor_and_both_domains_clean(self):
+        """Visited import refusal mid-transfer: the migration aborts with
+        COMPUTE_SCARCITY, the session keeps serving at home, and the
+        visited provisional lease + any provisional state are rolled
+        back without charging."""
+        from repro.serving.state_transfer import TransferInjections
+        clock, home, visited = make_federation()
+        gw = NorthboundGateway(home)
+        client = SessionClient(gw, _asp(mobility=MobilityClass.VEHICULAR),
+                               invoker="car-x", zone="zone-a").establish()
+        client.generate(prompt_tokens=64, gen_tokens=8)
+        vplane = visited.core.plane_for(visited.core.sites["v-edge"])
+        vplane.migration_inject = TransferInjections(deny_admission=True)
+        session = home.core.sessions[client.session_id]
+        session.zone = "zone-b"
+        ack = client.heartbeat(trigger_l99=0.0, trigger_ttfb=0.0)
+        mig = ack.migration
+        assert mig and mig["aborted"]
+        assert mig["cause"] == FailureCause.COMPUTE_SCARCITY.value
+        assert client.anchor == "h-edge"
+        assert session.committed()
+        assert session.binding.site_id == "h-edge"
+        # both domains clean: no guest lease, no guest charging, no slot
+        assert visited._guest_by_ref == {}
+        assert visited.core.policy._charges == {}
+        assert visited.core.sites["v-edge"].slots_in_use() == 0
+        assert not vplane.backend.has_slot(client.session_id)
+        assert home.core.qos.in_use(("zone-b", "ew:visited"),
+                                    "best-effort") == 0
+        # and the session still serves at home
+        assert len(client.generate(gen_tokens=4).tokens()) == 4
+
+    def test_cross_domain_transfer_rides_the_peering_link(self):
+        """The roaming transfer is billed to the (slower) east-west link,
+        not the intra-domain DCN."""
+        clock, home, visited, gw, client, session, ack = \
+            self._establish_and_roam()
+        mig = ack.migration
+        tf = home.core.migrations.transfer_fn
+        declared = visited.core.catalog.get("edge-tiny").session_state_bytes(
+            max(session.context_tokens, 1))
+        wire_bytes = max(mig["transfer_bytes"], declared)
+        assert mig["transfer_ms"] == pytest.approx(
+            wire_bytes / tf.ew_link_bw * 1e3, rel=1e-6)
+        # the same payload on the intra-domain DCN would be 4× cheaper
+        assert mig["transfer_ms"] > wire_bytes / tf.link_bw * 1e3
+
+
+# ----------------------------------------------------------------------
+class TestEastWestWire:
+    def test_roundtrip_every_message_type(self):
+        budget = decompose_budget(_asp(), 10.0).to_wire()
+        samples = [
+            ew.DiscoverQuery(home_domain="a", query_id="q1", zone="z",
+                             asp=_asp().to_wire(), budget=budget),
+            ew.DiscoverOffer(visited_domain="b", query_id="q1",
+                             candidates=[{"model_id": "m"}],
+                             digest_epoch=3, at_s=1.5),
+            ew.EWPrepare(home_domain="a", session_ref="s1", model_id="m",
+                         model_version="1.0", site_id="e", klass="premium",
+                         zone="z", slots=1, context_tokens=4096,
+                         hold_s=2.0, budget=budget),
+            ew.EWPrepared(visited_domain="b", session_ref="s1",
+                          prepared_ref="b/ewp-1", site_id="e", qfi=7,
+                          cache_bytes=1e6, expires_at=9.0),
+            ew.EWCommit(home_domain="a", session_ref="s1",
+                        prepared_ref="b/ewp-1"),
+            ew.EWCommitted(visited_domain="b", session_ref="s1",
+                           prepared_ref="b/ewp-1", site_id="e",
+                           endpoint="aiaas://b/e/m", qfi=7,
+                           compute_lease_id="e/cmp-0",
+                           qos_lease_id="qos-0", charging_ref="chg-1",
+                           lease_s=30.0, price_per_1k=0.1, at_s=2.0),
+            ew.EWAbort(home_domain="a", session_ref="s1",
+                       prepared_ref="b/ewp-1", reason="deadline expiry"),
+            ew.EWAbortAck(visited_domain="b", prepared_ref="b/ewp-1",
+                          released=True),
+            ew.EWRenew(home_domain="a", prepared_ref="b/ewp-1",
+                       lease_s=30.0),
+            ew.EWRenewAck(visited_domain="b", prepared_ref="b/ewp-1",
+                          renewed=True),
+            ew.EWRelease(home_domain="a", prepared_ref="b/ewp-1"),
+            ew.EWReleaseAck(visited_domain="b", prepared_ref="b/ewp-1",
+                            released=True, tokens=12, cost=0.5),
+            ew.EWError(visited_domain="b", code="E_COMPUTE_SCARCITY",
+                       cause="compute scarcity", detail="full"),
+        ]
+        assert {type(s) for s in samples} == set(
+            ew.message_types().values())
+        for msg in samples:
+            assert ew.from_json(msg.to_json()) == msg
+
+    def test_major_version_mismatch_refused_structurally(self):
+        clock, home, visited = make_federation()
+        bad = ew.EWRelease(home_domain="home", prepared_ref="x",
+                           schema_version="2.0")
+        reply = ew.from_json(visited.handle_eastwest_json(bad.to_json()))
+        assert isinstance(reply, ew.EWError)
+        assert reply.code == "E_EW_SCHEMA"
+
+    def test_visited_session_error_crosses_as_its_eq12_cause(self):
+        clock, home, visited = make_federation()
+        req = ew.EWPrepare(home_domain="home", session_ref="s",
+                           model_id="nope", model_version="9.9",
+                           site_id="v-edge", klass="best-effort", zone="z")
+        reply = ew.from_json(visited.handle_eastwest_json(req.to_json()))
+        assert isinstance(reply, ew.EWError)
+        assert reply.code == "E_MODEL_UNAVAILABLE"
+        err = reply.to_session_error()
+        assert err.cause is FailureCause.MODEL_UNAVAILABLE
+        assert "[visited]" in err.detail
+
+    def test_abort_and_release_are_idempotent(self):
+        clock, home, visited = make_federation()
+        for msg in (ew.EWAbort(home_domain="home", session_ref="s",
+                               prepared_ref="visited/ewp-000099"),
+                    ew.EWRelease(home_domain="home",
+                                 prepared_ref="visited/ewp-000099")):
+            reply = ew.from_json(visited.handle_eastwest_json(msg.to_json()))
+            assert reply.released is False      # unknown ref = clean no-op
+
+
+# ----------------------------------------------------------------------
+class TestSatellites:
+    def test_consent_ttl_lapses_to_consent_violation_mid_session(self):
+        clock = VirtualClock()
+        orch = Orchestrator(clock=clock, catalog=_catalog())
+        orch.policy.consent_ttl_s = 5.0
+        s = orch.establish(_asp(), "ue-ttl", "zone-a")
+        assert orch.serve(s, gen_tokens=2).completed
+        clock.advance(6.0)                   # lease_s=30 still live…
+        assert s.committed() and not s.v_sigma()   # …but consent lapsed
+        with pytest.raises(SessionError) as ei:
+            orch.serve(s, gen_tokens=2)
+        assert ei.value.cause is FailureCause.CONSENT_VIOLATION
+        # re-authorization restores service (remediation path)
+        s.authz_ref = orch.policy.grant_consent("ue-ttl",
+                                                s.asp.allowed_regions)
+        assert orch.serve(s, gen_tokens=2).completed
+
+    def test_heartbeat_keeps_consent_alive_across_ttl_windows(self):
+        """Consent is a sliding window: the session's own heartbeats renew
+        the grant through the northbound surface, so only a session that
+        STOPS heartbeating (or is revoked) lapses mid-flight."""
+        clock = VirtualClock()
+        orch = Orchestrator(clock=clock, catalog=_catalog())
+        orch.policy.consent_ttl_s = 5.0
+        s = orch.establish(_asp(), "ue-hb", "zone-a")
+        for _ in range(4):                   # 12 s > TTL, but heartbeating
+            clock.advance(3.0)
+            orch.heartbeat(s)
+        assert s.v_sigma()
+        assert orch.serve(s, gen_tokens=2).completed
+        clock.advance(6.0)                   # silence ⇒ the grant lapses
+        with pytest.raises(SessionError) as ei:
+            orch.serve(s, gen_tokens=2)
+        assert ei.value.cause is FailureCause.CONSENT_VIOLATION
+
+    def test_lapsed_consent_cannot_be_renewed(self):
+        clock = VirtualClock()
+        from repro.core.policy import PolicyControl
+        pol = PolicyControl(clock, consent_ttl_s=2.0)
+        ref = pol.grant_consent("ue", ("eu",))
+        assert pol.consent_valid(ref)
+        assert pol.renew_consent(ref)        # live grant extends
+        clock.advance(3.0)
+        assert not pol.consent_valid(ref)
+        assert not pol.renew_consent(ref)    # lapsed ⇒ re-acquire
+
+    def test_predictions_memoized_until_heartbeat_invalidates(self):
+        clock = VirtualClock()
+        orch = Orchestrator(clock=clock, catalog=_catalog())
+        s = orch.establish(_asp(), "ue-m", "zone-a")
+        pred = orch.predictors
+        hits0, misses0 = pred.memo_hits, pred.memo_misses
+        s2 = orch.begin_session(_asp(), "ue-m2", "zone-a")
+        orch.discover_for(s2)                # identical cross product
+        assert pred.memo_misses == misses0   # all served from the memo
+        assert pred.memo_hits > hits0
+        # new load evidence bumps the epoch ⇒ recompute
+        orch.analytics.observe_site("edge-a", utilization=0.5,
+                                    queue_depth=1.0, arrival_rate=2.0)
+        s3 = orch.begin_session(_asp(), "ue-m3", "zone-a")
+        orch.discover_for(s3)
+        assert pred.memo_misses > misses0
+
+    def test_federated_discover_shares_the_memo_across_solicitations(self):
+        clock, home, visited = make_federation(solicit="always")
+        orch = home.core
+        s = orch.begin_session(_asp(), "ue-mm", "zone-a")
+        orch.discover_for(s)
+        vm0 = visited.core.predictors.memo_misses
+        s2 = orch.begin_session(_asp(), "ue-mm2", "zone-a")
+        orch.discover_for(s2)
+        assert visited.core.predictors.memo_misses == vm0
+
+    def test_boundary_scrub_strips_non_essential_payload(self):
+        from repro.core.migration import PlaneTransferPath
+        payload = {"cache": {"sim": [1.0]}, "position": 3, "last_token": 7,
+                   "request_log": ["secret"], "invoker_notes": "x"}
+        out = PlaneTransferPath._boundary_scrub(dict(payload))
+        assert set(out) == {"cache", "position", "last_token"}
