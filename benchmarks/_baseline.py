@@ -1,0 +1,58 @@
+"""Shared checked-in-baseline machinery for the benchmark regression
+guards (engine_bench, plane_bench, and any future bench that wants one).
+
+A baseline is a JSON snapshot under ``benchmarks/baselines/<name>.json``
+holding conservative floors; ``floor_failures`` compares observed
+throughput-style metrics (higher is better) against those floors with a
+relative tolerance, and ``enforce`` turns failures into a non-zero exit
+for CI.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List
+
+#: relative drop vs the checked-in floor that fails the guard
+REGRESSION_TOLERANCE = 0.20
+
+
+def baseline_path(name: str) -> str:
+    return os.path.join(os.path.dirname(__file__), "baselines",
+                        f"{name}.json")
+
+
+def load_baseline(name: str) -> dict:
+    with open(baseline_path(name)) as f:
+        return json.load(f)
+
+
+def write_baseline(result: dict, name: str) -> str:
+    path = baseline_path(name)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"baseline written to {path}")
+    return path
+
+
+def floor_failure(label: str, observed: float, floor_value: float,
+                  tolerance: float = REGRESSION_TOLERANCE):
+    """One higher-is-better metric vs its baseline value; returns a
+    failure message or None."""
+    floor = floor_value * (1.0 - tolerance)
+    if observed < floor:
+        return (f"{label}: {observed:.0f} < {floor:.0f} "
+                f"(baseline {floor_value:.0f} - {tolerance:.0%})")
+    return None
+
+
+def enforce(failures: List[str]) -> None:
+    """Print failures to stderr and exit non-zero (CI guard semantics)."""
+    for msg in failures:
+        print(f"!! regression: {msg}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+    print("baseline check OK")

@@ -25,8 +25,11 @@ sys.path.insert(0, ".")
 
 import numpy as np  # noqa: E402
 
+from benchmarks import _baseline  # noqa: E402
 from repro.core.clock import VirtualClock  # noqa: E402
 from repro.serving.plane import ServingPlane, SimulatedEngine  # noqa: E402
+
+BASELINE_NAME = "plane"
 
 
 def bench_plane(n_requests: int = 50_000, *, slots: int = 256,
@@ -106,17 +109,35 @@ def figure_rows(n_requests: int = 20_000):
     return rows, derived
 
 
+def check_baseline(result: dict) -> list:
+    """Regression guard: plane-machinery req/s must not drop >20% below
+    the checked-in baseline. Returns failure messages."""
+    base = _baseline.load_baseline(BASELINE_NAME)
+    msg = _baseline.floor_failure(
+        "plane throughput req/s", result["requests_per_s_wall"],
+        base["requests_per_s_wall"])
+    return [msg] if msg else []
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=50_000)
     ap.add_argument("--slots", type=int, default=256)
     ap.add_argument("--rho", type=float, default=0.85)
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail on >20%% req/s regression vs "
+                         "benchmarks/baselines/plane.json")
+    ap.add_argument("--write-baseline", action="store_true")
     args = ap.parse_args()
     r = bench_plane(args.requests, slots=args.slots, rho=args.rho)
     print(json.dumps(r, indent=1))
     os.makedirs("artifacts/bench", exist_ok=True)
     with open("artifacts/bench/plane_throughput.json", "w") as f:
         json.dump(r, f, indent=1)
+    if args.write_baseline:
+        _baseline.write_baseline(r, BASELINE_NAME)
+    if args.check_baseline:
+        _baseline.enforce(check_baseline(r))
 
 
 if __name__ == "__main__":

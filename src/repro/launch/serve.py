@@ -29,13 +29,19 @@ from repro.serving.server import AIaaSServer
 
 def serve(model: str = "edge-tiny", *, sessions: int = 4, requests: int = 12,
           slots: int = 8, max_len: int = 192, gen_tokens: int = 8,
-          t_max_ms: float = 300_000.0, seed: int = 0, quiet: bool = False):
+          t_max_ms: float = 300_000.0, seed: int = 0, quiet: bool = False,
+          decode_chunk: int = 0, pallas_decode: bool = False):
     import dataclasses
 
     import numpy as np
     clock = Clock()
     orch = Orchestrator(clock=clock)
-    server = AIaaSServer(orch, model, slots=slots, max_len=max_len)
+    # decode_chunk > 0 overrides the per-class fused-chunk caps uniformly
+    # (benchmarks / A-B runs); 0 keeps the QoS-adaptive defaults
+    chunks = ({k: decode_chunk for k in ("premium", "assured", "best-effort")}
+              if decode_chunk > 0 else None)
+    server = AIaaSServer(orch, model, slots=slots, max_len=max_len,
+                         decode_chunk=chunks, pallas_decode=pallas_decode)
     rng = np.random.default_rng(seed)
 
     clients = []
@@ -88,9 +94,16 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--gen-tokens", type=int, default=8)
+    ap.add_argument("--decode-chunk", type=int, default=0,
+                    help="uniform fused-decode chunk size "
+                         "(0 = QoS-adaptive per-class defaults)")
+    ap.add_argument("--pallas-decode", action="store_true",
+                    help="route decode attention through the Pallas "
+                         "flash-decode kernel (interpret mode off-TPU)")
     a = ap.parse_args()
     serve(a.model, sessions=a.sessions, requests=a.requests, slots=a.slots,
-          gen_tokens=a.gen_tokens)
+          gen_tokens=a.gen_tokens, decode_chunk=a.decode_chunk,
+          pallas_decode=a.pallas_decode)
 
 
 if __name__ == "__main__":

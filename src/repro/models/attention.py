@@ -354,9 +354,41 @@ def decode_self_attention(p, cfg: ModelConfig, x, cache_k, cache_v, position,
     k_new, v_new = _project_kv(p, cfg, x, position[:, None])
 
     slot = (position % S) if window else jnp.minimum(position, S - 1)
-    rows = jnp.arange(b)
-    cache_k = cache_k.at[rows, slot].set(k_new[:, 0])
-    cache_v = cache_v.at[rows, slot].set(v_new[:, 0])
+    if cfg.decode_cache_scatter:          # legacy insert (A/B lever)
+        rows = jnp.arange(b)
+        cache_k = cache_k.at[rows, slot].set(k_new[:, 0])
+        cache_v = cache_v.at[rows, slot].set(v_new[:, 0])
+    else:
+        # masked write instead of a batched scatter: XLA lowers per-row
+        # scatter to a serial loop on CPU (and an expensive scatter on
+        # TPU), while the select is one bandwidth-bound fused op
+        hit = (jnp.arange(S, dtype=jnp.int32)[None, :]
+               == slot[:, None])[..., None, None]
+        cache_k = jnp.where(hit, k_new, cache_k)
+        cache_v = jnp.where(hit, v_new, cache_v)
+
+    if cfg.use_pallas_decode and not window and not cfg.attn_logits_softcap:
+        # flash-decode Pallas kernel: linear buffer only (slot index IS the
+        # absolute position, so the kernel's `kpos < length` ragged mask is
+        # exactly the reference path's `kpos <= position`); ring buffers and
+        # softcapped logits stay on the reference path
+        from repro.kernels.decode_attention.decode_attention import \
+            decode_attention
+        o = decode_attention(
+            q[:, 0],                                    # [b, hq, hd]
+            jnp.moveaxis(cache_k, 1, 2),                # [b, kh, S, hd]
+            jnp.moveaxis(cache_v, 1, 2),
+            # clamp at the buffer: past position S-1 the linear cache holds
+            # exactly S valid rows (the reference mask is slot <= position
+            # over slots [0, S)); unclamped, zero-padded rows added by the
+            # kernel's block_kv rounding would pass its kpos < length mask
+            jnp.minimum(position + 1, S),
+            block_kv=min(512, -(-S // 128) * 128),
+            interpret=jax.default_backend() != "tpu")
+        o = o.reshape(b, 1, cfg.q_dim).astype(x.dtype)
+        out = jnp.einsum("bsq,qd->bsd", o, as_weight(p["w_o"]),
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        return out, cache_k, cache_v
 
     # absolute position of every cache slot, per row: [b, S]
     idx = jnp.arange(S, dtype=jnp.int32)

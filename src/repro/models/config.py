@@ -76,6 +76,15 @@ class ModelConfig:
     # -- distribution levers (read by repro.sharding.planner; exposed as
     #    dry-run overrides for the §Perf hillclimb) -------------------------
     kv_shard: str = "auto"           # auto | heads | seq — decode cache axis
+    #: route single-token decode attention through the Pallas flash-decode
+    #: kernel (interpret mode off-TPU); falls back to the reference path for
+    #: sliding-window rings and softcapped logits, which the kernel doesn't
+    #: implement
+    use_pallas_decode: bool = False
+    #: legacy per-row batched-scatter decode-cache insert (XLA lowers it to
+    #: a serial loop on CPU); kept as an A/B lever for engine_bench — the
+    #: default is the fused select write
+    decode_cache_scatter: bool = False
     serve_embed_replicated: bool = False
     serve_fsdp_mode: str = "auto"    # auto | on | off — weight-gathered serve
     serve_weight_dtype: str = "bfloat16"  # bfloat16 | int8 (weight-only quant)

@@ -75,10 +75,13 @@ def _gates(p, x):
     return a, mult
 
 
-def _causal_conv(p, x, state=None):
+def _causal_conv(p, x, state=None, length=None):
     """Depthwise causal conv, width K. x: [b, l, w].
 
     state: [b, K-1, w] carried inputs for decode; returns (y, new_state).
+    ``length`` (traced scalar): true length of a right-padded bucket — the
+    carried state must be the last K-1 *real* inputs, which sit at
+    ``xp[:, length:length+K-1]`` (the causal left-pad shifts by K-1).
     """
     K = p["conv"].shape[0]
     if state is None:
@@ -87,7 +90,10 @@ def _causal_conv(p, x, state=None):
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)
     y = sum(xp[:, i: i + x.shape[1]] * p["conv"][i] for i in range(K))
-    new_state = xp[:, -(K - 1):]
+    if length is None:
+        new_state = xp[:, -(K - 1):]
+    else:
+        new_state = jax.lax.dynamic_slice_in_dim(xp, length, K - 1, axis=1)
     return y.astype(x.dtype), new_state
 
 

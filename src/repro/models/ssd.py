@@ -56,8 +56,14 @@ def _split_proj(cfg: ModelConfig, zxbcdt):
     return z, x, B, C, dt
 
 
-def _conv(p, xbc, state=None):
-    """Causal depthwise conv over [b, l, conv_dim]."""
+def _conv(p, xbc, state=None, length=None):
+    """Causal depthwise conv over [b, l, conv_dim].
+
+    ``length`` (traced scalar): true sequence length when the input is
+    right-padded to a compile bucket — the carried conv state must be the
+    last K-1 *real* inputs, i.e. padded rows ``xp[:, length:length+K-1]``
+    (the K-1 zeros of the causal left-pad shift the index by exactly K-1).
+    """
     K = p["conv"].shape[0]
     if state is None:
         pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
@@ -65,7 +71,11 @@ def _conv(p, xbc, state=None):
         pad = state.astype(xbc.dtype)
     xp = jnp.concatenate([pad, xbc], axis=1)
     y = sum(xp[:, i: i + xbc.shape[1]] * p["conv"][i] for i in range(K))
-    return jax.nn.silu(y.astype(jnp.float32)).astype(xbc.dtype), xp[:, -(K - 1):]
+    if length is None:
+        new_state = xp[:, -(K - 1):]
+    else:
+        new_state = jax.lax.dynamic_slice_in_dim(xp, length, K - 1, axis=1)
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xbc.dtype), new_state
 
 
 def _ssd_chunked(cfg: ModelConfig, x, dt, A, B, C, S0):
@@ -125,8 +135,15 @@ def _ssd_chunked(cfg: ModelConfig, x, dt, A, B, C, S0):
     return y[:, :l], S_f
 
 
-def ssd_apply(p, cfg: ModelConfig, x, conv_state=None, ssm_state=None):
-    """Sequence path. x: [b, l, d] -> (y [b, l, d], (conv_state, ssm_state))."""
+def ssd_apply(p, cfg: ModelConfig, x, conv_state=None, ssm_state=None,
+              length=None):
+    """Sequence path. x: [b, l, d] -> (y [b, l, d], (conv_state, ssm_state)).
+
+    ``length`` (traced scalar) marks the true prompt length of a
+    right-padded bucket: padded steps get dt = 0, which makes the SSD
+    recurrence an exact identity there (decay exp(0·A) = 1, input dt·B·x
+    = 0), so the carried state equals the state at ``length`` bit-for-bit.
+    """
     b, l, d = x.shape
     di, nh, hp = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
     g, n = cfg.ssm_ngroups, cfg.ssm_state
@@ -134,11 +151,14 @@ def ssd_apply(p, cfg: ModelConfig, x, conv_state=None, ssm_state=None):
                         preferred_element_type=jnp.float32).astype(x.dtype)
     z, xs, B, C, dt = _split_proj(cfg, zxbcdt)
     xbc = jnp.concatenate([xs, B, C], axis=-1)
-    xbc, conv_state = _conv(p, xbc, conv_state)
+    xbc, conv_state = _conv(p, xbc, conv_state, length=length)
     xs = xbc[..., :di].reshape(b, l, nh, hp)
     B = xbc[..., di: di + g * n].reshape(b, l, g, n)
     C = xbc[..., di + g * n:].reshape(b, l, g, n)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if length is not None:
+        valid = jnp.arange(l, dtype=jnp.int32) < length
+        dt = jnp.where(valid[None, :, None], dt, 0.0)
     A = -jnp.exp(p["A_log"])
     if ssm_state is None:
         ssm_state = jnp.zeros((b, nh, hp, n), jnp.float32)

@@ -86,21 +86,35 @@ def _block_seq(p, cfg: ModelConfig, kind: str, x, positions, memory=None,
 
 
 def _block_prefill(p, cfg: ModelConfig, kind: str, x, positions, S,
-                   memory=None, mem_positions=None):
-    """Sequence pass that also emits the decode cache for this layer."""
+                   memory=None, mem_positions=None, length=None):
+    """Sequence pass that also emits the decode cache for this layer.
+
+    ``length`` (traced scalar) is the true prompt length when ``x`` is
+    right-padded to a compile bucket: the recurrent families force their
+    per-step update to the identity on padded steps and take conv states
+    at ``length``, attention relies on causality (padded keys sit strictly
+    after every real query) plus decode-side position masking of the buffer
+    tail — either way the emitted cache equals the exact-length cache.
+    """
     aux = jnp.zeros((), jnp.float32)
     x = constrain(x, "dp", None, None)
     h = L.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     if kind == "ssm":
-        y, (conv, ssm) = SSD.ssd_apply(p["ssd"], cfg, h)
+        y, (conv, ssm) = SSD.ssd_apply(p["ssd"], cfg, h, length=length)
         return x + y, {"conv": conv, "ssm": ssm}, aux
     if kind == "rec":
         # rerun block capturing final recurrence state
         xw = jnp.einsum("bld,dw->blw", h, as_weight(p["rec"]["w_x"]),
                         preferred_element_type=jnp.float32).astype(h.dtype)
-        xw, conv_state = RG._causal_conv(p["rec"], xw)
+        xw, conv_state = RG._causal_conv(p["rec"], xw, length=length)
         a, mult = RG._gates(p["rec"], xw)
         b0 = mult * xw.astype(jnp.float32)
+        if length is not None:
+            # padded steps: a=1, b=0 — the recurrence is an exact identity,
+            # so hs[:, -1] is the state at the true end of the prompt
+            valid = jnp.arange(xw.shape[1], dtype=jnp.int32) < length
+            a = jnp.where(valid[None, :, None], a, 1.0)
+            b0 = jnp.where(valid[None, :, None], b0, 0.0)
         h0 = jnp.zeros((h.shape[0], xw.shape[-1]), jnp.float32)
         hs = RG._scan_lru(a, b0, h0)
         gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", h,
@@ -124,7 +138,7 @@ def _block_prefill(p, cfg: ModelConfig, kind: str, x, positions, S,
                    as_weight(p["attn"]["w_o"]),
                    preferred_element_type=jnp.float32).astype(x.dtype)
     x = x + y
-    cache = _kv_to_buffer(cfg, k, v, S)
+    cache = _kv_to_buffer(cfg, k, v, S, length=length)
     if kind == "attn_cross":
         hx = L.rmsnorm_apply(p["norm_x"], x, cfg.norm_eps)
         x = x + A.cross_attention(p["xattn"], cfg, hx, memory, mem_positions)
@@ -138,17 +152,33 @@ def _block_prefill(p, cfg: ModelConfig, kind: str, x, positions, S,
     return x + y2, cache, aux
 
 
-def _kv_to_buffer(cfg: ModelConfig, k, v, S):
+def _kv_to_buffer(cfg: ModelConfig, k, v, S, length=None):
     """Place prefill K/V [b, s, kh, hd] into the decode buffer of length S.
 
     Full attention: slots [0, s). Sliding window: ring layout — token at
     absolute position p lives in slot p % S.
+
+    ``length`` (traced scalar): true prompt length of a right-padded bucket.
+    Full attention needs no masking here — buffer rows past ``length`` hold
+    padded-K/V garbage that decode never attends (its validity test is
+    ``slot index <= position``). The ring layout DOES mask: only positions
+    in ``[length - S, length)`` may land in the ring; padded and evicted
+    positions are routed to a discard row so they cannot clobber live slots.
     """
     b, s = k.shape[0], k.shape[1]
     if not cfg.sliding_window:
         padk = jnp.zeros((b, S, k.shape[2], k.shape[3]), k.dtype)
         return {"k": jax.lax.dynamic_update_slice_in_dim(padk, k[:, :S], 0, 1),
                 "v": jax.lax.dynamic_update_slice_in_dim(padk, v[:, :S], 0, 1)}
+    if length is not None:
+        pos = jnp.arange(s)
+        live = (pos < length) & (pos >= length - S)
+        slots = jnp.where(live, pos % S, S)       # S = discard row
+        bufk = jnp.zeros((b, S + 1, k.shape[2], k.shape[3]), k.dtype)
+        bufv = jnp.zeros_like(bufk)
+        bufk = bufk.at[:, slots].set(k)
+        bufv = bufv.at[:, slots].set(v)
+        return {"k": bufk[:, :S], "v": bufv[:, :S]}
     take = min(s, S)
     ks, vs = k[:, -take:], v[:, -take:]
     slots = (jnp.arange(s - take, s)) % S
@@ -425,11 +455,21 @@ class LM:
 
     # -- prefill ------------------------------------------------------------
     def prefill(self, params, batch, max_len: int):
+        """Build the decode cache for one prompt.
+
+        ``batch["length"]`` (optional traced int32 scalar) marks the true
+        prompt length when ``batch["tokens"]`` is right-padded to a compile
+        bucket: the cache position, final logits, and every family's carried
+        state are taken at ``length`` rather than the padded width, so the
+        engine compiles O(log max_len) prefill variants instead of one per
+        distinct prompt length (see InferenceEngine.prefill_session).
+        """
         cfg = self.cfg
         x = self._embed(params, batch)
         s = x.shape[1]
         S = KV.kv_buffer_len(cfg, max_len)
         pos = self._positions(batch, s)
+        length = batch.get("length")
         memory = mem_pos = None
         if cfg.family == "encdec":
             memory = self._encode(params, batch["frames"])
@@ -441,38 +481,51 @@ class LM:
                 kk = "rec" if kind == "rec" else "attn"
 
                 def fn(lp_, h_, kk=kk):
-                    return _block_prefill(lp_, cfg, kk, h_, pos, S)
+                    return _block_prefill(lp_, cfg, kk, h_, pos, S,
+                                          length=length)
                 x, cl, _ = _maybe_remat(fn, cfg)(lp, x)
                 layers_cache.append(cl)
             cache = {"layers": tuple(layers_cache),
-                     "pos": jnp.full((x.shape[0],), s, jnp.int32)}
+                     "pos": self._prefill_pos(x, s, length)}
         elif cfg.family == "ssm":
             def body(h, lp):
-                h, cl, _ = _block_prefill(lp, cfg, "ssm", h, pos, S)
+                h, cl, _ = _block_prefill(lp, cfg, "ssm", h, pos, S,
+                                          length=length)
                 return h, cl
 
             x, stacked = jax.lax.scan(_maybe_remat(body, cfg), x,
                                       params["layers"])
-            cache = {"layers": stacked, "pos": jnp.full((x.shape[0],), s, jnp.int32)}
+            cache = {"layers": stacked, "pos": self._prefill_pos(x, s, length)}
         else:
             kind = ("attn_cross" if cfg.family == "encdec"
                     else self._trunk_kind())
 
             def body(h, lp):
                 h, cl, _ = _block_prefill(lp, cfg, kind, h, pos, S,
-                                          memory=memory, mem_positions=mem_pos)
+                                          memory=memory, mem_positions=mem_pos,
+                                          length=length)
                 return h, cl
 
             x, stacked = jax.lax.scan(_maybe_remat(body, cfg), x,
                                       params["layers"])
             cache = {"layers": {"k": stacked["k"], "v": stacked["v"]},
-                     "pos": jnp.full((x.shape[0],), s, jnp.int32)}
+                     "pos": self._prefill_pos(x, s, length)}
             if cfg.family == "encdec":
                 cache["cross_k"] = stacked["cross_k"]
                 cache["cross_v"] = stacked["cross_v"]
-        x_last = x[:, -1]
+        if length is None:
+            x_last = x[:, -1]
+        else:
+            x_last = jax.lax.dynamic_index_in_dim(x, length - 1, axis=1,
+                                                  keepdims=False)
         x_last = L.rmsnorm_apply(params["final_norm"], x_last, cfg.norm_eps)
         return self._logits(params, x_last), cache
+
+    @staticmethod
+    def _prefill_pos(x, s, length):
+        if length is None:
+            return jnp.full((x.shape[0],), s, jnp.int32)
+        return jnp.broadcast_to(jnp.asarray(length, jnp.int32), (x.shape[0],))
 
     # -- decode ---------------------------------------------------------------
     def decode_step(self, params, cache, tokens):

@@ -2,11 +2,28 @@
 
 One engine instance = one execution anchor's serving plane for one model:
 a fixed decode batch of ``slots`` sequences sharing jitted prefill /
-decode_step functions. Sessions join/leave slots independently (per-slot
+decode functions. Sessions join/leave slots independently (per-slot
 positions in the cache make lockstep unnecessary). The engine is the
 ``v_cmp`` substrate AIS compute leases reserve against, and its
 ``export_slot``/``import_slot`` are the state-transfer primitive behind
 make-before-break migration.
+
+Hot-path disciplines (the per-token costs that separate a toy loop from a
+serving engine):
+
+* **Fused multi-step decode** — ``decode_round(steps=K)`` runs K decode
+  steps inside ONE jitted ``lax.scan`` with on-device greedy sampling and
+  an on-device active-slot mask: one dispatch and one device→host transfer
+  per K tokens instead of per token.
+* **Bucketed prefill** — prompts are right-padded to power-of-two buckets
+  with the true length threaded through ``LM.prefill`` as a traced scalar,
+  so the engine compiles O(log max_len) prefill variants instead of one
+  per distinct prompt length (``prefill_compiles`` exposes the counter).
+* **Donated, index-addressed slot state** — slot insert (admit / migrate
+  in) and the decode cache update run under ``jax.jit(...,
+  donate_argnums=...)`` with per-slot ``dynamic_update_slice`` writes, so
+  admitting or exporting a session no longer materialises a second full
+  cache.
 
 On the CPU container this runs the tiny models for examples/tests; on a pod
 the same code jit-compiles under the production mesh with the decode plan's
@@ -16,8 +33,9 @@ shardings (see repro.launch.serve).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+import zlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +43,25 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import LM
+
+#: smallest prefill bucket — below this the compile is cheap enough that
+#: further splitting buys nothing
+_MIN_BUCKET = 16
+
+
+def prefill_buckets(max_len: int) -> List[int]:
+    """Power-of-two padded prompt lengths, capped at ``max_len``.
+
+    len(buckets) <= ceil(log2(max_len)): the compile-count ceiling the
+    engine guarantees over any prompt-length mix.
+    """
+    out: List[int] = []
+    b = _MIN_BUCKET
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return out
 
 
 @dataclass
@@ -48,10 +85,18 @@ class InferenceEngine:
         self.cache = self.lm.init_cache(slots, max_len)
         self._slot_map: Dict[str, int] = {}
         self._slots: list[Optional[SlotState]] = [None] * slots
+        self.buckets = prefill_buckets(max_len)
+        self._compiled_buckets: set = set()
         self._prefill = jax.jit(
             lambda p, b: self.lm.prefill(p, b, self.max_len))
-        self._decode = jax.jit(self.lm.decode_step)
-        self._active_mask = np.zeros(slots, bool)
+        # K-step fused decode: cache is DONATED — the scan updates it in
+        # place instead of double-buffering the whole KV cache
+        self._decode_fused = jax.jit(self._fused_impl, static_argnums=(4,),
+                                     donate_argnums=(1,))
+        # slot insert: donate the full cache so admit/import is a per-slot
+        # dynamic_update, not a full-cache copy
+        self._slot_write = jax.jit(self._slot_write_impl, donate_argnums=(0,))
+        self._slot_read = jax.jit(self._slot_read_impl)
 
     # ------------------------------------------------------------------
     def free_slots(self) -> int:
@@ -65,6 +110,18 @@ class InferenceEngine:
         the authoritative payload size for migration."""
         meta = self._slots[self._slot_map[session_id]]
         return meta.position
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill shapes traced so far (== jit cache entries:
+        the padded width is the only shape that varies across prompts)."""
+        return len(self._compiled_buckets)
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.max_len
 
     def _alloc(self, session_id: str) -> int:
         for i, s in enumerate(self._slots):
@@ -83,26 +140,32 @@ class InferenceEngine:
         return 1 if any(str(k) in ("k", "v", "conv", "ssm", "cross_k",
                                    "cross_v") for k in keys) else 0
 
-    def _write_slot(self, idx: int, cache1):
-        """Insert a batch-1 cache into slot ``idx`` of the engine cache."""
+    def _slot_write_impl(self, cache, cache1, idx):
+        """Insert a batch-1 cache into slot ``idx`` (donated, traced idx)."""
         def ins(path, full, one):
             ax = self._batch_axis(path)
-            one_row = jax.lax.index_in_dim(one, 0, axis=ax, keepdims=False)
-            if ax == 0:
-                return full.at[idx].set(one_row)
-            return full.at[:, idx].set(one_row)
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), idx, axis=ax)
 
-        self.cache = jax.tree_util.tree_map_with_path(ins, self.cache, cache1)
+        return jax.tree_util.tree_map_with_path(ins, cache, cache1)
+
+    def _slot_read_impl(self, cache, idx):
+        """Extract the batch-1 state of slot ``idx`` (no donation — the
+        source keeps serving while migration is in flight)."""
+        def ext(path, full):
+            ax = self._batch_axis(path)
+            return jax.lax.dynamic_slice_in_dim(full, idx, 1, axis=ax)
+
+        return jax.tree_util.tree_map_with_path(ext, cache)
+
+    def _write_slot(self, idx: int, cache1):
+        """Insert a batch-1 cache into slot ``idx`` of the engine cache."""
+        self.cache = self._slot_write(self.cache, cache1, jnp.int32(idx))
 
     def export_slot(self, session_id: str):
         """Extract this session's state (the migration payload)."""
         idx = self._slot_map[session_id]
-
-        def ext(path, full):
-            ax = self._batch_axis(path)
-            return jax.lax.slice_in_dim(full, idx, idx + 1, axis=ax)
-
-        state = jax.tree_util.tree_map_with_path(ext, self.cache)
+        state = self._slot_read(self.cache, jnp.int32(idx))
         meta = self._slots[idx]
         return {"cache": state, "position": meta.position,
                 "last_token": meta.last_token}
@@ -129,53 +192,110 @@ class InferenceEngine:
 
     # ------------------------------------------------------------------
     def prefill_session(self, session_id: str, prompt: np.ndarray) -> dict:
-        """Admit a session: run prefill, install the cache, return TTFT."""
+        """Admit a session: run prefill, install the cache, return TTFT.
+
+        The prompt is right-padded to its power-of-two bucket with the true
+        length passed as a traced scalar — the whole mix of prompt lengths
+        compiles at most ``len(self.buckets)`` prefill variants.
+        """
         t0 = time.perf_counter()
-        batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
+        n = len(prompt)
+        if n > self.max_len:
+            # refuse rather than silently truncate: a truncated prefill
+            # would condition generation on a clipped prefix while
+            # position_of()/migration payload sizing report the full length
+            raise ValueError(
+                f"prompt of {n} tokens exceeds engine max_len "
+                f"{self.max_len} for {session_id}")
+        width = self._bucket(n)
+        padded = np.zeros(width, np.int32)
+        padded[:n] = prompt
+        self._compiled_buckets.add(width)
+        batch = {"tokens": jnp.asarray(padded[None, :], jnp.int32),
+                 "length": jnp.int32(n)}
         logits, cache1 = self._prefill(self.params, batch)
         tok = int(jnp.argmax(logits[0]))
         idx = self._alloc(session_id)
         self._write_slot(idx, cache1)
-        self._slots[idx] = SlotState(session_id, position=len(prompt),
+        self._slots[idx] = SlotState(session_id, position=n,
                                      tokens_generated=1, last_token=tok)
         return {"first_token": tok,
                 "ttfb_ms": (time.perf_counter() - t0) * 1e3}
 
-    def decode_round(self) -> Dict[str, int]:
-        """One continuous-batching decode step for every active slot."""
+    # ------------------------------------------------------------------
+    def _fused_impl(self, params, cache, last, active, steps: int):
+        """K decode steps in one jitted scan. ``last``: [slots] int32 token
+        feedback; ``active``: [slots] bool — inactive slots keep feeding
+        their (zero) token so a fused chunk is bit-identical to K sequential
+        single-step rounds regardless of who shares the batch.
+        Returns (cache, token block [slots, K])."""
+        def step(carry, _):
+            c, fed = carry
+            logits, c = self.lm.decode_step(params, c, fed[:, None])
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            fed = jnp.where(active, nxt, fed)
+            return (c, fed), fed
+
+        (cache, _), toks = jax.lax.scan(step, (cache, last), None,
+                                        length=steps)
+        return cache, jnp.moveaxis(toks, 0, 1)          # [slots, K]
+
+    def decode_round(self, steps: Optional[int] = None
+                     ) -> Dict[str, Union[int, List[int]]]:
+        """Continuous-batching decode for every active slot.
+
+        ``steps=None`` — legacy single-step form: {session: token}.
+        ``steps=K``    — fused K-step chunk: {session: [token, ...] * K},
+        produced by ONE dispatch and ONE device→host transfer.
+        """
         if not self._slot_map:
             return {}
-        toks = np.zeros((self.slots, 1), np.int32)
+        k = 1 if steps is None else max(1, int(steps))
+        last = np.zeros(self.slots, np.int32)
+        active = np.zeros(self.slots, bool)
         for i, s in enumerate(self._slots):
             if s is not None:
-                toks[i, 0] = s.last_token
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks))
-        out = {}
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                last[i] = s.last_token
+                active[i] = True
+        self.cache, block = self._decode_fused(
+            self.params, self.cache, jnp.asarray(last),
+            jnp.asarray(active), k)
+        block = np.asarray(block)                        # [slots, K]
+        out: Dict[str, Union[int, List[int]]] = {}
         for i, s in enumerate(self._slots):
             if s is None:
                 continue
-            s.last_token = int(nxt[i])
-            s.position += 1
-            s.tokens_generated += 1
-            out[s.session_id] = s.last_token
+            s.last_token = int(block[i, -1])
+            s.position += k
+            s.tokens_generated += k
+            out[s.session_id] = (int(block[i, 0]) if steps is None
+                                 else [int(t) for t in block[i]])
         return out
 
     # ------------------------------------------------------------------
     def serve(self, session_id: str, prompt_tokens: int, gen_tokens: int,
-              *, prompt: Optional[np.ndarray] = None) -> dict:
-        """Unary convenience: prefill + N decode rounds for one session."""
-        rng = np.random.default_rng(hash(session_id) % 2**31)
+              *, prompt: Optional[np.ndarray] = None,
+              chunk: int = 16) -> dict:
+        """Unary convenience: prefill + chunked decode for one session.
+
+        Synthetic prompts are crc32-seeded (NOT ``hash()``, which varies
+        per process under PYTHONHASHSEED and would break reproducible
+        traces and cross-process fingerprint checks)."""
+        rng = np.random.default_rng(
+            zlib.crc32(session_id.encode()) % 2**31)
         if prompt is None:
             prompt = rng.integers(0, self.cfg.vocab_size,
                                   size=prompt_tokens).astype(np.int32)
         t0 = time.perf_counter()
         pre = self.prefill_session(session_id, prompt)
         toks = [pre["first_token"]]
-        for _ in range(gen_tokens - 1):
-            out = self.decode_round()
-            toks.append(out[session_id])
+        remaining = gen_tokens - 1
+        while remaining > 0:
+            # pow2 chunk schedule: O(log chunk) compiled scan variants
+            k = min(chunk, 1 << (remaining.bit_length() - 1))
+            out = self.decode_round(steps=k)
+            toks.extend(out[session_id])
+            remaining -= k
         self.release_slot(session_id)
         total_ms = (time.perf_counter() - t0) * 1e3
         return {"tokens": toks, "ttfb_ms": pre["ttfb_ms"],

@@ -111,7 +111,7 @@ class RealEngineBackend:
     def __init__(self, engine, clock: Clock, *, seed: int = 0):
         self.engine = engine
         self.clock = clock
-        self._ms_per_token: float = 0.0       # measured EWMA
+        self._ms_per_token: float = 0.0       # measured EWMA (per decode step)
         self._seed = seed
 
     # -- plane interface -------------------------------------------------
@@ -135,13 +135,18 @@ class RealEngineBackend:
 
     def admit(self, req: Request, now: float) -> Admission:
         import numpy as np
+        import zlib
         if req.session_id in self.engine._slot_map:
             # stale slot from a migrated/abandoned generation: superseded
             self.engine.release_slot(req.session_id)
         prompt = req.prompt
         if prompt is None:
+            # crc32, not hash(): hash() varies per process under
+            # PYTHONHASHSEED, which would break reproducible traces and
+            # cross-process migration fingerprint checks
             rng = np.random.default_rng(
-                (hash(req.session_id) ^ hash(req.request_id) ^ self._seed)
+                (zlib.crc32(req.session_id.encode())
+                 ^ zlib.crc32(req.request_id.encode()) ^ self._seed)
                 % 2**31)
             prompt = rng.integers(
                 0, self.engine.cfg.vocab_size,
@@ -150,12 +155,22 @@ class RealEngineBackend:
         return Admission(ttfb_ms=out["ttfb_ms"], finish_at=None,
                          first_token=out["first_token"])
 
-    def decode_round(self) -> Dict[str, int]:
+    def decode_round(self, steps: Optional[int] = None):
+        """One decode chunk. ``steps=None`` keeps the legacy single-step
+        {session: token} form; ``steps=K`` returns {session: [K tokens]}
+        from one fused dispatch.
+
+        The service-time EWMA normalises by the tokens each active session
+        emitted in the chunk (= the number of decode steps) — NOT by the
+        number of sessions or calls — so ``predicted_service_ms`` (per-token
+        EWMA × requested tokens) stays calibrated for deadline fast-fail
+        whatever the chunk size: a request's G tokens always take G steps,
+        however many sessions share each step."""
         t0 = self.clock.now()
-        out = self.engine.decode_round()
+        out = self.engine.decode_round(steps=steps)
         dt_ms = (self.clock.now() - t0) * 1e3
         if out:
-            per_tok = dt_ms / max(len(out), 1)
+            per_tok = dt_ms / max(steps or 1, 1)
             self._ms_per_token = per_tok if self._ms_per_token == 0.0 \
                 else 0.8 * self._ms_per_token + 0.2 * per_tok
         return out
@@ -257,7 +272,7 @@ class SimulatedEngine:
             ttfb, total = 0.0, self.default_service_ms
         return Admission(ttfb_ms=ttfb, finish_at=now + total / 1e3)
 
-    def decode_round(self) -> Dict[str, int]:
+    def decode_round(self, steps: Optional[int] = None) -> Dict[str, int]:
         return {}
 
     def release(self, session_id: str) -> None:
@@ -293,6 +308,13 @@ class SimulatedEngine:
         self._sessions.pop(session_id, None)
 
 
+#: default fused-decode chunk sizes per QoS class: the chunk is the
+#: preemption granularity — admission (and therefore premium TTFT) can only
+#: happen between chunks, so the premium chunk stays small while best-effort
+#: amortises dispatch overhead over longer runs
+DEFAULT_DECODE_CHUNK = {"premium": 4, "assured": 8, "best-effort": 32}
+
+
 class ServingPlane:
     """QoS-scheduled serving plane of ONE execution site."""
 
@@ -300,10 +322,14 @@ class ServingPlane:
                  premium_reserved_frac: float = 0.25,
                  max_queue: Optional[int] = None,
                  site_id: str = "",
-                 arrival_window: int = 128):
+                 arrival_window: int = 128,
+                 decode_chunk: Optional[Dict[str, int]] = None):
         self.clock = clock
         self.backend = backend
         self.site_id = site_id
+        self.decode_chunk = dict(DEFAULT_DECODE_CHUNK)
+        if decode_chunk:
+            self.decode_chunk.update(decode_chunk)
         self.scheduler = QoSScheduler(
             clock, slots=slots, premium_reserved_frac=premium_reserved_frac)
         #: None = unbounded queue; N = loss system once running+queued
@@ -374,7 +400,18 @@ class ServingPlane:
             skip=self._skip, on_fast_fail=self._fast_fail)
         for req in batch:
             self.backend.ensure_capacity(self._active_sessions)
-            adm = self.backend.admit(req, self.clock.now())
+            try:
+                adm = self.backend.admit(req, self.clock.now())
+            except Exception as e:
+                # the request is already in scheduler.running — a backend
+                # refusal (oversized prompt, engine failure) must free that
+                # slot and surface as a failed result, never wedge the site
+                self.scheduler.detach(req.request_id)
+                cause = (FailureCause.NO_FEASIBLE_BINDING
+                         if isinstance(e, ValueError)   # infeasible request
+                         else FailureCause.COMPUTE_SCARCITY)
+                self._finish(req, ttfb_ms=0.0, completed=False, failed=cause)
+                continue
             self._active_sessions.add(req.session_id)
             req.hint_ttfb_ms = adm.ttfb_ms            # measured/known TTFB
             if adm.finish_at is not None:
@@ -415,23 +452,48 @@ class ServingPlane:
                      completed=latency_ms <= req.t_max_ms)
         self._admit()               # freed slot: admit from the queue
 
+    def _chunk_steps(self) -> int:
+        """Fused-decode chunk size for the next round: bounded by (a) the
+        smallest remaining token budget among running requests — no slot
+        ever overshoots its request, so per-request accounting stays exact —
+        and (b) the chunk cap of the highest QoS class present (running OR
+        queued: a queued premium request must not wait out a long
+        best-effort chunk for its admission slot). The bound is then rounded
+        DOWN to a power of two so the engine compiles O(log max_chunk) fused
+        scans total (request tails would otherwise trace a fresh scan for
+        every distinct remaining count)."""
+        remaining = [
+            req.gen_tokens - self._tokens.get(req.request_id, 0)
+            for req in self.scheduler.running.values()]
+        if not remaining:
+            return 1
+        cap = max(self.decode_chunk.values())
+        classes = {r.klass for r in self.scheduler.running.values()}
+        classes |= {k for k, d in self.scheduler.queues.items() if d}
+        for k in classes:
+            cap = min(cap, self.decode_chunk.get(k, 1))
+        bound = max(1, min(min(remaining), cap))
+        return 1 << (bound.bit_length() - 1)     # pow2 floor
+
     def _round(self) -> bool:
-        """One continuous-batching decode round (real backends). Returns
-        False when the round made no progress (nothing active, or a
-        simulated backend whose progress is event-driven)."""
+        """One continuous-batching decode chunk (real backends): K fused
+        decode steps in one dispatch, K picked per QoS mix. Returns False
+        when the round made no progress (nothing active, or a simulated
+        backend whose progress is event-driven)."""
         if not self.scheduler.running:
             return False
-        out = self.backend.decode_round()
+        steps = self._chunk_steps()
+        out = self.backend.decode_round(steps=steps)
         if not out:
             return False
         finished = []
         for req in list(self.scheduler.running.values()):
             if req.session_id in out:
+                block = out[req.session_id]
                 self._tokens[req.request_id] = \
-                    self._tokens.get(req.request_id, 0) + 1
+                    self._tokens.get(req.request_id, 0) + len(block)
                 if req.request_id in self._tok_ids:
-                    self._tok_ids[req.request_id].append(
-                        out[req.session_id])
+                    self._tok_ids[req.request_id].extend(block)
                 if self._tokens[req.request_id] >= req.gen_tokens:
                     finished.append(req)
         for req in finished:

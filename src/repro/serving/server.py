@@ -31,9 +31,13 @@ class EngineFleet:
     """Per-site engines for one model (shared weights across sites)."""
 
     def __init__(self, catalog: Catalog, model_id: str, *, slots: int = 8,
-                 max_len: int = 256):
+                 max_len: int = 256, pallas_decode: bool = False):
+        import dataclasses
         entry = catalog.get(model_id)
         self.entry = entry
+        self.cfg = entry.cfg
+        if pallas_decode:
+            self.cfg = dataclasses.replace(entry.cfg, use_pallas_decode=True)
         self.slots = slots
         self.max_len = max_len
         self._engines: Dict[str, InferenceEngine] = {}
@@ -41,7 +45,7 @@ class EngineFleet:
 
     def engine_for(self, site_id: str) -> InferenceEngine:
         if site_id not in self._engines:
-            eng = InferenceEngine(self.entry.cfg, params=self._params,
+            eng = InferenceEngine(self.cfg, params=self._params,
                                   slots=self.slots, max_len=self.max_len)
             self._params = eng.params   # weights shared across sites
             self._engines[site_id] = eng
@@ -52,10 +56,12 @@ class AIaaSServer:
     def __init__(self, orch: Orchestrator, model_id: str = "edge-tiny",
                  *, slots: int = 8, max_len: int = 256,
                  premium_reserved_frac: float = 0.25,
-                 gateway: Optional[NorthboundGateway] = None):
+                 gateway: Optional[NorthboundGateway] = None,
+                 decode_chunk: Optional[Dict[str, int]] = None,
+                 pallas_decode: bool = False):
         self.orch = orch
         self.fleet = EngineFleet(orch.catalog, model_id, slots=slots,
-                                 max_len=max_len)
+                                 max_len=max_len, pallas_decode=pallas_decode)
         self.planes: Dict[str, ServingPlane] = {}
         for site_id, site in orch.sites.items():
             eng = self.fleet.engine_for(site_id)
@@ -63,7 +69,7 @@ class AIaaSServer:
             plane = ServingPlane(
                 orch.clock, RealEngineBackend(eng, orch.clock),
                 slots=slots, premium_reserved_frac=premium_reserved_frac,
-                site_id=site_id)
+                site_id=site_id, decode_chunk=decode_chunk)
             site.attach_plane(plane)
             self.planes[site_id] = plane
         # the northbound exposure point: sessions established through it and

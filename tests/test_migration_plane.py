@@ -26,7 +26,12 @@ from repro.serving.state_transfer import TransferInjections
 
 def mk_server(slots=4, max_len=96):
     orch = Orchestrator(clock=VirtualClock())
-    return AIaaSServer(orch, "edge-tiny", slots=slots, max_len=max_len), orch
+    # per-token decode chunks: these tests drive _round() by hand to catch a
+    # session mid-stream at an exact token count (chunked-decode handover is
+    # covered in tests/test_engine_fast.py)
+    chunk = {"premium": 1, "assured": 1, "best-effort": 1}
+    return AIaaSServer(orch, "edge-tiny", slots=slots, max_len=max_len,
+                       decode_chunk=chunk), orch
 
 
 def vehicular(orch, name="car"):

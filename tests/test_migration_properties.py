@@ -54,7 +54,11 @@ def real_server():
     if not _SERVER:
         from repro.serving.server import AIaaSServer
         orch = Orchestrator(clock=VirtualClock())
-        _SERVER.append((AIaaSServer(orch, "edge-tiny", slots=4, max_len=96),
+        # per-token decode chunks: the mid-stream property drives _round()
+        # by hand and must catch the session before its budget completes
+        chunk = {"premium": 1, "assured": 1, "best-effort": 1}
+        _SERVER.append((AIaaSServer(orch, "edge-tiny", slots=4, max_len=96,
+                                    decode_chunk=chunk),
                         orch))
     return _SERVER[0]
 
