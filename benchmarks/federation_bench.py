@@ -11,6 +11,13 @@ Two questions the east-west redesign is accountable for:
   admitted fraction and served requests, federated vs single-domain.
 
     PYTHONPATH=src python -m benchmarks.federation_bench [--quick]
+        [--check-baseline] [--write-baseline]
+
+``--check-baseline`` enforces ``benchmarks/baselines/federation.json``:
+spillover must admit and serve strictly more than the saturated single
+domain (a ratio, so runner speed cancels) and the east-west handshake
+must stay under the control-plane budget. CI regression guard for the
+federation path.
 """
 
 from __future__ import annotations
@@ -26,6 +33,7 @@ sys.path.insert(0, ".")
 
 import numpy as np  # noqa: E402
 
+from benchmarks import _baseline  # noqa: E402
 from repro.api.client import SessionClient  # noqa: E402
 from repro.api.gateway import NorthboundGateway  # noqa: E402
 from repro.core import default_asp  # noqa: E402
@@ -119,11 +127,46 @@ def figure_rows(n_requests: int = 200):
     return rows, derived
 
 
+BASELINE_NAME = "federation"
+
+
+def check_baseline(derived: dict) -> list:
+    """Regression guard, hardware-independent by construction: the
+    spillover claims are ratios/orderings between two arms run on the
+    SAME machine (runner speed cancels), and the handshake bound is a
+    generous control-plane budget, not a tuned absolute. Per-call µs
+    figures are recorded in the baseline as reference only. Returns
+    failure messages."""
+    base = _baseline.load_baseline(BASELINE_NAME)
+    inv = base["invariants"]
+    failures = []
+    if not (derived["spillover_admitted_frac"]
+            > derived["single_admitted_frac"]):
+        failures.append(
+            f"spillover admitted_frac {derived['spillover_admitted_frac']} "
+            f"<= single-domain {derived['single_admitted_frac']} "
+            f"(federation no longer absorbs overload)")
+    if not derived["spillover_served"] > derived["single_served"]:
+        failures.append(
+            f"spillover served {derived['spillover_served']} <= "
+            f"single-domain {derived['single_served']}")
+    if derived["added_p50_us"] >= inv["added_p50_us_max"]:
+        failures.append(
+            f"east-west establish overhead {derived['added_p50_us']:.0f}us "
+            f">= budget {inv['added_p50_us_max']:.0f}us")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sample (CI smoke)")
     ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="enforce benchmarks/baselines/federation.json "
+                         "invariants (CI guard)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="overwrite the checked-in baseline with this run")
     a = ap.parse_args()
     n = 60 if a.quick else a.requests
     rows, derived = figure_rows(n)
@@ -133,6 +176,22 @@ def main() -> None:
     os.makedirs("artifacts/bench", exist_ok=True)
     with open("artifacts/bench/federation.json", "w") as f:
         json.dump({"rows": rows, "derived": derived}, f, indent=1)
+    if a.write_baseline:
+        _baseline.write_baseline(
+            {"_comment": "regression-guard invariants for the federation "
+                         "path. check_baseline enforces the spillover "
+                         "orderings (federated arm admits AND serves "
+                         "strictly more than the saturated single domain "
+                         "— both arms run on the same machine, so runner "
+                         "speed cancels) and a generous 50 ms control-"
+                         "plane budget on the east-west establish "
+                         "overhead (typically < 1 ms; a 50x margin for "
+                         "slow CI runners). Reference absolutes are NOT "
+                         "enforced.",
+             "invariants": {"added_p50_us_max": 50_000.0},
+             "reference": {"rows": rows, "derived": derived}}, BASELINE_NAME)
+    if a.check_baseline:
+        _baseline.enforce(check_baseline(derived))
     if not derived["holds"]:
         raise SystemExit("federation claims do NOT hold")
 

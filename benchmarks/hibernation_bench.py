@@ -1,0 +1,275 @@
+"""Paged KV + tiered hibernation benchmark — the oversubscription numbers.
+
+The claim under test: with the paged KV pool and the host hibernation
+tier, the number of *bound* AI Sessions a site can hold is decoupled from
+its *resident* decode slots — serve 10x+ more leases than slots at a
+bounded resume cost, without giving up the fused-decode throughput the
+dense layout gets. Three arms:
+
+* ``oversubscribe`` — N sessions served through a ServingPlane backed by
+  a paged engine with ``slots << N`` and an idle-TTL of zero: every
+  session hibernates to host after its request completes. Reports
+  bound/resident-slot ratio (the headline, must be >= 10x), page-pool
+  occupancy, and host store bytes.
+* ``resume`` — p50/p99 latency of hibernate→resume cycles at the engine
+  level (restore + verify + re-import + page re-allocation), plus the
+  end-to-end plane path: ``serve(resume=True)`` continuing a hibernated
+  generation vs a fresh establish+serve on the same plane. The guard is
+  the RATIO resume-p99 / fresh-p50 (same machine, same run — runner speed
+  cancels), not an absolute.
+* ``throughput`` — fused decode tokens/s, paged vs dense engines with
+  identical params, interleaved rep-by-rep (engine_bench convention);
+  paged must stay within noise of dense, and the two must emit identical
+  token streams.
+
+    PYTHONPATH=src python -m benchmarks.hibernation_bench [--quick]
+        [--check-baseline] [--write-baseline]
+
+``--check-baseline`` enforces ``benchmarks/baselines/hibernation.json``:
+hardware-independent ratios only (bound-per-slot floor, paged/dense
+throughput floor, resume/fresh latency ceiling, token identity). The CI
+regression guard for the paged cache + hibernation tier.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import numpy as np  # noqa: E402
+
+from benchmarks import _baseline  # noqa: E402
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core.clock import Clock  # noqa: E402
+from repro.serving.engine import InferenceEngine  # noqa: E402
+from repro.serving.plane import (RealEngineBackend,  # noqa: E402
+                                 ServingPlane)
+
+BASELINE_NAME = "hibernation"
+
+
+def _prompt(n, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, size=n).astype(np.int32)
+
+
+def _paged_engine(cfg, *, slots, max_len, page_size, params=None):
+    return InferenceEngine(cfg, params=params, slots=slots, max_len=max_len,
+                           paged=True, page_size=page_size, hibernation=True)
+
+
+def _mk_plane(engine, clock, *, slots, hibernate_idle_s=None):
+    return ServingPlane(
+        clock, RealEngineBackend(engine, clock,
+                                 hibernate_idle_s=hibernate_idle_s),
+        slots=slots, site_id="bench", premium_reserved_frac=0.0)
+
+
+def bench_oversubscribe(n_sessions: int = 48, *, slots: int = 4,
+                        max_len: int = 64, page_size: int = 16,
+                        gen: int = 8) -> dict:
+    """N sequential leases over ``slots`` resident slots; idle-TTL 0 means
+    every completed request hibernates at the next heartbeat tick."""
+    cfg = get_smoke_config("edge-tiny")
+    eng = _paged_engine(cfg, slots=slots, max_len=max_len,
+                        page_size=page_size)
+    clock = Clock()
+    plane = _mk_plane(eng, clock, slots=slots, hibernate_idle_s=0.0)
+    serve_ms = []
+    for i in range(n_sessions):
+        t0 = time.perf_counter()
+        r = plane.serve(session_id=f"u{i}", klass="best-effort",
+                        prompt_tokens=12, gen_tokens=gen, t_max_ms=1e12,
+                        prompt=_prompt(12, cfg.vocab_size, seed=i))
+        serve_ms.append((time.perf_counter() - t0) * 1e3)
+        assert not r.failed, r.failed
+        plane.load()                       # heartbeat: parked -> hibernated
+    load = plane.load()
+    return {
+        "n_sessions": n_sessions, "slots": slots,
+        "bound_sessions": load.bound_sessions,
+        "resident_sessions": load.resident_sessions,
+        "hibernated_sessions": load.hibernated_sessions,
+        "bound_per_slot": load.bound_sessions / slots,
+        "page_util": round(load.page_util, 4),
+        "store_bytes": eng.hibernation.bytes(),
+        "store_puts": eng.hibernation.puts,
+        "fresh_serve_ms_p50": round(statistics.median(serve_ms), 3),
+        "_plane": plane, "_eng": eng, "_cfg": cfg,
+    }
+
+
+def bench_resume(over: dict, *, sample: int = 16, gen: int = 4) -> dict:
+    """Resume cost, engine-level and end-to-end through the plane."""
+    eng, plane, cfg = over["_eng"], over["_plane"], over["_cfg"]
+    sids = eng.hibernation.sessions()[:sample]
+
+    # engine level: restore + verify + import + page alloc, then hibernate
+    # back so the store population is unchanged for the plane arm
+    cycle_ms = []
+    for sid in sids:
+        t0 = time.perf_counter()
+        eng.resume_slot(sid)
+        cycle_ms.append((time.perf_counter() - t0) * 1e3)
+        eng.hibernate_slot(sid)
+    cycle_ms.sort()
+
+    # plane level: serve(resume=True) continues the hibernated generation
+    resume_ms = []
+    for sid in sids:
+        pos0 = eng.position_of(sid)
+        t0 = time.perf_counter()
+        r = plane.serve(session_id=sid, klass="best-effort",
+                        prompt_tokens=0, gen_tokens=gen, t_max_ms=1e12,
+                        resume=True)
+        resume_ms.append((time.perf_counter() - t0) * 1e3)
+        assert not r.failed and len(r.token_ids) == gen, (r.failed, sid)
+        assert eng.position_of(sid) == pos0 + gen, sid
+        plane.load()                       # hibernate it again
+    resume_ms.sort()
+
+    def p(xs, q):
+        return round(xs[min(int(q * (len(xs) - 1) + 0.999), len(xs) - 1)], 3)
+
+    return {
+        "sample": len(sids), "gen": gen,
+        "engine_resume_ms_p50": round(statistics.median(cycle_ms), 3),
+        "engine_resume_ms_p99": p(cycle_ms, 0.99),
+        "serve_resume_ms_p50": round(statistics.median(resume_ms), 3),
+        "serve_resume_ms_p99": p(resume_ms, 0.99),
+        "fresh_serve_ms_p50": over["fresh_serve_ms_p50"],
+        # the hardware-independent form of "bounded resume latency"
+        "resume_p99_over_fresh_p50": round(
+            p(resume_ms, 0.99) / max(over["fresh_serve_ms_p50"], 1e-9), 3),
+    }
+
+
+def bench_throughput(*, batch: int = 8, gen: int = 33, max_len: int = 64,
+                     page_size: int = 16, reps: int = 5) -> dict:
+    """Fused decode tok/s, dense vs paged, interleaved; plus token identity
+    on the full serve path (same prompts through both engines)."""
+    cfg = get_smoke_config("edge-tiny")
+    dense = InferenceEngine(cfg, slots=batch, max_len=max_len)
+    paged = _paged_engine(cfg, slots=batch, max_len=max_len,
+                          page_size=page_size, params=dense.params)
+    clock = Clock()
+    planes = {"dense": _mk_plane(dense, clock, slots=batch),
+              "paged": _mk_plane(paged, clock, slots=batch)}
+
+    def drain(plane, rep):
+        for i in range(batch):
+            plane.submit(session_id=f"s{rep}-{i}", klass="best-effort",
+                         prompt_tokens=12, gen_tokens=gen, t_max_ms=1e12,
+                         prompt=_prompt(12, cfg.vocab_size, seed=i))
+        t0 = time.perf_counter()
+        plane.drain()
+        wall = time.perf_counter() - t0
+        toks = {r.session_id.split("-", 1)[1]: r.token_ids
+                for r in plane.pop_results()}
+        return batch * gen / wall, toks
+
+    denses, pageds, ratios, identical = [], [], [], True
+    for rep in range(reps + 1):
+        d, dt = drain(planes["dense"], rep)
+        p, pt = drain(planes["paged"], rep)
+        identical = identical and dt == pt
+        if rep > 0:                        # rep 0 = compile warmup
+            denses.append(d)
+            pageds.append(p)
+            ratios.append(p / d)
+    return {"dense_tok_s": round(statistics.median(denses), 1),
+            "paged_tok_s": round(statistics.median(pageds), 1),
+            "paged_over_dense": round(statistics.median(ratios), 3),
+            "tokens_identical": identical}
+
+
+def run(*, quick: bool = False) -> dict:
+    n = 44 if quick else 64
+    over = bench_oversubscribe(n)
+    resume = bench_resume(over, sample=8 if quick else 16)
+    thru = bench_throughput(reps=3 if quick else 5)
+    over = {k: v for k, v in over.items() if not k.startswith("_")}
+    out = {"oversubscribe": over, "resume": resume, "throughput": thru}
+    out["holds"] = (over["bound_per_slot"] >= 10.0
+                    and thru["tokens_identical"]
+                    and thru["paged_over_dense"] >= 0.6)
+    return out
+
+
+def check_baseline(result: dict) -> list:
+    """Regression guard, hardware-independent by construction: every
+    enforced metric is a ratio between two arms measured on the same
+    machine in the same run (runner speed cancels) or a correctness bit.
+    Absolute ms / tok-s figures in the baseline are reference only.
+    Returns failure messages."""
+    base = _baseline.load_baseline(BASELINE_NAME)
+    inv = base["invariants"]
+    over, res, thru = (result["oversubscribe"], result["resume"],
+                       result["throughput"])
+    failures = []
+    if over["bound_per_slot"] < inv["bound_per_slot_min"]:
+        failures.append(
+            f"oversubscribe: bound/slot {over['bound_per_slot']:.1f}x < "
+            f"{inv['bound_per_slot_min']:.1f}x (hibernation tier no longer "
+            f"decouples bound sessions from resident slots)")
+    if thru["paged_over_dense"] < inv["paged_over_dense_min"]:
+        failures.append(
+            f"throughput: paged/dense {thru['paged_over_dense']:.2f} < "
+            f"floor {inv['paged_over_dense_min']:.2f}")
+    if not thru["tokens_identical"]:
+        failures.append("throughput: paged tokens diverge from dense")
+    if res["resume_p99_over_fresh_p50"] > inv["resume_ratio_max"]:
+        failures.append(
+            f"resume: p99/fresh-p50 {res['resume_p99_over_fresh_p50']:.1f} "
+            f"> ceiling {inv['resume_ratio_max']:.1f} (resume cost blew up "
+            f"relative to a fresh establish)")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer sessions / reps")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="enforce benchmarks/baselines/hibernation.json "
+                         "ratio invariants (CI guard)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="overwrite the checked-in baseline with this run")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    print(json.dumps(out, indent=1))
+    os.makedirs("artifacts/bench", exist_ok=True)
+    with open("artifacts/bench/hibernation.json", "w") as f:
+        json.dump(out, f, indent=1)
+    if args.write_baseline:
+        _baseline.write_baseline(
+            {"_comment": "regression-guard invariants for the paged cache "
+                         "+ hibernation tier. check_baseline enforces "
+                         "HARDWARE-INDEPENDENT ratios only: bound sessions "
+                         "per resident slot (the 10x oversubscription "
+                         "headline), paged/dense fused tok/s (both arms "
+                         "interleaved on the same machine; floor 0.6 sits "
+                         "well under the observed ~0.7-1.0), resume-p99 / "
+                         "fresh-serve-p50 (observed ~0.3-0.5; ceiling 10x "
+                         "catches a resume path that stopped being "
+                         "transparent), and paged==dense token identity. "
+                         "Reference absolutes are NOT enforced.",
+             "invariants": {"bound_per_slot_min": 10.0,
+                            "paged_over_dense_min": 0.6,
+                            "resume_ratio_max": 10.0},
+             "reference": out}, BASELINE_NAME)
+    if args.check_baseline:
+        _baseline.enforce(check_baseline(out))
+    if not out["holds"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,13 @@ Three arms, all through the REAL migration data plane
   dense-vs-SSM payload asymmetry sweep (abort rate under τ_mig).
 
     PYTHONPATH=src python -m benchmarks.migration_bench [--quick]
+        [--check-baseline] [--write-baseline]
+
+``--check-baseline`` enforces the checked-in hardware-independent
+invariants in ``benchmarks/baselines/migration.json`` (zero interruption,
+every injected failure aborts with the source intact, every real
+migration lands) and exits non-zero on violation — the CI regression
+guard for the migration data plane.
 """
 
 from __future__ import annotations
@@ -31,6 +38,7 @@ sys.path.insert(0, ".")
 
 import numpy as np  # noqa: E402
 
+from benchmarks import _baseline  # noqa: E402
 from repro.core import Orchestrator, default_asp  # noqa: E402
 from repro.core.asp import MobilityClass  # noqa: E402
 from repro.core.clock import VirtualClock  # noqa: E402
@@ -175,11 +183,53 @@ def figure_rows(n_sessions: int = 10):
     return rows, derived
 
 
+BASELINE_NAME = "migration"
+
+
+def check_baseline(result: dict) -> list:
+    """Regression guard, hardware-independent by construction: every
+    enforced metric is a correctness invariant (interruption, abort
+    accounting, migration success count), never a latency/throughput
+    absolute — those are recorded as reference values only. Returns
+    failure messages."""
+    base = _baseline.load_baseline(BASELINE_NAME)
+    inv = base["invariants"]
+    real, inject, sim = result["real"], result["inject"], result["sim"]
+    failures = []
+    if real["max_interruption_ms"] > inv["max_interruption_ms"]:
+        failures.append(
+            f"real: max_interruption_ms {real['max_interruption_ms']} > "
+            f"{inv['max_interruption_ms']} (make-before-break gap)")
+    if real["migrated"] < real["n_sessions"]:
+        failures.append(
+            f"real: only {real['migrated']}/{real['n_sessions']} "
+            f"migrations landed")
+    if inject["abort_rate"] < inv["abort_rate"]:
+        failures.append(
+            f"inject: abort_rate {inject['abort_rate']} < "
+            f"{inv['abort_rate']} (an injected failure slipped through)")
+    if inject["sources_intact"] != inject["attempts"]:
+        failures.append(
+            f"inject: {inject['sources_intact']}/{inject['attempts']} "
+            f"sources intact after abort")
+    if sim["under_load"]["max_interruption_ms"] > inv["max_interruption_ms"]:
+        failures.append(
+            f"sim: under-load max_interruption_ms "
+            f"{sim['under_load']['max_interruption_ms']} > "
+            f"{inv['max_interruption_ms']}")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: fewer sessions per arm")
     ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="enforce benchmarks/baselines/migration.json "
+                         "invariants (CI guard)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="overwrite the checked-in baseline with this run")
     args = ap.parse_args()
     n = args.sessions or (3 if args.quick else 10)
     t0 = time.perf_counter()
@@ -197,6 +247,20 @@ def main():
     os.makedirs("artifacts/bench", exist_ok=True)
     with open("artifacts/bench/migration.json", "w") as f:
         json.dump(out, f, indent=1)
+    if args.write_baseline:
+        _baseline.write_baseline(
+            {"_comment": "regression-guard invariants for the migration "
+                         "data plane. check_baseline enforces only "
+                         "HARDWARE-INDEPENDENT correctness invariants: "
+                         "zero make-before-break interruption, every real "
+                         "migration lands, every injected failure aborts "
+                         "with the source intact. The reference block is a "
+                         "dev-container snapshot; its latency/throughput "
+                         "absolutes are NOT enforced.",
+             "invariants": {"max_interruption_ms": 0.0, "abort_rate": 1.0},
+             "reference": out}, BASELINE_NAME)
+    if args.check_baseline:
+        _baseline.enforce(check_baseline(out))
     if not out["holds"]:
         sys.exit(1)
 

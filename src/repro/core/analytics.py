@@ -36,6 +36,7 @@ class SiteContext:
     queue_depth: float = 0.0        # waiting requests per slot
     arrival_rate: float = 0.0       # admitted sessions / s
     p99_infer_ms: float = 0.0       # measured execution-side p99
+    page_util: float = 0.0          # KV page-pool occupancy [0, 1]
     healthy: bool = True
 
 
@@ -45,6 +46,7 @@ class Analytics:
         self._util: Dict[str, EWMA] = {}
         self._queue: Dict[str, EWMA] = {}
         self._rate: Dict[str, EWMA] = {}
+        self._mem: Dict[str, EWMA] = {}        # site -> KV page-pool util
         self._p99: Dict[Tuple[str, str], EWMA] = {}
         self._mobility: Dict[str, EWMA] = {}   # invoker -> handover rate /s
         self._deny: set = set()                # A1-style site deny list
@@ -63,10 +65,12 @@ class Analytics:
 
     # -- ingestion -------------------------------------------------------
     def observe_site(self, site_id: str, *, utilization: float,
-                     queue_depth: float, arrival_rate: float) -> None:
+                     queue_depth: float, arrival_rate: float,
+                     page_util: float = 0.0) -> None:
         self._util.setdefault(site_id, EWMA()).update(utilization)
         self._queue.setdefault(site_id, EWMA()).update(queue_depth)
         self._rate.setdefault(site_id, EWMA()).update(arrival_rate)
+        self._mem.setdefault(site_id, EWMA()).update(page_util)
         self._bump(site_id)
 
     def observe_latency(self, site_id: str, model_key: str, p99_ms: float) -> None:
@@ -92,6 +96,7 @@ class Analytics:
             queue_depth=self._queue.get(site_id, EWMA()).value,
             arrival_rate=self._rate.get(site_id, EWMA()).value,
             p99_infer_ms=self._p99.get((site_id, "*"), EWMA()).value,
+            page_util=self._mem.get(site_id, EWMA()).value,
             healthy=site_id not in self._deny,
         )
 

@@ -366,7 +366,8 @@ class Orchestrator:
         self.analytics.observe_site(
             site.spec.site_id, utilization=site.utilization(),
             queue_depth=load.queue_depth if load else 0.0,
-            arrival_rate=load.arrival_rate if load else 0.0)
+            arrival_rate=load.arrival_rate if load else 0.0,
+            page_util=getattr(load, "page_util", 0.0) if load else 0.0)
         if plane is not None:
             self.record_results(site)   # pick up async completions
         tele = self.telemetry.get(session.session_id)

@@ -91,6 +91,12 @@ class Predictors:
         # request ahead contributes ~one service time per slot — this is the
         # term that makes Eq. (14) triggers fire under real congestion
         wq += ctx.queue_depth * service_ms
+        # KV page-pool pressure (paged engines): near-full pools force
+        # hibernate/resume churn on admission, so expected wait grows
+        # sharply as page_util -> 1; exactly zero when unreported (0.0)
+        if ctx.page_util > 0.0:
+            wq += (ctx.page_util ** 4) / max(1.0 - ctx.page_util, 1.0 / 16.0) \
+                * service_ms
         return wq
 
     # -- headline predictions ------------------------------------------------

@@ -6,7 +6,8 @@ import functools
 
 import jax
 
-from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention, paged_decode_attention)
 
 
 def _on_tpu() -> bool:
@@ -17,3 +18,9 @@ def _on_tpu() -> bool:
 def decode(q, k, v, lengths, *, block_kv: int = 512):
     return decode_attention(q, k, v, lengths, block_kv=block_kv,
                             interpret=not _on_tpu())
+
+
+@jax.jit
+def paged_decode(q, k_pages, v_pages, lengths, block_tables):
+    return paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
+                                  interpret=not _on_tpu())

@@ -20,3 +20,18 @@ def decode_attention_ref(q, k, v, lengths):
     s = jnp.where(mask, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhk,bhkd->bhd", w, vv).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, lengths, block_tables):
+    """Oracle for the paged kernel: gather each sequence's pages into the
+    linear [B, Hkv, S, D] view, then the dense reference above.
+
+    q: [B, Hq, D]; k/v_pages: [P, page, Hkv, D]; block_tables: [B, PPS].
+    """
+    B = q.shape[0]
+    page, Hkv, D = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    PPS = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(B, PPS * page, Hkv, D)
+    v = v_pages[block_tables].reshape(B, PPS * page, Hkv, D)
+    return decode_attention_ref(q, jnp.moveaxis(k, 1, 2),
+                                jnp.moveaxis(v, 1, 2), lengths)

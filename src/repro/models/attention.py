@@ -336,7 +336,7 @@ def cross_attention(p, cfg: ModelConfig, x, memory, mem_positions):
 
 
 def decode_self_attention(p, cfg: ModelConfig, x, cache_k, cache_v, position,
-                          *, window: int = 0):
+                          *, window: int = 0, active=None):
     """Single-token decode against a KV cache ring/linear buffer.
 
     x: [b, 1, d]; cache_k/v: [b, S, kh, hd]; position: [b] int32 — the
@@ -344,6 +344,13 @@ def decode_self_attention(p, cfg: ModelConfig, x, cache_k, cache_v, position,
     continuous batching: sessions in the same decode batch sit at different
     offsets). For sliding-window caches the buffer is a ring of size
     ``window`` indexed modulo.
+
+    ``active`` ([b] bool, optional) suppresses the cache write for inactive
+    rows: parked (idle-resident) sessions ride the fused batch without their
+    state advancing, which is what makes in-place hibernation-tier parking
+    safe for ring buffers (a masked row would otherwise overwrite a live
+    in-window entry) and costs nothing — the mask folds into the existing
+    select-write.
     """
     b = x.shape[0]
     S = cache_k.shape[1]
@@ -356,14 +363,22 @@ def decode_self_attention(p, cfg: ModelConfig, x, cache_k, cache_v, position,
     slot = (position % S) if window else jnp.minimum(position, S - 1)
     if cfg.decode_cache_scatter:          # legacy insert (A/B lever)
         rows = jnp.arange(b)
-        cache_k = cache_k.at[rows, slot].set(k_new[:, 0])
-        cache_v = cache_v.at[rows, slot].set(v_new[:, 0])
+        ck = cache_k.at[rows, slot].set(k_new[:, 0])
+        cv = cache_v.at[rows, slot].set(v_new[:, 0])
+        if active is not None:
+            act = active[:, None, None, None]
+            ck = jnp.where(act, ck, cache_k)
+            cv = jnp.where(act, cv, cache_v)
+        cache_k, cache_v = ck, cv
     else:
         # masked write instead of a batched scatter: XLA lowers per-row
         # scatter to a serial loop on CPU (and an expensive scatter on
         # TPU), while the select is one bandwidth-bound fused op
         hit = (jnp.arange(S, dtype=jnp.int32)[None, :]
-               == slot[:, None])[..., None, None]
+               == slot[:, None])
+        if active is not None:
+            hit = hit & active[:, None]
+        hit = hit[..., None, None]
         cache_k = jnp.where(hit, k_new, cache_k)
         cache_v = jnp.where(hit, v_new, cache_v)
 
@@ -413,6 +428,76 @@ def decode_self_attention(p, cfg: ModelConfig, x, cache_k, cache_v, position,
     out = jnp.einsum("bsq,qd->bsd", o, as_weight(p["w_o"]),
                      preferred_element_type=jnp.float32).astype(x.dtype)
     return out, cache_k, cache_v
+
+
+def paged_decode_self_attention(p, cfg: ModelConfig, x, k_pages, v_pages,
+                                block, position, *, active=None):
+    """Single-token decode against a block-table paged KV pool.
+
+    x: [b, 1, d]; k_pages/v_pages: [P, page, kh, hd] — this layer's slice of
+    the global page pool; block: [b, PPS] int32 page ids per slot (page 0 is
+    the shared scratch page — see ``repro.models.kvcache``); position: [b].
+
+    Bit-compatibility contract with the dense path: when ``PPS * page`` equals
+    the dense buffer length S, the gathered K/V rows are exactly the dense
+    buffer rows and the masked-softmax math below is the same expression, so
+    greedy decode is token-identical. Writes of inactive rows (and positions
+    past the table) are routed to the scratch page, which is never read.
+    """
+    b = x.shape[0]
+    page = k_pages.shape[1]
+    PPS = block.shape[1]
+    S = PPS * page
+    kh, hd, hq = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    g = hq // kh
+    position = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b,))
+    q = _project_q(p, cfg, x, position[:, None])
+    k_new, v_new = _project_kv(p, cfg, x, position[:, None])
+
+    # write the new token's K/V through the block table (one page row per
+    # batch row — distinct active slots never share a page, so the batched
+    # scatter has no write conflicts outside the scratch page)
+    posc = jnp.minimum(position, S - 1)
+    pid = jnp.take_along_axis(block, (posc // page)[:, None], axis=1)[:, 0]
+    if active is not None:
+        pid = jnp.where(active, pid, 0)
+    off = posc % page
+    k_pages = k_pages.at[pid, off].set(k_new[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pid, off].set(v_new[:, 0].astype(v_pages.dtype))
+
+    if cfg.use_pallas_decode and not cfg.attn_logits_softcap:
+        # paged flash-decode kernel: gathers K/V pages through the block
+        # table with scalar-prefetch index maps (no [b, S] materialisation)
+        from repro.kernels.decode_attention.decode_attention import \
+            paged_decode_attention
+        o = paged_decode_attention(
+            q[:, 0], k_pages, v_pages,
+            jnp.minimum(position + 1, S), block,
+            interpret=jax.default_backend() != "tpu")
+        o = o.reshape(b, 1, cfg.q_dim).astype(x.dtype)
+        out = jnp.einsum("bsq,qd->bsd", o, as_weight(p["w_o"]),
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        return out, k_pages, v_pages
+
+    # pure-XLA fallback: gather the slot's pages into a linear view, then
+    # the same masked-softmax expression as the dense reference path
+    k = k_pages[block].reshape(b, S, kh, hd)
+    v = v_pages[block].reshape(b, S, kh, hd)
+    idx = jnp.arange(S, dtype=jnp.int32)
+    valid = idx[None, :] <= position[:, None]
+    qh = q.reshape(b, 1, kh, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    if cfg.attn_logits_softcap:
+        s = L.softcap(s, cfg.attn_logits_softcap)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = jnp.moveaxis(o, 3, 1).reshape(b, 1, cfg.q_dim).astype(x.dtype)
+    out = jnp.einsum("bsq,qd->bsd", o, as_weight(p["w_o"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, k_pages, v_pages
 
 
 def decode_cross_attention(p, cfg: ModelConfig, x, mem_k, mem_v, mem_positions):

@@ -80,3 +80,94 @@ def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
     tree = init_cache(cfg, batch, max_len, abstract=True)
     return int(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
                    for l in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# paged layout (block-table KV)
+# ---------------------------------------------------------------------------
+#
+# The paged layout decouples the slot axis from memory: K/V live in a global
+# page pool of ``num_pages`` fixed-size pages shared by every slot, and each
+# slot owns a block table of page ids. A slot holding ``n`` tokens costs
+# ``ceil(n / page_size)`` pages instead of a full ``max_len`` reservation, so
+# an engine can bind far more sessions than ``slots * max_len`` tokens of
+# memory — the admission limit becomes the page pool, reported explicitly.
+#
+# Layout invariant: **page 0 is the shared scratch/null page.** Unallocated
+# block-table entries point at it, and decode routes the writes of inactive
+# slots there. It is never read: attention validity is ``index <= position``
+# and positions never reach unallocated pages.
+
+#: default page length in tokens (pow2; clamped to the context by page_len)
+DEFAULT_PAGE_SIZE = 128
+
+
+def supports_paging(cfg: ModelConfig) -> bool:
+    """Only full-attention stacked-KV families page: their cache grows
+    linearly in context. Ring buffers (sliding window) are already O(window),
+    recurrent state (ssm / hybrid) is O(1), and encdec carries static cross
+    K/V — those families keep the dense slot layout (and still participate
+    in hibernation, which is layout-agnostic)."""
+    return cfg.family in ("dense", "moe") and not cfg.sliding_window
+
+
+def page_len(cfg: ModelConfig, max_len: int, page_size: int = DEFAULT_PAGE_SIZE
+             ) -> int:
+    """Effective page length: requested pow2 size clamped so a page never
+    exceeds the context (a single oversized page would re-reserve max_len)."""
+    if page_size <= 0 or page_size & (page_size - 1):
+        raise ValueError(f"page_size must be a power of two, got {page_size}")
+    p = page_size
+    while p > 1 and p > max_len:
+        p //= 2
+    return p
+
+
+def pages_per_slot(max_len: int, page_size: int) -> int:
+    return -(-max_len // page_size)
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, max_len: int,
+                     num_pages: int, page_size: int, *,
+                     abstract: bool = False):
+    """Paged decode cache: global page pool + per-slot block tables.
+
+    layers.k/v : [L, num_pages, page_size, kh, hd] — the shared pool
+    block      : [slots, pages_per_slot(max_len, page_size)] int32 page ids
+    pos        : [slots] int32
+
+    ``"block" in cache`` is how LM.decode_step detects the paged layout.
+    """
+    if not supports_paging(cfg):
+        raise ValueError(f"family {cfg.family} (window={cfg.sliding_window}) "
+                         "does not support the paged KV layout")
+    dt = jnp.dtype(cfg.dtype)
+
+    def mk(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    L = cfg.num_layers
+    pool = lambda: mk((L, num_pages, page_size, cfg.num_kv_heads,
+                       cfg.head_dim), dt)
+    pps = pages_per_slot(max_len, page_size)
+    return {"layers": {"k": pool(), "v": pool()},
+            "block": mk((slots, pps), jnp.int32),
+            "pos": mk((slots,), jnp.int32)}
+
+
+def page_bytes(cfg: ModelConfig, page_size: int) -> int:
+    """Bytes of ONE page across all layers (the allocation granule)."""
+    it = jnp.dtype(cfg.dtype).itemsize
+    return int(2 * cfg.num_layers * page_size * cfg.num_kv_heads
+               * cfg.head_dim * it)
+
+
+def paged_cache_bytes(cfg: ModelConfig, slots: int, max_len: int,
+                      num_pages: int, page_size: int) -> int:
+    """Total bytes of the paged cache (pool + block tables + positions)."""
+    tree = init_paged_cache(cfg, slots, max_len, num_pages, page_size,
+                            abstract=True)
+    return int(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tree)))

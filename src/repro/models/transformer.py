@@ -189,25 +189,49 @@ def _kv_to_buffer(cfg: ModelConfig, k, v, S, length=None):
     return {"k": bufk, "v": bufv}
 
 
-def _block_decode(p, cfg: ModelConfig, kind: str, x, cache_layer, position):
-    """Single-token block. Returns (x, new_cache_layer)."""
+def _keep_active(new, old, active):
+    """Freeze a recurrent state leaf for inactive batch rows: parked
+    (hibernation-tier) sessions share the fused decode batch but their
+    state must not advance — recurrent updates, unlike position-indexed
+    KV writes, mutate every row unconditionally."""
+    if active is None:
+        return new
+    a = active.reshape(active.shape + (1,) * (new.ndim - 1))
+    return jnp.where(a, new, old.astype(new.dtype))
+
+
+def _block_decode(p, cfg: ModelConfig, kind: str, x, cache_layer, position,
+                  active=None, block=None):
+    """Single-token block. Returns (x, new_cache_layer).
+
+    ``active`` ([b] bool) masks state updates of inactive rows; ``block``
+    ([b, PPS] int32) routes attention K/V through the paged pool layout.
+    """
     x = constrain(x, "dp", None, None)
     h = L.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     if kind == "ssm":
         y, (conv, ssm) = SSD.ssd_decode(p["ssd"], cfg, h, cache_layer["conv"],
                                         cache_layer["ssm"])
-        return x + y, {"conv": conv, "ssm": ssm}
+        return x + y, {"conv": _keep_active(conv, cache_layer["conv"], active),
+                       "ssm": _keep_active(ssm, cache_layer["ssm"], active)}
     if kind == "rec":
         y, conv, hst = RG.rglru_block_decode(p["rec"], cfg, h,
                                              cache_layer["conv"], cache_layer["h"])
         x = x + y
         h2 = L.rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         x = x + L.mlp_apply(p["mlp"], h2)
-        return x, {"conv": conv, "h": hst}
+        return x, {"conv": _keep_active(conv, cache_layer["conv"], active),
+                   "h": _keep_active(hst, cache_layer["h"], active)}
     window = cfg.sliding_window
-    y, ck, cv = A.decode_self_attention(p["attn"], cfg, h, cache_layer["k"],
-                                        cache_layer["v"], position,
-                                        window=window)
+    if block is not None:
+        y, ck, cv = A.paged_decode_self_attention(
+            p["attn"], cfg, h, cache_layer["k"], cache_layer["v"],
+            block, position, active=active)
+    else:
+        y, ck, cv = A.decode_self_attention(p["attn"], cfg, h,
+                                            cache_layer["k"],
+                                            cache_layer["v"], position,
+                                            window=window, active=active)
     x = x + y
     new_cache = dict(cache_layer)
     new_cache["k"], new_cache["v"] = ck, cv
@@ -528,10 +552,23 @@ class LM:
         return jnp.broadcast_to(jnp.asarray(length, jnp.int32), (x.shape[0],))
 
     # -- decode ---------------------------------------------------------------
-    def decode_step(self, params, cache, tokens):
-        """tokens: [b, 1] -> (logits [b, 1, V], updated cache)."""
+    def decode_step(self, params, cache, tokens, active=None):
+        """tokens: [b, 1] -> (logits [b, 1, V], updated cache).
+
+        ``active`` ([b] bool, optional): rows whose state may advance this
+        step. Inactive rows (parked sessions, empty slots) still flow through
+        the batch — their logits are computed and discarded — but every cache
+        leaf they own is left bit-identical, so a session can idle inside the
+        fused batch indefinitely and resume exactly where it stopped.
+
+        A cache carrying a ``"block"`` leaf selects the paged-KV layout
+        (``repro.models.kvcache.init_paged_cache``): per-layer K/V are page
+        pools indexed through the per-slot block table instead of dense
+        [b, S] buffers.
+        """
         cfg = self.cfg
         position = cache["pos"]
+        block = cache.get("block")
         x = jnp.take(params["embed"], tokens, axis=0)
 
         if cfg.family == "hybrid":
@@ -539,7 +576,8 @@ class LM:
             for lp, cl, kind in zip(params["layers"], cache["layers"],
                                     cfg._pattern()):
                 kk = "rec" if kind == "rec" else "attn"
-                x, ncl = _block_decode(lp, cfg, kk, x, cl, position)
+                x, ncl = _block_decode(lp, cfg, kk, x, cl, position,
+                                       active=active)
                 new_layers.append(ncl)
             new_cache = {"layers": tuple(new_layers), "pos": position + 1}
         else:
@@ -562,7 +600,8 @@ class LM:
                 cl = jax.tree.map(
                     lambda c: jax.lax.dynamic_index_in_dim(
                         c, idx, axis=0, keepdims=False), cstack)
-                h, ncl = _block_decode(lp, cfg, kind, h, cl, position)
+                h, ncl = _block_decode(lp, cfg, kind, h, cl, position,
+                                       active=active, block=block)
                 # write back only the mutated leaves (cross K/V are static)
                 def upd(c, n):
                     return jax.lax.dynamic_update_index_in_dim(
@@ -579,6 +618,8 @@ class LM:
             new_cache = {"layers": {k: v for k, v in stacked.items()
                                     if not k.startswith("cross_")},
                          "pos": position + 1}
+            if block is not None:
+                new_cache["block"] = block
             if cfg.family == "encdec":
                 new_cache["cross_k"] = cache["cross_k"]
                 new_cache["cross_v"] = cache["cross_v"]
@@ -588,3 +629,8 @@ class LM:
     # -- cache helpers ----------------------------------------------------
     def init_cache(self, batch: int, max_len: int, *, abstract=False):
         return KV.init_cache(self.cfg, batch, max_len, abstract=abstract)
+
+    def init_paged_cache(self, slots: int, max_len: int, num_pages: int,
+                         page_size: int, *, abstract=False):
+        return KV.init_paged_cache(self.cfg, slots, max_len, num_pages,
+                                   page_size, abstract=abstract)

@@ -32,9 +32,10 @@ shardings (see repro.launch.serve).
 
 from __future__ import annotations
 
+import itertools
 import time
 import zlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
 import jax
@@ -43,10 +44,20 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import LM
+from repro.models import kvcache as KV
 
 #: smallest prefill bucket — below this the compile is cheap enough that
 #: further splitting buys nothing
 _MIN_BUCKET = 16
+
+
+class PagePoolExhausted(RuntimeError):
+    """The paged engine has no free KV pages for an allocation. This is the
+    explicit admission signal the paged layout buys: sessions no longer
+    reserve ``max_len`` up front, so running out of MEMORY (pages) is
+    distinct from running out of decode SLOTS — the serving plane maps it
+    to COMPUTE_SCARCITY, and pressure-driven reclamation (hibernate the
+    coldest parked sessions) is supposed to keep it from firing at all."""
 
 
 def prefill_buckets(max_len: int) -> List[int]:
@@ -70,11 +81,32 @@ class SlotState:
     position: int
     tokens_generated: int = 0
     last_token: int = 0
+    #: parked = bound-but-idle: the session keeps its slot (and pages) but
+    #: rides decode rounds with active=False, so its state never advances —
+    #: the cheap-resume tier between resident and hibernated
+    parked: bool = False
+    #: monotone use tick (engine-local LRU clock, not wall time)
+    last_used: int = 0
+    #: page ids owned by this slot, in block-table order (paged engines)
+    pages: List[int] = field(default_factory=list)
 
 
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params=None, *, slots: int = 8,
-                 max_len: int = 512, seed: int = 0):
+                 max_len: int = 512, seed: int = 0,
+                 paged: bool = False,
+                 page_size: int = KV.DEFAULT_PAGE_SIZE,
+                 num_pages: Optional[int] = None,
+                 hibernation=None):
+        """``paged=True`` selects the block-table paged KV layout for
+        families that support it (full-attention stacked KV — see
+        ``kvcache.supports_paging``); other families silently keep the dense
+        slot layout (their state is O(window)/O(1) and gains nothing from
+        paging) but still park and hibernate. ``num_pages`` bounds device
+        KV memory (default: enough for every slot at max_len, plus the
+        scratch page — no worse than dense). ``hibernation`` is a
+        :class:`~repro.serving.hibernation.HibernationStore` (or ``True``
+        for a private unbounded one) enabling the host-memory tier."""
         self.cfg = cfg
         self.lm = LM(cfg)
         self.slots = slots
@@ -82,9 +114,48 @@ class InferenceEngine:
         if params is None:
             params = self.lm.init(jax.random.key(seed))
         self.params = params
-        self.cache = self.lm.init_cache(slots, max_len)
+        self.paged = bool(paged) and KV.supports_paging(cfg)
+        if hibernation is True:
+            from repro.serving.hibernation import HibernationStore
+            hibernation = HibernationStore()
+        if hibernation is False:                   # bool flag, not a store
+            hibernation = None
+        self.hibernation = hibernation
+        #: canonical exports: linear stacked-KV buffers zero their garbage
+        #: tail (rows at index >= position: prefill bucket padding, stale
+        #: rows of re-used slots), so the SAME logical state always
+        #: fingerprints identically — across dense and paged engines, and
+        #: across hibernate/resume round trips
+        self._canonical = cfg.family in ("dense", "moe") \
+            and not cfg.sliding_window
+        if self.paged:
+            self.page_size = KV.page_len(cfg, max_len, page_size)
+            self.pages_per_slot = KV.pages_per_slot(max_len, self.page_size)
+            full = 1 + slots * self.pages_per_slot      # incl. scratch page
+            self.num_pages = full if num_pages is None \
+                else max(2, int(num_pages))
+            self.cache = KV.init_paged_cache(cfg, slots, max_len,
+                                             self.num_pages, self.page_size)
+            # free list excludes page 0 (the shared scratch/null page);
+            # popped from the tail so allocation order is ascending
+            self._free_page_list: List[int] = \
+                list(range(self.num_pages - 1, 0, -1))
+            self._block_host = np.zeros((slots, self.pages_per_slot),
+                                        np.int32)
+            self._paged_install = jax.jit(self._paged_install_impl,
+                                          donate_argnums=(0,))
+            self._paged_read = jax.jit(self._paged_read_impl)
+        else:
+            self.page_size = 0
+            self.pages_per_slot = 0
+            self.num_pages = 0
+            self.cache = self.lm.init_cache(slots, max_len)
         self._slot_map: Dict[str, int] = {}
         self._slots: list[Optional[SlotState]] = [None] * slots
+        self._use_clock = itertools.count(1)
+        #: device "pos" may diverge from host truth once any row parks (the
+        #: fused scan advances pos unconditionally); set -> resync next round
+        self._pos_dirty = False
         self.buckets = prefill_buckets(max_len)
         self._compiled_buckets: set = set()
         self._prefill = jax.jit(
@@ -97,6 +168,7 @@ class InferenceEngine:
         # dynamic_update, not a full-cache copy
         self._slot_write = jax.jit(self._slot_write_impl, donate_argnums=(0,))
         self._slot_read = jax.jit(self._slot_read_impl)
+        self._slot_read_canon = jax.jit(self._slot_read_canon_impl)
 
     # ------------------------------------------------------------------
     def free_slots(self) -> int:
@@ -108,8 +180,106 @@ class InferenceEngine:
     def position_of(self, session_id: str) -> int:
         """Current cache position (context length) of one session's slot —
         the authoritative payload size for migration."""
+        idx = self._slot_map.get(session_id)
+        if idx is None and self.hibernation is not None \
+                and self.hibernation.has(session_id):
+            return self.hibernation.record(session_id).position
         meta = self._slots[self._slot_map[session_id]]
         return meta.position
+
+    # -- page-pool / session-tier accounting ----------------------------
+    def free_pages(self) -> int:
+        return len(self._free_page_list) if self.paged else 0
+
+    def total_pages(self) -> int:
+        """Usable pages (the scratch page is never allocatable)."""
+        return self.num_pages - 1 if self.paged else 0
+
+    def page_util(self) -> float:
+        tot = self.total_pages()
+        return 0.0 if tot <= 0 else 1.0 - len(self._free_page_list) / tot
+
+    def pool_bytes(self) -> int:
+        if self.paged:
+            return KV.paged_cache_bytes(self.cfg, self.slots, self.max_len,
+                                        self.num_pages, self.page_size)
+        return KV.cache_bytes(self.cfg, self.slots, self.max_len)
+
+    def resident_sessions(self) -> int:
+        return len(self._slot_map)
+
+    def parked_sessions(self) -> int:
+        return sum(1 for s in self._slots if s is not None and s.parked)
+
+    def hibernated_sessions(self) -> int:
+        return len(self.hibernation) if self.hibernation is not None else 0
+
+    def bound_sessions(self) -> int:
+        """Sessions whose state this engine holds SOMEWHERE (resident slot
+        or hibernation tier) — the number the lease layer binds against,
+        decoupled from ``slots`` by paging + hibernation."""
+        return self.resident_sessions() + self.hibernated_sessions()
+
+    def is_parked(self, session_id: str) -> bool:
+        idx = self._slot_map.get(session_id)
+        return idx is not None and self._slots[idx] is not None \
+            and self._slots[idx].parked
+
+    def has_hibernated(self, session_id: str) -> bool:
+        return self.hibernation is not None \
+            and self.hibernation.has(session_id)
+
+    def has_session(self, session_id: str) -> bool:
+        return self.has_slot(session_id) or self.has_hibernated(session_id)
+
+    # -- page allocation -------------------------------------------------
+    def _alloc_pages(self, n: int) -> List[int]:
+        if n > len(self._free_page_list):
+            raise PagePoolExhausted(
+                f"page pool exhausted: need {n} pages, "
+                f"{len(self._free_page_list)} free of {self.total_pages()}")
+        return [self._free_page_list.pop() for _ in range(n)]
+
+    def _free_slot_pages(self, idx: int) -> None:
+        meta = self._slots[idx]
+        if meta is not None and meta.pages:
+            self._free_page_list.extend(reversed(meta.pages))
+            meta.pages = []
+        self._block_host[idx, :] = 0
+
+    def _ensure_pages(self, idx: int, upto_tokens: int) -> bool:
+        """Grow slot ``idx``'s block table to cover token indices
+        [0, upto_tokens). Under pool pressure, hibernates the coldest
+        parked sessions first (LRU reclaim); raises PagePoolExhausted when
+        reclamation cannot free enough."""
+        meta = self._slots[idx]
+        needed = min(-(-max(upto_tokens, 1) // self.page_size),
+                     self.pages_per_slot)
+        grow = needed - len(meta.pages)
+        if grow <= 0:
+            return False
+        if grow > len(self._free_page_list):
+            self._reclaim_pages(grow)
+        new = self._alloc_pages(grow)
+        meta.pages.extend(new)
+        self._block_host[idx, :len(meta.pages)] = meta.pages
+        return True
+
+    def _reclaim_pages(self, need: int) -> None:
+        """Hibernate coldest parked sessions until ``need`` pages are free
+        (best effort; the caller's allocation raises if still short)."""
+        if self.hibernation is None:
+            return
+        while len(self._free_page_list) < need:
+            victim = None
+            best = None
+            for s in self._slots:
+                if s is not None and s.parked and \
+                        (best is None or s.last_used < best):
+                    best, victim = s.last_used, s.session_id
+            if victim is None:
+                return
+            self.hibernate_slot(victim)
 
     @property
     def prefill_compiles(self) -> int:
@@ -158,15 +328,89 @@ class InferenceEngine:
 
         return jax.tree_util.tree_map_with_path(ext, cache)
 
+    def _slot_read_canon_impl(self, cache, idx, pos):
+        """Canonical batch-1 export for linear stacked-KV families: zero
+        the garbage tail (rows >= position) and report the host position,
+        so identical logical state always fingerprints identically."""
+        state = self._slot_read_impl(cache, idx)
+        S = state["layers"]["k"].shape[2]
+        valid = (jnp.arange(S) < pos)[None, None, :, None, None]
+        out = dict(state)
+        out["layers"] = {"k": jnp.where(valid, state["layers"]["k"], 0),
+                         "v": jnp.where(valid, state["layers"]["v"], 0)}
+        out["pos"] = jnp.full((1,), pos, jnp.int32)
+        return out
+
+    def _paged_install_impl(self, cache, k1, v1, idx, row, n):
+        """Scatter a batch-1 linear KV cache ([L, 1, S', kh, hd]) into this
+        slot's pages (cache donated). ``row`` [PPS] int32 holds the slot's
+        page ids 0-padded: entries past the owned count scatter their
+        (bucket-padding garbage) content into the scratch page, which is
+        never read."""
+        S = self.pages_per_slot * self.page_size
+
+        def place(pool, src):
+            src = src[:, 0]                              # [L, s, kh, hd]
+            s = src.shape[1]
+            if s < S:
+                src = jnp.pad(src, ((0, 0), (0, S - s), (0, 0), (0, 0)))
+            else:
+                src = src[:, :S]
+            src = src.reshape(src.shape[0], self.pages_per_slot,
+                              self.page_size, src.shape[2],
+                              src.shape[3]).astype(pool.dtype)
+            return pool.at[:, row].set(src)
+
+        return {"layers": {"k": place(cache["layers"]["k"], k1),
+                           "v": place(cache["layers"]["v"], v1)},
+                "block": cache["block"].at[idx].set(row),
+                "pos": cache["pos"].at[idx].set(n)}
+
+    def _paged_read_impl(self, cache, idx, pos):
+        """Gather one slot's pages back into the canonical linear payload
+        ([L, 1, max_len, kh, hd], tail zeroed) — the SAME bytes a dense
+        engine exports for the same logical state, so fingerprints match
+        across layouts and migration is layout-agnostic."""
+        row = cache["block"][idx]                        # [PPS]
+        valid = (jnp.arange(self.max_len) < pos)[None, :, None, None]
+
+        def gather(pool):
+            full = pool[:, row]                  # [L, PPS, page, kh, hd]
+            full = full.reshape(full.shape[0], -1, full.shape[3],
+                                full.shape[4])[:, :self.max_len]
+            return jnp.where(valid, full, 0)[:, None]
+
+        return {"layers": {"k": gather(cache["layers"]["k"]),
+                           "v": gather(cache["layers"]["v"])},
+                "pos": jnp.full((1,), pos, jnp.int32)}
+
     def _write_slot(self, idx: int, cache1):
         """Insert a batch-1 cache into slot ``idx`` of the engine cache."""
         self.cache = self._slot_write(self.cache, cache1, jnp.int32(idx))
 
     def export_slot(self, session_id: str):
-        """Extract this session's state (the migration payload)."""
+        """Extract this session's state (the migration payload).
+
+        Canonical families zero the KV tail and every family reports the
+        host-side position (device pos drifts for parked rows — the fused
+        scan advances it unconditionally), so the same logical state
+        fingerprints identically across dense/paged layouts and across
+        hibernate/resume round trips. Hibernated sessions export straight
+        from the host tier: migrating a cold session needs no resume."""
+        if session_id not in self._slot_map and self.has_hibernated(
+                session_id):
+            return self.hibernation.restore(session_id)
         idx = self._slot_map[session_id]
-        state = self._slot_read(self.cache, jnp.int32(idx))
         meta = self._slots[idx]
+        if self.paged:
+            state = self._paged_read(self.cache, jnp.int32(idx),
+                                     jnp.int32(meta.position))
+        elif self._canonical:
+            state = self._slot_read_canon(self.cache, jnp.int32(idx),
+                                          jnp.int32(meta.position))
+        else:
+            state = dict(self._slot_read(self.cache, jnp.int32(idx)))
+            state["pos"] = jnp.full((1,), meta.position, jnp.int32)
         return {"cache": state, "position": meta.position,
                 "last_token": meta.last_token}
 
@@ -174,21 +418,90 @@ class InferenceEngine:
         """Install a migrated session's state into a free slot. Raises
         AdmissionDenied when the target has no free slot — the migration
         abort cause (COMPUTE_SCARCITY), distinct from the lease-accounting
-        bug the prefill path's exhaustion signals."""
+        bug the prefill path's exhaustion signals. On a paged engine the
+        page allocation is part of admission: a pool too full to hold the
+        payload denies the same way."""
         if self.free_slots() == 0:
             from repro.serving.state_transfer import AdmissionDenied
             raise AdmissionDenied(
                 f"target admission denied: no free decode slots for "
                 f"{session_id}")
         idx = self._alloc(session_id)
-        self._write_slot(idx, payload["cache"])
-        self._slots[idx] = SlotState(session_id, payload["position"],
-                                     last_token=payload["last_token"])
+        meta = SlotState(session_id, payload["position"],
+                         last_token=payload["last_token"],
+                         last_used=next(self._use_clock))
+        self._slots[idx] = meta
+        if self.paged:
+            try:
+                self._ensure_pages(idx, max(int(payload["position"]), 1))
+            except PagePoolExhausted as e:
+                from repro.serving.state_transfer import AdmissionDenied
+                self._slot_map.pop(session_id, None)
+                self._slots[idx] = None
+                raise AdmissionDenied(str(e)) from e
+            row = np.zeros(self.pages_per_slot, np.int32)
+            row[:len(meta.pages)] = meta.pages
+            self.cache = self._paged_install(
+                self.cache, payload["cache"]["layers"]["k"],
+                payload["cache"]["layers"]["v"], jnp.int32(idx),
+                jnp.asarray(row), jnp.int32(payload["position"]))
+        else:
+            self._write_slot(idx, payload["cache"])
 
-    def release_slot(self, session_id: str) -> None:
+    def _free_slot(self, session_id: str) -> None:
+        """Free the slot and pages only — hibernated state (if any) stays."""
         idx = self._slot_map.pop(session_id, None)
         if idx is not None:
+            if self.paged:
+                self._free_slot_pages(idx)
             self._slots[idx] = None
+
+    def release_slot(self, session_id: str) -> None:
+        """End of session: free slot/pages AND purge any hibernated copy."""
+        self._free_slot(session_id)
+        if self.hibernation is not None:
+            self.hibernation.drop(session_id)
+
+    # -- tiering: resident <-> parked <-> hibernated ---------------------
+    def park_slot(self, session_id: str) -> None:
+        """Mark a resident session idle. It keeps its slot and pages but
+        rides subsequent decode rounds with active=False — state frozen
+        bit-exactly, resume is free."""
+        meta = self._slots[self._slot_map[session_id]]
+        meta.parked = True
+        self._pos_dirty = True
+
+    def hibernate_slot(self, session_id: str) -> None:
+        """Page a resident session out to the host tier, freeing its slot
+        and pages for other sessions."""
+        if self.hibernation is None:
+            raise RuntimeError(
+                f"cannot hibernate {session_id}: engine has no "
+                f"hibernation store")
+        payload = self.export_slot(session_id)
+        self.hibernation.put(session_id, payload)
+        self._free_slot(session_id)
+
+    def resume_slot(self, session_id: str) -> None:
+        """Re-import a hibernated session. The store record is dropped only
+        AFTER the import succeeds — a refused resume (no slot / no pages)
+        must not lose the only copy of the state."""
+        payload = self.hibernation.restore(session_id)
+        self.import_slot(session_id, payload)
+        self.hibernation.drop(session_id)
+
+    def resume_session(self, session_id: str) -> None:
+        """Bring a bound session back to active-resident from any tier."""
+        idx = self._slot_map.get(session_id)
+        if idx is not None:
+            meta = self._slots[idx]
+            meta.parked = False
+            meta.last_used = next(self._use_clock)
+            return
+        if self.has_hibernated(session_id):
+            self.resume_slot(session_id)
+            return
+        raise KeyError(f"unknown session {session_id}")
 
     # ------------------------------------------------------------------
     def prefill_session(self, session_id: str, prompt: np.ndarray) -> dict:
@@ -216,9 +529,26 @@ class InferenceEngine:
         logits, cache1 = self._prefill(self.params, batch)
         tok = int(jnp.argmax(logits[0]))
         idx = self._alloc(session_id)
-        self._write_slot(idx, cache1)
-        self._slots[idx] = SlotState(session_id, position=n,
-                                     tokens_generated=1, last_token=tok)
+        meta = SlotState(session_id, position=n, tokens_generated=1,
+                         last_token=tok, last_used=next(self._use_clock))
+        self._slots[idx] = meta
+        if self.paged:
+            try:
+                # only ceil(n / page) pages — NOT max_len worth: the whole
+                # point of paging is that admission reserves what the
+                # session actually uses
+                self._ensure_pages(idx, n)
+            except PagePoolExhausted:
+                self._slot_map.pop(session_id, None)
+                self._slots[idx] = None
+                raise
+            row = np.zeros(self.pages_per_slot, np.int32)
+            row[:len(meta.pages)] = meta.pages
+            self.cache = self._paged_install(
+                self.cache, cache1["layers"]["k"], cache1["layers"]["v"],
+                jnp.int32(idx), jnp.asarray(row), jnp.int32(n))
+        else:
+            self._write_slot(idx, cache1)
         return {"first_token": tok,
                 "ttfb_ms": (time.perf_counter() - t0) * 1e3}
 
@@ -231,7 +561,8 @@ class InferenceEngine:
         Returns (cache, token block [slots, K])."""
         def step(carry, _):
             c, fed = carry
-            logits, c = self.lm.decode_step(params, c, fed[:, None])
+            logits, c = self.lm.decode_step(params, c, fed[:, None],
+                                            active=active)
             nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
             fed = jnp.where(active, nxt, fed)
             return (c, fed), fed
@@ -253,21 +584,50 @@ class InferenceEngine:
         k = 1 if steps is None else max(1, int(steps))
         last = np.zeros(self.slots, np.int32)
         active = np.zeros(self.slots, bool)
+        any_parked = False
         for i, s in enumerate(self._slots):
-            if s is not None:
-                last[i] = s.last_token
-                active[i] = True
+            if s is None:
+                continue
+            if s.parked:
+                any_parked = True
+                continue
+            last[i] = s.last_token
+            active[i] = True
+        if not active.any():
+            return {}
+        if self.paged:
+            # grow block tables BEFORE the fused chunk — the scan cannot
+            # allocate mid-flight; under pressure this hibernates coldest
+            # parked sessions or raises PagePoolExhausted
+            for i, s in enumerate(self._slots):
+                if s is not None and not s.parked:
+                    self._ensure_pages(i, s.position + k)
+        if self.paged or any_parked or self._pos_dirty:
+            # resync device pos (and block table) from host truth: parked
+            # rows' device pos advances inside the fused scan even though
+            # their state is frozen
+            pos_host = np.zeros(self.slots, np.int32)
+            for i, s in enumerate(self._slots):
+                if s is not None:
+                    pos_host[i] = s.position
+            cache = dict(self.cache)
+            cache["pos"] = jnp.asarray(pos_host)
+            if self.paged:
+                cache["block"] = jnp.asarray(self._block_host)
+            self.cache = cache
+            self._pos_dirty = any_parked
         self.cache, block = self._decode_fused(
             self.params, self.cache, jnp.asarray(last),
             jnp.asarray(active), k)
         block = np.asarray(block)                        # [slots, K]
         out: Dict[str, Union[int, List[int]]] = {}
         for i, s in enumerate(self._slots):
-            if s is None:
+            if s is None or s.parked:
                 continue
             s.last_token = int(block[i, -1])
             s.position += k
             s.tokens_generated += k
+            s.last_used = next(self._use_clock)
             out[s.session_id] = (int(block[i, 0]) if steps is None
                                  else [int(t) for t in block[i]])
         return out

@@ -67,6 +67,13 @@ class PlaneLoad:
     running: int
     slots: int
     utilization: float
+    #: session-tier occupancy (real-engine backends with hibernation):
+    #: bound = resident + hibernated; page_util feeds the Eq. 14 memory-
+    #: pressure term so migration triggers see pool exhaustion coming
+    resident_sessions: int = 0
+    hibernated_sessions: int = 0
+    bound_sessions: int = 0
+    page_util: float = 0.0
 
 
 @dataclass
@@ -75,6 +82,9 @@ class Admission:
     ttfb_ms: float
     finish_at: Optional[float]   # absolute clock time (simulated backends)
     first_token: Optional[int] = None
+    #: the request continues an existing bound session (no prefill ran, so
+    #: there is no first token — generation resumes at the next round)
+    resumed: bool = False
 
 
 @dataclass
@@ -108,11 +118,27 @@ class RealEngineBackend:
     #: control plane never needs to supply predictor hints
     needs_service_hints = False
 
-    def __init__(self, engine, clock: Clock, *, seed: int = 0):
+    def __init__(self, engine, clock: Clock, *, seed: int = 0,
+                 retain_sessions: Optional[bool] = None,
+                 free_page_watermark: float = 0.25,
+                 hibernate_idle_s: Optional[float] = None):
+        """``retain_sessions`` keeps a session's engine state bound after its
+        request completes (parked, then hibernated under pressure or after
+        ``hibernate_idle_s`` of idleness) so a later ``resume=True`` request
+        continues the generation; defaults to on exactly when the engine has
+        a hibernation store. ``free_page_watermark`` is the free-page
+        fraction below which ``ensure_capacity`` starts hibernating coldest
+        parked sessions pre-emptively."""
         self.engine = engine
         self.clock = clock
         self._ms_per_token: float = 0.0       # measured EWMA (per decode step)
         self._seed = seed
+        self.retain_sessions = (
+            getattr(engine, "hibernation", None) is not None
+            if retain_sessions is None else bool(retain_sessions))
+        self.free_page_watermark = free_page_watermark
+        self.hibernate_idle_s = hibernate_idle_s
+        self._parked_at: Dict[str, float] = {}
 
     # -- plane interface -------------------------------------------------
     def predicted_service_ms(self, req: Request) -> float:
@@ -120,25 +146,70 @@ class RealEngineBackend:
             return req.hint_total_ms
         return self._ms_per_token * req.gen_tokens
 
+    def _store(self):
+        """Engine hibernation store, or None (also for duck-typed stubs)."""
+        return getattr(self.engine, "hibernation", None)
+
+    def _page_pressure(self) -> bool:
+        eng = self.engine
+        if not getattr(eng, "paged", False):
+            return False
+        return eng.free_pages() < self.free_page_watermark * eng.total_pages()
+
+    def _coldest_parked(self, exclude) -> Optional[str]:
+        best, victim = None, None
+        for s in self.engine._slots:
+            if s is not None and s.parked and s.session_id not in exclude \
+                    and (best is None or s.last_used < best):
+                best, victim = s.last_used, s.session_id
+        return victim
+
     def ensure_capacity(self, active_sessions) -> None:
-        """Reclaim engine slots the plane does not own — e.g. state imported
-        by make-before-break migration whose session is now submitting fresh
-        requests. The old generation state is superseded by the new request
-        (same policy as the pre-plane per-request serve loop), so orphan
-        slots are released rather than blocking admission forever."""
-        if self.engine.free_slots() > 0:
-            return
-        for sid in list(self.engine._slot_map):
-            if sid not in active_sessions:
-                self.engine.release_slot(sid)
+        """Make room for the next admission instead of refusing it: while
+        there is no free slot or the page pool sits below its free-page
+        watermark, hibernate (or, storeless, release) the coldest parked
+        session. Falls back to the legacy orphan-slot reclaim — state
+        imported by migration whose session is now submitting fresh
+        requests is superseded, never left to block admission forever."""
+        eng = self.engine
+        for _ in range(eng.slots + 1):
+            if eng.free_slots() > 0 and not self._page_pressure():
                 return
+            victim = self._coldest_parked(active_sessions)
+            if victim is None:
+                break
+            if self._store() is not None:
+                eng.hibernate_slot(victim)
+            else:
+                eng.release_slot(victim)
+            self._parked_at.pop(victim, None)
+        if eng.free_slots() == 0:
+            for sid in list(eng._slot_map):
+                if sid not in active_sessions:
+                    eng.release_slot(sid)
+                    return
 
     def admit(self, req: Request, now: float) -> Admission:
         import numpy as np
         import zlib
+        eng = self.engine
+        if getattr(req, "resume", False) and (
+                eng.has_slot(req.session_id)
+                or eng.has_hibernated(req.session_id)):
+            # transparent resume: unpark is free, hibernated state
+            # re-imports through the same admission path migration uses
+            # (ensure_capacity already made room)
+            t0 = self.clock.now()
+            eng.resume_session(req.session_id)
+            self._parked_at.pop(req.session_id, None)
+            return Admission(ttfb_ms=(self.clock.now() - t0) * 1e3,
+                             finish_at=None, resumed=True)
         if req.session_id in self.engine._slot_map:
             # stale slot from a migrated/abandoned generation: superseded
             self.engine.release_slot(req.session_id)
+        elif self._store() is not None:
+            self._store().drop(req.session_id)      # superseded cold state
+        self._parked_at.pop(req.session_id, None)
         prompt = req.prompt
         if prompt is None:
             # crc32, not hash(): hash() varies per process under
@@ -176,7 +247,40 @@ class RealEngineBackend:
         return out
 
     def release(self, session_id: str) -> None:
-        self.engine.release_slot(session_id)
+        if self.retain_sessions and self.engine.has_slot(session_id):
+            # keep the session bound: park now (state frozen in place),
+            # hibernate later under page pressure or the idle-TTL tick
+            self.engine.park_slot(session_id)
+            self._parked_at[session_id] = self.clock.now()
+        else:
+            self.engine.release_slot(session_id)
+
+    def tick(self, now: Optional[float] = None) -> int:
+        """Idle-TTL policy (the AIS lease-expiry analogue): hibernate
+        sessions parked longer than ``hibernate_idle_s``. Returns the
+        number hibernated; the plane calls this from ``load()`` so the
+        policy advances with every heartbeat."""
+        if self.hibernate_idle_s is None or self._store() is None:
+            return 0
+        now = self.clock.now() if now is None else now
+        n = 0
+        for sid, t in list(self._parked_at.items()):
+            if not self.engine.is_parked(sid):
+                self._parked_at.pop(sid, None)      # reclaimed elsewhere
+            elif now - t >= self.hibernate_idle_s:
+                self.engine.hibernate_slot(sid)
+                self._parked_at.pop(sid, None)
+                n += 1
+        return n
+
+    def occupancy(self) -> Dict[str, float]:
+        eng = self.engine
+        if not hasattr(eng, "resident_sessions"):   # duck-typed stubs
+            return {}
+        return {"resident_sessions": eng.resident_sessions(),
+                "hibernated_sessions": eng.hibernated_sessions(),
+                "bound_sessions": eng.bound_sessions(),
+                "page_util": eng.page_util()}
 
     # -- migration data plane (engine slot protocol) ---------------------
     def has_slot(self, session_id: str) -> bool:
@@ -358,7 +462,7 @@ class ServingPlane:
                request_id: Optional[str] = None,
                hint_ttfb_ms: Optional[float] = None,
                hint_total_ms: Optional[float] = None,
-               prompt=None) -> Optional[Request]:
+               prompt=None, resume: bool = False) -> Optional[Request]:
         """Enqueue one request; returns None when admission control rejects
         it (bounded-queue planes), after accounting the rejection."""
         now = self.clock.now()
@@ -373,7 +477,7 @@ class ServingPlane:
             session_id=session_id, klass=klass,
             prompt_tokens=prompt_tokens, gen_tokens=gen_tokens,
             t_max_ms=t_max_ms, hint_ttfb_ms=hint_ttfb_ms,
-            hint_total_ms=hint_total_ms, prompt=prompt)
+            hint_total_ms=hint_total_ms, prompt=prompt, resume=resume)
         self._by_request[req.request_id] = req
         self.scheduler.submit(req)
         self._admit()
@@ -399,7 +503,11 @@ class ServingPlane:
             predicted_service_ms=self.backend.predicted_service_ms,
             skip=self._skip, on_fast_fail=self._fast_fail)
         for req in batch:
-            self.backend.ensure_capacity(self._active_sessions)
+            # the admitting request's own session must never be the reclaim
+            # victim — a resume=True request's parked state is exactly what
+            # it is about to continue
+            self.backend.ensure_capacity(
+                self._active_sessions | {req.session_id})
             try:
                 adm = self.backend.admit(req, self.clock.now())
             except Exception as e:
@@ -420,6 +528,11 @@ class ServingPlane:
                 self._tokens[req.request_id] = req.gen_tokens
                 heapq.heappush(self._events,
                                (adm.finish_at, next(self._seq), req))
+            elif adm.resumed:
+                # no prefill ran: generation continues from the bound
+                # state at the next decode round
+                self._tokens[req.request_id] = 0
+                self._tok_ids[req.request_id] = []
             else:
                 self._tokens[req.request_id] = 1      # prefill's first token
                 if adm.first_token is not None:
@@ -600,7 +713,7 @@ class ServingPlane:
               request_id: Optional[str] = None,
               hint_ttfb_ms: Optional[float] = None,
               hint_total_ms: Optional[float] = None,
-              prompt=None) -> PlaneResult:
+              prompt=None, resume: bool = False) -> PlaneResult:
         """Unary convenience: submit and drive the plane until THIS request
         completes (other in-flight sessions make progress too — decode
         rounds are shared)."""
@@ -608,7 +721,7 @@ class ServingPlane:
             session_id=session_id, klass=klass, prompt_tokens=prompt_tokens,
             gen_tokens=gen_tokens, t_max_ms=t_max_ms, request_id=request_id,
             hint_ttfb_ms=hint_ttfb_ms, hint_total_ms=hint_total_ms,
-            prompt=prompt)
+            prompt=prompt, resume=resume)
         if req is None:
             return PlaneResult(
                 request_id="rejected", session_id=session_id, klass=klass,
@@ -653,7 +766,14 @@ class ServingPlane:
         return self._done.get(request_id)
 
     def load(self) -> PlaneLoad:
-        """Measured congestion ξ for the analytics loop."""
+        """Measured congestion ξ for the analytics loop. Also drives the
+        backend's idle-TTL tick (parked → hibernated), so tiering policy
+        advances at heartbeat cadence without a separate timer."""
+        tick = getattr(self.backend, "tick", None)
+        if callable(tick):
+            tick()
+        occ_fn = getattr(self.backend, "occupancy", None)
+        occ = occ_fn() if callable(occ_fn) else {}
         slots = max(self.scheduler.slots, 1)
         rate = 0.0
         if len(self._arrivals) >= 2:
@@ -665,4 +785,5 @@ class ServingPlane:
             arrival_rate=rate,
             running=len(self.scheduler.running),
             slots=slots,
-            utilization=len(self.scheduler.running) / slots)
+            utilization=len(self.scheduler.running) / slots,
+            **occ)

@@ -47,6 +47,9 @@ class Request:
     #: optional caller-supplied prompt tokens (real-engine backends); when
     #: None the backend synthesizes a deterministic prompt
     prompt: Optional[object] = None
+    #: continue a bound (parked / hibernated) session's generation instead
+    #: of superseding its state with a fresh prefill
+    resume: bool = False
 
     def wait_ms(self, now: float) -> float:
         return (now - self.submitted_at) * 1e3

@@ -11,8 +11,10 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.decode_attention.decode_attention import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention, paged_decode_attention)
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                paged_decode_attention_ref)
 from repro.kernels.rglru_scan.rglru_scan import rglru_scan
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
 from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk
@@ -77,6 +79,60 @@ class TestDecodeAttention:
         v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
         lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
         out = decode_attention(q, k, v, lengths, block_kv=64, interpret=True)
+        ref = decode_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=5e-5, rtol=1e-4)
+
+
+def _paged_case(seed, B, Hkv, S, D, page, *, extra_pages=3):
+    """Linear k/v plus an equivalent page pool + block tables. Pool rows
+    not referenced by any table (including the engine's page-0 scratch
+    convention) are filled with garbage — the kernel must never let them
+    reach the softmax."""
+    PPS = S // page
+    P = 1 + B * PPS + extra_pages
+    ks = jax.random.split(jax.random.key(seed), 5)
+    q = jax.random.normal(ks[0], (B, Hkv * 2, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    rows = 1 + jax.random.permutation(ks[4], B * PPS + extra_pages)
+    tables = rows[:B * PPS].reshape(B, PPS).astype(jnp.int32)
+    pool_k = jnp.full((P, page, Hkv, D), 1e9, jnp.float32)
+    pool_v = jnp.full((P, page, Hkv, D), -1e9, jnp.float32)
+    src_k = jnp.moveaxis(k, 2, 1).reshape(B * PPS, page, Hkv, D)
+    src_v = jnp.moveaxis(v, 2, 1).reshape(B * PPS, page, Hkv, D)
+    pool_k = pool_k.at[tables.reshape(-1)].set(src_k)
+    pool_v = pool_v.at[tables.reshape(-1)].set(src_v)
+    return q, k, v, lengths, pool_k, pool_v, tables
+
+
+class TestPagedDecodeAttention:
+    @pytest.mark.parametrize("B,Hkv,S,D,page", [
+        (3, 4, 64, 32, 16),        # the engine smoke shape
+        (2, 2, 256, 64, 32),
+        (4, 1, 128, 128, 16),
+    ])
+    def test_matches_both_refs(self, B, Hkv, S, D, page):
+        """Scattered pool + shuffled tables == its gather oracle == the
+        dense (linear-layout) oracle on the same logical sequences."""
+        q, k, v, lengths, pk, pv, tbl = _paged_case(11, B, Hkv, S, D, page)
+        out = paged_decode_attention(q, pk, pv, lengths, tbl, interpret=True)
+        for ref in (paged_decode_attention_ref(q, pk, pv, lengths, tbl),
+                    decode_attention_ref(q, k, v, lengths)):
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=5e-5, rtol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(B=st.integers(1, 4), Hkv=st.sampled_from([1, 2, 4]),
+           pps=st.integers(1, 5), page=st.sampled_from([8, 16]))
+    def test_ragged_lengths_property(self, B, Hkv, pps, page):
+        """Arbitrary table permutations and ragged lengths stay exact:
+        tail pages past each row's length are streamed but masked."""
+        S, D = pps * page, 64
+        q, k, v, lengths, pk, pv, tbl = _paged_case(
+            B * 7919 + S, B, Hkv, S, D, page)
+        out = paged_decode_attention(q, pk, pv, lengths, tbl, interpret=True)
         ref = decode_attention_ref(q, k, v, lengths)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=5e-5, rtol=1e-4)

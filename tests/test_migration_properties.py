@@ -9,7 +9,10 @@ Properties (§IV-B continuity claim, Eq. 14):
   RG-LRU, SSM);
 * ``interruption_ms == 0`` for EVERY successful make-before-break outcome,
   across random context shapes — on the real engine path and the
-  VirtualClock simulation arm alike.
+  VirtualClock simulation arm alike;
+* an export → hibernate → resume round trip through the host tier
+  preserves the state fingerprint and continues the token stream
+  bit-exactly against an uninterrupted twin, for all three families.
 """
 
 import itertools
@@ -115,6 +118,58 @@ class TestRoundTripFingerprint:
         payload1 = backend.export_slot(s.session_id)
         assert state_transfer.fingerprint(payload1) == fp0
         assert payload1["position"] == payload0["position"]
+
+
+_HIB = {}
+
+
+def hib_engine(arch):
+    """One hibernation-capable engine per family (paged where the family
+    supports it) plus an uninterrupted dense twin sharing its weights —
+    the bit-exactness oracle for resumed token streams."""
+    if arch not in _HIB:
+        cfg = get_config(arch) if arch == "edge-tiny" \
+            else get_smoke_config(arch)
+        eng = InferenceEngine(cfg, slots=2, max_len=64,
+                              paged=(arch == "edge-tiny"), page_size=16,
+                              hibernation=True)
+        twin = InferenceEngine(cfg, params=eng.params, slots=2, max_len=64)
+        _HIB[arch] = (eng, twin)
+    return _HIB[arch]
+
+
+class TestHibernateRoundTrip:
+    @settings(max_examples=6, deadline=None)
+    @given(arch=st.sampled_from(sorted(FAMILIES)),
+           prompt_len=st.integers(min_value=4, max_value=20),
+           pre_rounds=st.integers(min_value=0, max_value=4),
+           post_rounds=st.integers(min_value=1, max_value=5))
+    def test_hibernate_resume_is_transparent(self, arch, prompt_len,
+                                             pre_rounds, post_rounds):
+        """Hibernating to host and resuming is invisible to the stream:
+        same fingerprint on re-import, and the continued tokens match an
+        identical session that never left the device."""
+        eng, twin = hib_engine(arch)
+        sid = f"hib-{next(_uid)}"
+        r0 = eng.prefill_session(sid, np.arange(prompt_len, dtype=np.int32))
+        r1 = twin.prefill_session(sid, np.arange(prompt_len, dtype=np.int32))
+        assert r0["first_token"] == r1["first_token"]
+        for _ in range(pre_rounds):
+            assert eng.decode_round()[sid] == twin.decode_round()[sid]
+
+        fp0 = state_transfer.fingerprint(eng.export_slot(sid))
+        eng.hibernate_slot(sid)
+        assert not eng.has_slot(sid) and eng.hibernation.has(sid)
+        assert eng.bound_sessions() == eng.hibernated_sessions() + \
+            eng.resident_sessions()
+        eng.resume_slot(sid)
+        assert state_transfer.fingerprint(eng.export_slot(sid)) == fp0
+        assert not eng.hibernation.has(sid)      # dropped after re-import
+
+        for _ in range(post_rounds):
+            assert eng.decode_round()[sid] == twin.decode_round()[sid]
+        eng.release_slot(sid)
+        twin.release_slot(sid)
 
 
 class TestZeroInterruption:

@@ -1,0 +1,223 @@
+"""Paged KV cache + tiered hibernation: pool accounting, admission,
+pressure-driven reclaim, slot reuse, and the transparent resume path.
+
+The tier model under test (ISSUE 6 / the AIS lease lifecycle):
+
+    resident (device, decoding) -> parked (device, idle, frozen in the
+    fused batch) -> hibernated (host numpy, slot + pages freed)
+
+and back, bit-exactly. Paged layout applies to full-attention stacked-KV
+families (dense/moe); hybrid and SSM engines silently keep the dense slot
+layout but park/hibernate identically.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.clock import VirtualClock
+from repro.serving import state_transfer
+from repro.serving.engine import InferenceEngine, PagePoolExhausted
+from repro.serving.plane import RealEngineBackend, ServingPlane
+
+CFG = get_config("edge-tiny")
+
+
+def _prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab_size, size=n).astype(np.int32)
+
+
+def _paged(slots=3, max_len=64, page_size=16, num_pages=None, store=True,
+           params=None):
+    return InferenceEngine(CFG, params=params, slots=slots, max_len=max_len,
+                           paged=True, page_size=page_size,
+                           num_pages=num_pages, hibernation=store)
+
+
+class TestPageAccounting:
+    def test_pool_sizing_and_alloc(self):
+        """Default pool covers every slot at max_len plus the scratch page;
+        pages are allocated lazily by position, freed on release."""
+        eng = _paged(slots=2, max_len=64, page_size=16)
+        assert eng.total_pages() == 2 * 4          # scratch page not counted
+        assert eng.free_pages() == 8 and eng.page_util() == 0.0
+        eng.prefill_session("a", _prompt(5))       # 1 page (pos 5)
+        assert eng.free_pages() == 7
+        eng.prefill_session("b", _prompt(33))      # 3 pages (pos 33)
+        assert eng.free_pages() == 4
+        assert eng.page_util() == pytest.approx(0.5)
+        eng.release_slot("a")
+        assert eng.free_pages() == 5
+        eng.release_slot("b")
+        assert eng.free_pages() == 8 and eng.pool_bytes() > 0
+
+    def test_decode_extends_pages_on_demand(self):
+        eng = _paged(slots=1, max_len=64, page_size=16)
+        eng.prefill_session("a", _prompt(15))
+        assert eng.free_pages() == 3
+        eng.decode_round(steps=4)                  # crosses the 16 boundary
+        assert eng.free_pages() == 2
+
+    def test_exhaustion_is_explicit_admission_failure(self):
+        """A pool too small for the offered load raises PagePoolExhausted
+        at prefill — never a silent eviction or corruption — and the
+        failed admission leaves no partial slot behind."""
+        eng = _paged(slots=3, max_len=64, page_size=16, num_pages=1 + 4,
+                     store=False)
+        eng.prefill_session("a", _prompt(40))      # 3 pages
+        with pytest.raises(PagePoolExhausted):
+            eng.prefill_session("b", _prompt(33))  # needs 3, only 1 left
+        assert not eng.has_slot("b") and eng.free_slots() == 2
+        eng.prefill_session("c", _prompt(10))      # 1 page still fits
+        assert eng.free_pages() == 0
+
+    def test_exhaustion_reclaims_parked_first(self):
+        """Under pressure the engine hibernates the coldest parked session
+        to free pages before refusing admission."""
+        eng = _paged(slots=3, max_len=64, page_size=16, num_pages=1 + 4)
+        eng.prefill_session("a", _prompt(40))
+        eng.park_slot("a")
+        eng.prefill_session("b", _prompt(33))      # reclaim: a -> host
+        assert eng.has_hibernated("a") and not eng.has_slot("a")
+        assert eng.has_slot("b") and eng.bound_sessions() == 2
+
+
+class TestSlotReuse:
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_no_bleed_through_after_release(self, paged):
+        """A new session admitted into a released slot (and its reclaimed
+        pages) must produce exactly the tokens a fresh engine produces —
+        no stale KV/position bleed-through."""
+        if paged:
+            eng = _paged(slots=1, max_len=64, store=False)
+        else:
+            eng = InferenceEngine(CFG, slots=1, max_len=64)
+        fresh = InferenceEngine(CFG, params=eng.params, slots=1, max_len=64)
+        eng.prefill_session("old", _prompt(37, seed=1))
+        eng.decode_round(steps=8)
+        eng.release_slot("old")
+
+        r0 = eng.prefill_session("new", _prompt(9, seed=2))
+        r1 = fresh.prefill_session("new", _prompt(9, seed=2))
+        assert r0["first_token"] == r1["first_token"]
+        for _ in range(3):
+            assert eng.decode_round(steps=4)["new"] == \
+                fresh.decode_round(steps=4)["new"]
+
+    def test_no_bleed_through_after_hibernate(self):
+        """Same, when the slot was vacated by hibernation instead of
+        release — and the hibernated session still resumes bit-exactly
+        afterwards from a different slot's pages."""
+        eng = _paged(slots=2, max_len=64)
+        twin = InferenceEngine(CFG, params=eng.params, slots=2, max_len=64)
+        eng.prefill_session("h", _prompt(21, seed=3))
+        twin.prefill_session("h", _prompt(21, seed=3))
+        for _ in range(2):
+            assert eng.decode_round()["h"] == twin.decode_round()["h"]
+        eng.hibernate_slot("h")
+
+        r0 = eng.prefill_session("n", _prompt(12, seed=4))
+        r1 = twin.prefill_session("n", _prompt(12, seed=4))
+        assert r0["first_token"] == r1["first_token"]
+
+        eng.resume_slot("h")                       # back, next to "n"
+        for _ in range(3):
+            a, b = eng.decode_round(), twin.decode_round()
+            assert a["h"] == b["h"] and a["n"] == b["n"]
+
+
+class TestPagedDenseIdentity:
+    @pytest.mark.parametrize("arch", ["edge-tiny", "recurrentgemma-2b",
+                                      "mamba2-1.3b"])
+    def test_token_streams_identical(self, arch):
+        """paged=True is a layout change, not a semantics change: for every
+        family the token stream and the canonical export fingerprint match
+        the dense engine (for hybrid/SSM, paged silently no-ops)."""
+        cfg = CFG if arch == "edge-tiny" else get_smoke_config(arch)
+        dense = InferenceEngine(cfg, slots=2, max_len=64)
+        paged = InferenceEngine(cfg, params=dense.params, slots=2,
+                                max_len=64, paged=True, page_size=16)
+        assert paged.paged == (arch == "edge-tiny")
+        for i, n in enumerate((5, 17)):
+            sid = f"s{i}"
+            p = _prompt(n, seed=i)
+            assert dense.prefill_session(sid, p)["first_token"] == \
+                paged.prefill_session(sid, p)["first_token"]
+        for _ in range(3):
+            assert dense.decode_round(steps=4) == paged.decode_round(steps=4)
+        for sid in ("s0", "s1"):
+            assert state_transfer.fingerprint(dense.export_slot(sid)) == \
+                state_transfer.fingerprint(paged.export_slot(sid))
+
+
+class TestPlaneTiering:
+    def _plane(self, *, slots=2, num_pages=None, hibernate_idle_s=None,
+               watermark=0.25):
+        eng = _paged(slots=slots, num_pages=num_pages)
+        clock = VirtualClock()
+        backend = RealEngineBackend(eng, clock,
+                                    free_page_watermark=watermark,
+                                    hibernate_idle_s=hibernate_idle_s)
+        return eng, clock, ServingPlane(clock, backend, slots=slots,
+                                        site_id="t",
+                                        premium_reserved_frac=0.0)
+
+    def _serve(self, plane, sid, *, gen=4, resume=False, seed=0):
+        return plane.serve(session_id=sid, klass="best-effort",
+                           prompt_tokens=8, gen_tokens=gen, t_max_ms=1e12,
+                           prompt=None if resume else _prompt(8, seed=seed),
+                           resume=resume)
+
+    def test_ensure_capacity_hibernates_under_page_pressure(self):
+        """Satellite 1: ensure_capacity reclaims the LRU parked session
+        when free pages sit below the watermark, even with a slot free."""
+        eng, clock, plane = self._plane(slots=3, num_pages=1 + 6,
+                                        watermark=0.5)
+        for i in range(2):                          # park u0 (LRU), then u1
+            r = self._serve(plane, f"u{i}", gen=12, seed=i)  # 2 pages each
+            assert not r.failed
+        assert eng.parked_sessions() == 2 and eng.free_slots() == 1
+        assert eng.free_pages() < 0.5 * eng.total_pages()
+        plane.backend.ensure_capacity(set())
+        # coldest first: u0 went to host, u1 is still resident-parked
+        assert eng.has_hibernated("u0") and eng.is_parked("u1")
+        assert eng.free_pages() >= 0.5 * eng.total_pages()
+
+    def test_idle_ttl_tick_hibernates_parked(self):
+        """Lease-TTL expiry: load() drives the tick; sessions parked past
+        hibernate_idle_s move to host, occupancy splits the tiers."""
+        eng, clock, plane = self._plane(slots=2, hibernate_idle_s=5.0)
+        assert not self._serve(plane, "a").failed
+        load = plane.load()
+        assert load.resident_sessions == 1 and load.hibernated_sessions == 0
+        clock.advance(10.0)
+        load = plane.load()
+        assert load.resident_sessions == 0 and load.hibernated_sessions == 1
+        assert load.bound_sessions == 1 and eng.has_hibernated("a")
+
+    def test_resume_continues_hibernated_stream(self):
+        """serve(resume=True) on a hibernated session re-imports and
+        continues exactly where the lease left off."""
+        eng, clock, plane = self._plane(slots=2, hibernate_idle_s=0.0)
+        r0 = self._serve(plane, "a", gen=4)
+        plane.load()                                # -> hibernated
+        assert eng.has_hibernated("a")
+        pos0 = eng.position_of("a")
+
+        twin = InferenceEngine(CFG, params=eng.params, slots=1, max_len=64)
+        tclock = VirtualClock()
+        tp = ServingPlane(tclock,
+                          RealEngineBackend(twin, tclock,
+                                            retain_sessions=True),
+                          slots=1, site_id="twin",
+                          premium_reserved_frac=0.0)
+        t0 = tp.serve(session_id="a", klass="best-effort", prompt_tokens=8,
+                      gen_tokens=4, t_max_ms=1e12, prompt=_prompt(8))
+        assert t0.token_ids == r0.token_ids
+
+        r1 = self._serve(plane, "a", gen=4, resume=True)
+        t1 = tp.serve(session_id="a", klass="best-effort", prompt_tokens=0,
+                      gen_tokens=4, t_max_ms=1e12, resume=True)
+        assert not r1.failed and r1.token_ids == t1.token_ids
+        assert eng.position_of("a") == pos0 + 4
