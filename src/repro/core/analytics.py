@@ -38,6 +38,7 @@ class SiteContext:
     p99_infer_ms: float = 0.0       # measured execution-side p99
     page_util: float = 0.0          # KV page-pool occupancy [0, 1]
     healthy: bool = True
+    alive: bool = True              # supervisor liveness (dead = crashed)
 
 
 class Analytics:
@@ -50,6 +51,7 @@ class Analytics:
         self._p99: Dict[Tuple[str, str], EWMA] = {}
         self._mobility: Dict[str, EWMA] = {}   # invoker -> handover rate /s
         self._deny: set = set()                # A1-style site deny list
+        self._dead: set = set()                # supervisor-declared crashes
         #: per-site load epoch: bumped whenever NEW evidence about a site
         #: arrives (heartbeat load, measured latency, A1 policy) — the
         #: invalidation key for predictor memoization
@@ -89,6 +91,19 @@ class Analytics:
         self._deny.discard(site_id)
         self._bump(site_id)
 
+    def mark_site_dead(self, site_id: str) -> None:
+        """Supervisor crash verdict: the site is excluded from DISCOVER
+        (reason ``site-dead``) until marked alive again."""
+        self._dead.add(site_id)
+        self._bump(site_id)
+
+    def mark_site_alive(self, site_id: str) -> None:
+        self._dead.discard(site_id)
+        self._bump(site_id)
+
+    def site_alive(self, site_id: str) -> bool:
+        return site_id not in self._dead
+
     # -- ξ exposure ---------------------------------------------------------
     def site_context(self, site_id: str) -> SiteContext:
         return SiteContext(
@@ -97,7 +112,8 @@ class Analytics:
             arrival_rate=self._rate.get(site_id, EWMA()).value,
             p99_infer_ms=self._p99.get((site_id, "*"), EWMA()).value,
             page_util=self._mem.get(site_id, EWMA()).value,
-            healthy=site_id not in self._deny,
+            healthy=site_id not in self._deny and site_id not in self._dead,
+            alive=site_id not in self._dead,
         )
 
     def measured_p99(self, site_id: str, model_key: str) -> float | None:

@@ -102,10 +102,16 @@ def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
                 # federation spill the establish instead
                 out.append(_excl("compute-saturated"))
                 continue
-            if analytics is not None and \
-                    not analytics.site_context(site_id).healthy:
-                out.append(_excl("a1-denied"))
-                continue
+            if analytics is not None:
+                ctx = analytics.site_context(site_id)
+                if not ctx.alive:
+                    # supervisor crash verdict: distinct from policy denial
+                    # so the Eq. 12 detail string names the real cause
+                    out.append(_excl("site-dead"))
+                    continue
+                if not ctx.healthy:
+                    out.append(_excl("a1-denied"))
+                    continue
             # ---- annotate with predicted boundary quantities ----------
             pred = predictors.predict(asp, model, site, zone, klass,
                                       prompt_tokens=prompt_tokens,
@@ -131,11 +137,12 @@ def admissible_set(candidates: List[Candidate]) -> List[Candidate]:
         # strip federation domain prefixes for the cause decision — the
         # full (domain-qualified) reasons stay in the detail string
         bare = {r.split(":", 1)[-1] for r in reasons}
-        if bare and bare <= {"compute-saturated"}:
+        if bare and bare <= {"compute-saturated", "site-dead"}:
             # every candidate exists and would bind — the anchors are just
-            # full right now. Eq. (12) keeps this distinct from "no
-            # feasible binding": the remediation is retry/backoff (or
-            # east-west spillover), not relaxing the objectives.
+            # full (or crashed) right now. Eq. (12) keeps this distinct
+            # from "no feasible binding": the remediation is retry/backoff
+            # on an alternate anchor (or east-west spillover), not
+            # relaxing the objectives.
             raise SessionError(
                 FailureCause.COMPUTE_SCARCITY,
                 f"all candidate sites saturated "

@@ -47,6 +47,18 @@ class ServeResult:
     token_ids: Optional[list] = None   # real-engine backends only
 
 
+@dataclass
+class ReanchorOutcome:
+    """Result of one crash-recovery re-anchoring (supervisor path)."""
+    ok: bool
+    from_site: str
+    to_site: Optional[str] = None
+    #: the new anchor resumed the session's state from the hibernation
+    #: store (host memory survives an engine crash); False = fresh context
+    restored: bool = False
+    cause: Optional[FailureCause] = None
+
+
 class Orchestrator:
     def __init__(self, clock: Optional[Clock] = None,
                  catalog: Optional[Catalog] = None,
@@ -382,6 +394,94 @@ class Orchestrator:
                 self.migrations.check_trigger(session, session.zone, trig):
             return self.migrations.migrate(session, session.zone)
         return None
+
+    # ------------------------------------------------------------------
+    def reanchor(self, session: AISession, *, exclude_sites: tuple = (),
+                 state_source=None) -> ReanchorOutcome:
+        """AI-PAGING re-anchoring for a session orphaned by a site crash.
+
+        Unlike ``migrations.migrate`` this never touches the old anchor —
+        there is nothing to export from a dead engine. The session
+        re-discovers (the dead site is excluded via the analytics
+        ``site-dead`` verdict), re-prepares at a paged-in site under
+        τ_mig, and binds; make-before-break degenerates to plain re-anchor
+        because the old leases are already void. ``state_source`` is a
+        surviving :class:`HibernationStore` (host memory outlives the
+        engine process): when it holds the session's state, the new
+        anchor's backend re-imports it so generation resumes bit-exactly;
+        a corrupt or refused restore degrades to a fresh context rather
+        than failing the re-anchor. On failure the session FAILs with the
+        Eq. 12 cause (NO_FEASIBLE_BINDING / COMPUTE_SCARCITY /
+        DEADLINE_EXPIRY), which is the attributable loss accounting the
+        recovery bench measures."""
+        src = session.binding.site_id if session.binding else ""
+        excl = tuple(exclude_sites) or ((src,) if src else ())
+        t0 = self.clock.now()
+        try:
+            if session.state is SessionState.COMMITTED:
+                session.mark_migrating()
+            elif session.state is not SessionState.MIGRATING:
+                raise SessionError(
+                    FailureCause.POLICY_DENIAL,
+                    f"re-anchor from state {session.state.value}")
+            if self.federation is not None:
+                cands = self.federation.merged_discover(
+                    session, session.zone, exclude_sites=excl)
+            else:
+                cands = discover(session.asp, self.catalog, self.sites,
+                                 self.predictors, session.zone,
+                                 analytics=self.analytics)
+            target = page(session.asp, cands, exclude_sites=excl)
+            region = target.region or self.sites[target.site_id].spec.region
+            self.policy.check_region(session.authz_ref, region)
+            ctx = self.migrations.context_tokens(session)
+            remote = self.federation is not None \
+                and self.federation.is_remote(target)
+            if remote:
+                prepared = self.federation.prepare_remote(
+                    session, target, hold_s=self.timers.tau_mig,
+                    context_tokens=ctx)
+                binding = self.federation.commit_remote(session, target,
+                                                        prepared)
+            else:
+                prepared = self.coordinator.prepare(
+                    target.model, target.site_id, session.zone,
+                    target.klass, slots=1,
+                    cache_bytes=target.model.session_state_bytes(ctx),
+                    hold_s=self.timers.tau_mig)
+                binding = self.coordinator.commit(prepared, target.model)
+            if self.clock.now() - t0 > self.timers.tau_mig:
+                raise SessionError(FailureCause.DEADLINE_EXPIRY,
+                                   "re-anchor deadline expired (τ_mig)")
+            session.bind(binding)    # old leases void: release is a no-op
+            restored = False
+            if state_source is not None and not remote \
+                    and state_source.has(session.session_id):
+                restored = self._restore_state(session, target,
+                                               state_source)
+            session.history.append(
+                (self.clock.now(), f"re-anchored:{src}->{target.site_id}"))
+            return ReanchorOutcome(True, src, target.site_id, restored)
+        except SessionError as e:
+            session.fail(e.cause, str(e))
+            return ReanchorOutcome(False, src, cause=e.cause)
+
+    def _restore_state(self, session: AISession, target,
+                       state_source) -> bool:
+        """Best-effort state resume at the new anchor: verified restore →
+        backend import → drop the store copy (only after the import holds
+        it). Corruption (IOError) or target admission refusal leaves the
+        session re-anchored with a fresh context."""
+        backend = self.plane_for(self.sites[target.site_id]).backend
+        if not hasattr(backend, "import_slot"):
+            return False
+        try:
+            payload = state_source.restore(session.session_id)
+            backend.import_slot(session.session_id, payload)
+        except Exception:
+            return False
+        state_source.drop(session.session_id)
+        return True
 
     # ------------------------------------------------------------------
     def compliance(self, session: AISession):

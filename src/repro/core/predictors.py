@@ -161,7 +161,11 @@ class Predictors:
         # drift away from edge sites — central sites rarely need re-anchoring
         ho_rate = 0.0
         if asp.continuity_required():
-            base = {"edge": 0.8, "regional": 0.3, "central": 0.05}[site.spec.kind]
+            # defaulted: unknown site kinds (new deployments, federated
+            # guests) predict like a regional anchor instead of 500-ing
+            # DISCOVER with a KeyError
+            base = {"edge": 0.8, "regional": 0.3,
+                    "central": 0.05}.get(site.spec.kind, 0.3)
             ho_rate = base
         p_mig = 1.0 - math.exp(-ho_rate)
 

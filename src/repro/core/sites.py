@@ -66,6 +66,9 @@ class ExecutionSite:
         self._queue_depth = 0.0
         self._engine = None  # optional real InferenceEngine (migration plane)
         self._plane = None   # QoS-scheduled ServingPlane (repro.serving.plane)
+        #: supervisor crash verdict: a dead site holds no leases (v_cmp is
+        #: False for every session anchored here) and refuses PREPARE
+        self.dead = False
 
     # ------------------------------------------------------------------
     # capacity accounting
@@ -98,6 +101,9 @@ class ExecutionSite:
         """Provisional reservation. Raises COMPUTE_SCARCITY when the site
         cannot hold the new session without breaking existing leases."""
         self._gc()
+        if self.dead:
+            raise SessionError(FailureCause.COMPUTE_SCARCITY,
+                               f"{self.spec.site_id}: site is dead")
         key = f"{model.model_id}@{model.version}"
         if not self.hosts(key):
             raise SessionError(FailureCause.MODEL_UNAVAILABLE,
@@ -138,6 +144,22 @@ class ExecutionSite:
     def lease_valid(self, lease_id: str) -> bool:
         lease = self._leases.get(lease_id)
         return bool(lease and lease.valid(self.clock.now()))
+
+    # ------------------------------------------------------------------
+    # supervisor lifecycle
+    # ------------------------------------------------------------------
+    def mark_dead(self, detail: str = "") -> None:
+        """Crash: the lease table dies with the process. Every session
+        anchored here instantly loses v_cmp — exactly the Eq. 4 coupling
+        the supervisor's re-anchoring restores at a live site."""
+        self.dead = True
+        self._leases.clear()
+
+    def mark_alive(self) -> None:
+        """Recovered process: fresh lease table (nothing survives a crash);
+        sessions must re-PREPARE."""
+        self.dead = False
+        self._leases.clear()
 
     # ------------------------------------------------------------------
     # service-time primitives (feed predictors)

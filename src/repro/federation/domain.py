@@ -218,6 +218,10 @@ class DomainController:
         # visited side
         self._guest_by_ref: Dict[str, _GuestLease] = {}
         self._guest_sessions: Dict[str, _GuestLease] = {}
+        #: supervisor/chaos verdict: domains declared dead are skipped in
+        #: solicitation (note ``domain-dead``) and their providers dropped —
+        #: a partitioned peer must not stall every DISCOVER on timeouts
+        self._dead_domains: set = set()
         self._refs = itertools.count(1)
         self._epochs = itertools.count(1)
         # wire the core into the federation
@@ -262,6 +266,19 @@ class DomainController:
 
     def transit_ms_for(self, domain: str) -> float:
         return self.transit_ms.get(domain, self.default_transit_ms)
+
+    def mark_domain_dead(self, domain: str) -> None:
+        """Fleet-ops verdict on a peer (partition, mass site failure): stop
+        soliciting it and stop re-pulling its digest. Existing roamed
+        sessions are not torn down here — their guest leases TTL-expire on
+        the visited side and re-anchoring is the home core's job."""
+        self._dead_domains.add(domain)
+        self.registry.drop_provider(domain)
+
+    def mark_domain_alive(self, domain: str) -> None:
+        """Partition healed: solicit again; the peer re-registers its
+        provider on the next ``connect``/``advertise``."""
+        self._dead_domains.discard(domain)
 
     # ==================================================================
     # HOME SIDE
@@ -331,6 +348,9 @@ class DomainController:
                 exclude=(self.domain_id,) + tuple(exclude)):
             endpoint = self.peers.get(dom)
             if endpoint is None:
+                continue
+            if dom in self._dead_domains:
+                notes.append((dom, "domain-dead"))
                 continue
             if not self.registry.ensure_fresh(dom):
                 notes.append((dom, "registry-stale"))

@@ -97,7 +97,7 @@ class InferenceEngine:
                  paged: bool = False,
                  page_size: int = KV.DEFAULT_PAGE_SIZE,
                  num_pages: Optional[int] = None,
-                 hibernation=None):
+                 hibernation=None, clock=None):
         """``paged=True`` selects the block-table paged KV layout for
         families that support it (full-attention stacked KV — see
         ``kvcache.supports_paging``); other families silently keep the dense
@@ -106,7 +106,9 @@ class InferenceEngine:
         KV memory (default: enough for every slot at max_len, plus the
         scratch page — no worse than dense). ``hibernation`` is a
         :class:`~repro.serving.hibernation.HibernationStore` (or ``True``
-        for a private unbounded one) enabling the host-memory tier."""
+        for a private unbounded one) enabling the host-memory tier.
+        ``clock`` (any object with ``now()``) timestamps hibernation
+        records so store-side TTL/LRU ordering sees real ages."""
         self.cfg = cfg
         self.lm = LM(cfg)
         self.slots = slots
@@ -121,6 +123,7 @@ class InferenceEngine:
         if hibernation is False:                   # bool flag, not a store
             hibernation = None
         self.hibernation = hibernation
+        self.clock = clock
         #: canonical exports: linear stacked-KV buffers zero their garbage
         #: tail (rows at index >= position: prefill bucket padding, stale
         #: rows of re-used slots), so the SAME logical state always
@@ -279,7 +282,8 @@ class InferenceEngine:
                     best, victim = s.last_used, s.session_id
             if victim is None:
                 return
-            self.hibernate_slot(victim)
+            if not self.hibernate_slot(victim):
+                return          # store full: nothing more can page out
 
     @property
     def prefill_compiles(self) -> int:
@@ -471,16 +475,29 @@ class InferenceEngine:
         meta.parked = True
         self._pos_dirty = True
 
-    def hibernate_slot(self, session_id: str) -> None:
+    def hibernate_slot(self, session_id: str, *,
+                       now: Optional[float] = None) -> bool:
         """Page a resident session out to the host tier, freeing its slot
-        and pages for other sessions."""
+        and pages for other sessions. Returns False — with the session left
+        resident, state intact — when a capacity-bounded store refuses the
+        payload: heartbeat/reclaim callers degrade (skip, retry next tick)
+        instead of dying mid-tick. Records are stamped with ``now`` (or the
+        engine clock) so store-side TTL/LRU ordering is real."""
         if self.hibernation is None:
             raise RuntimeError(
                 f"cannot hibernate {session_id}: engine has no "
                 f"hibernation store")
+        if now is None:
+            now = self.clock.now() if self.clock is not None else 0.0
         payload = self.export_slot(session_id)
-        self.hibernation.put(session_id, payload)
+        try:
+            self.hibernation.put(session_id, payload, now=now)
+        except MemoryError:
+            # store_full is counted by the store itself; the session stays
+            # resident/parked and a later tick retries once space frees up
+            return False
         self._free_slot(session_id)
+        return True
 
     def resume_slot(self, session_id: str) -> None:
         """Re-import a hibernated session. The store record is dropped only

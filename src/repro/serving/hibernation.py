@@ -51,6 +51,9 @@ class HibernationStore:
         self.puts = 0
         self.restores = 0
         self.verify_failures = 0
+        #: refused puts on a capacity-bounded store — the heartbeat tick
+        #: reads this through PlaneLoad as back-pressure, never as a crash
+        self.store_full = 0
 
     # ------------------------------------------------------------------
     def put(self, session_id: str, payload, *, now: float = 0.0
@@ -61,6 +64,7 @@ class HibernationStore:
             held = self.bytes() - (self._records[session_id].nbytes
                                    if session_id in self._records else 0)
             if held + nbytes > self.capacity_bytes:
+                self.store_full += 1
                 raise MemoryError(
                     f"hibernation store full: {held + nbytes} > "
                     f"{self.capacity_bytes} bytes for {session_id}")

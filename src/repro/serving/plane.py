@@ -35,8 +35,11 @@ import collections
 import dataclasses
 import heapq
 import itertools
+import zlib
 from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.clock import Clock, VirtualClock
 from repro.core.failures import FailureCause
@@ -74,6 +77,9 @@ class PlaneLoad:
     hibernated_sessions: int = 0
     bound_sessions: int = 0
     page_util: float = 0.0
+    #: refused hibernation puts (capacity-bounded store): back-pressure the
+    #: supervisor reads instead of the tick crashing with MemoryError
+    store_full: int = 0
 
 
 @dataclass
@@ -131,6 +137,10 @@ class RealEngineBackend:
         parked sessions pre-emptively."""
         self.engine = engine
         self.clock = clock
+        if getattr(engine, "clock", None) is None:
+            # thread the plane clock through so the engine's own hibernation
+            # paths (page reclaim) stamp records with real times too
+            engine.clock = clock
         self._ms_per_token: float = 0.0       # measured EWMA (per decode step)
         self._seed = seed
         self.retain_sessions = (
@@ -179,7 +189,8 @@ class RealEngineBackend:
             if victim is None:
                 break
             if self._store() is not None:
-                eng.hibernate_slot(victim)
+                if not eng.hibernate_slot(victim):
+                    break       # store full: fall through to orphan reclaim
             else:
                 eng.release_slot(victim)
             self._parked_at.pop(victim, None)
@@ -190,8 +201,6 @@ class RealEngineBackend:
                     return
 
     def admit(self, req: Request, now: float) -> Admission:
-        import numpy as np
-        import zlib
         eng = self.engine
         if getattr(req, "resume", False) and (
                 eng.has_slot(req.session_id)
@@ -268,7 +277,8 @@ class RealEngineBackend:
             if not self.engine.is_parked(sid):
                 self._parked_at.pop(sid, None)      # reclaimed elsewhere
             elif now - t >= self.hibernate_idle_s:
-                self.engine.hibernate_slot(sid)
+                if not self.engine.hibernate_slot(sid, now=now):
+                    continue    # store full: stays parked, retried next tick
                 self._parked_at.pop(sid, None)
                 n += 1
         return n
@@ -277,10 +287,15 @@ class RealEngineBackend:
         eng = self.engine
         if not hasattr(eng, "resident_sessions"):   # duck-typed stubs
             return {}
+        store = self._store()
         return {"resident_sessions": eng.resident_sessions(),
                 "hibernated_sessions": eng.hibernated_sessions(),
                 "bound_sessions": eng.bound_sessions(),
-                "page_util": eng.page_util()}
+                "page_util": eng.page_util(),
+                # `is not None`, not truthiness: an EMPTY store is falsy
+                # (__len__) yet its refusal count is exactly what matters
+                "store_full": getattr(store, "store_full", 0)
+                if store is not None else 0}
 
     # -- migration data plane (engine slot protocol) ---------------------
     def has_slot(self, session_id: str) -> bool:
@@ -350,8 +365,6 @@ class SimulatedEngine:
     def _touch_state(self, req: Request) -> None:
         """Deterministic session-state evolution (crc32-seeded so two runs
         of the same trace produce byte-identical states and fingerprints)."""
-        import numpy as np
-        import zlib
         st = self._sessions.get(req.session_id)
         if st is None:
             st = {"cache": {"sim": np.zeros(self.STATE_DIM, np.float64)},
@@ -389,7 +402,6 @@ class SimulatedEngine:
 
     def export_slot(self, session_id: str):
         st = self._sessions[session_id]
-        import numpy as np
         return {"cache": {"sim": np.array(st["cache"]["sim"], copy=True)},
                 "position": st["position"],
                 "last_token": st["last_token"]}
@@ -402,7 +414,6 @@ class SimulatedEngine:
             raise AdmissionDenied(
                 f"target admission denied: no free session slots for "
                 f"{session_id}")
-        import numpy as np
         self._sessions[session_id] = {
             "cache": {"sim": np.array(payload["cache"]["sim"], copy=True)},
             "position": int(payload["position"]),
@@ -453,6 +464,9 @@ class ServingPlane:
         #: fire when this plane is the SOURCE, import-side when it is the
         #: TARGET (see state_transfer.TransferInjections)
         self.migration_inject = None
+        #: supervisor readiness gate: a draining/dead site stops admitting —
+        #: submits reject (accounted) while in-flight work keeps streaming
+        self.admitting = True
 
     # ------------------------------------------------------------------
     # submission
@@ -464,7 +478,11 @@ class ServingPlane:
                hint_total_ms: Optional[float] = None,
                prompt=None, resume: bool = False) -> Optional[Request]:
         """Enqueue one request; returns None when admission control rejects
-        it (bounded-queue planes), after accounting the rejection."""
+        it (bounded-queue planes, or a plane gated closed by its
+        supervisor), after accounting the rejection."""
+        if not self.admitting:
+            self.scheduler.stats.rejected += 1
+            return None
         now = self.clock.now()
         self._arrivals.append(now)
         if self.max_queue is not None and \
@@ -667,6 +685,29 @@ class ServingPlane:
         self.scheduler.put_queued(handoff.queued)
         if handoff.queued:
             self._admit()
+
+    def fail_all(self, cause: FailureCause) -> int:
+        """Crash semantics: every running AND queued request fails with
+        ``cause`` through the normal served-and-failed accounting (results
+        land in the outbox so telemetry attributes them), pending completion
+        events are dropped, and the plane stops admitting. Returns the
+        number of requests failed. The backend is NOT consulted — a crashed
+        engine cannot be asked to release anything."""
+        self.admitting = False
+        n = 0
+        for req in list(self.scheduler.running.values()):
+            self.scheduler.detach(req.request_id)
+            self._active_sessions.discard(req.session_id)
+            self._finish(req, ttfb_ms=req.hint_ttfb_ms or 0.0,
+                         completed=False, failed=cause)
+            n += 1
+        for q in self.scheduler.queues.values():
+            while q:
+                req = q.popleft()
+                self._finish(req, ttfb_ms=0.0, completed=False, failed=cause)
+                n += 1
+        self._events.clear()
+        return n
 
     # ------------------------------------------------------------------
     # driving

@@ -76,6 +76,10 @@ class AIaaSServer:
         # sessions established directly on the orchestrator serve identically
         self.gateway = gateway if gateway is not None \
             else NorthboundGateway(orch)
+        # fleet-ops layer: per-site liveness/readiness, graceful drain,
+        # crash detection + re-anchoring (repro.serving.supervisor)
+        from repro.serving.supervisor import FleetSupervisor
+        self.supervisor = FleetSupervisor(orch)
         # make-before-break migration rides the orchestrator's default
         # PlaneTransferPath, which resolves these attached planes: export on
         # the source engine → fingerprint-verified import on the target →

@@ -528,6 +528,29 @@ def simulate_migration_under_load(*, n_sessions: int = 40, rounds: int = 3,
 # ----------------------------------------------------------------------
 # federation: roaming across an operator boundary + overload spillover
 # ----------------------------------------------------------------------
+def _fed_catalog():
+    """Single-model catalog (edge-tiny) shared by the federation and chaos
+    scenarios: DISCOVER stays O(sites), not O(sites × catalog)."""
+    from repro.core.catalog import Catalog, default_catalog
+
+    c = Catalog()
+    c.register(default_catalog().get("edge-tiny"))
+    return c
+
+
+def _fed_site(clock: VirtualClock, site_id: str, rtt: dict, slots: int,
+              *, kind: str = "edge"):
+    from repro.core.sites import ExecutionSite, SiteSpec
+
+    v5e_flops, v5e_bw, hbm = 197e12, 819e9, 16e9
+    return ExecutionSite(SiteSpec(
+        site_id, kind, "eu", chips=16, hbm_bytes_total=16 * hbm,
+        peak_flops=16 * v5e_flops, hbm_bw=16 * v5e_bw,
+        decode_slots=slots, rtt_ms=dict(rtt),
+        hosted_models=("edge-tiny@1.0",),
+        price_per_chip_s=2.0e-4), clock)
+
+
 def _federation_pair(clock: VirtualClock, *, home_slots: int,
                      visited_slots: int, transit_ms: float = 5.0,
                      solicit: str = "fallback"):
@@ -535,39 +558,23 @@ def _federation_pair(clock: VirtualClock, *, home_slots: int,
     edge is close to zone-a and hopeless from zone-b, the visited edge the
     reverse — crossing the zone boundary is crossing the domain boundary."""
     from repro.core import Orchestrator
-    from repro.core.catalog import Catalog, default_catalog
-    from repro.core.sites import ExecutionSite, SiteSpec
     from repro.federation import DomainController, FederationRegistry
-
-    def cat():
-        c = Catalog()
-        c.register(default_catalog().get("edge-tiny"))
-        return c
-
-    def site(site_id, rtt, slots):
-        v5e_flops, v5e_bw, hbm = 197e12, 819e9, 16e9
-        return ExecutionSite(SiteSpec(
-            site_id, "edge", "eu", chips=16, hbm_bytes_total=16 * hbm,
-            peak_flops=16 * v5e_flops, hbm_bw=16 * v5e_bw,
-            decode_slots=slots, rtt_ms=dict(rtt),
-            hosted_models=("edge-tiny@1.0",),
-            price_per_chip_s=2.0e-4), clock)
 
     registry = FederationRegistry(clock)
     home = DomainController(
         "home", registry, solicit=solicit,
         orchestrator=Orchestrator(
-            clock=clock, catalog=cat(),
-            sites={"h-edge": site("h-edge",
-                                  {"zone-a": 2.0, "zone-b": 400.0},
-                                  home_slots)}))
+            clock=clock, catalog=_fed_catalog(),
+            sites={"h-edge": _fed_site(clock, "h-edge",
+                                       {"zone-a": 2.0, "zone-b": 400.0},
+                                       home_slots)}))
     visited = DomainController(
         "visited", registry, solicit=solicit,
         orchestrator=Orchestrator(
-            clock=clock, catalog=cat(),
-            sites={"v-edge": site("v-edge",
-                                  {"zone-a": 25.0, "zone-b": 2.0},
-                                  visited_slots)}))
+            clock=clock, catalog=_fed_catalog(),
+            sites={"v-edge": _fed_site(clock, "v-edge",
+                                       {"zone-a": 25.0, "zone-b": 2.0},
+                                       visited_slots)}))
     home.connect(visited, transit_ms=transit_ms)
     return home, visited
 
@@ -774,3 +781,369 @@ def simulate_payload_asymmetry(*, context_tokens: Tuple[int, ...] =
                 transfer_ms=out.transfer_ms, migrated=out.migrated,
                 cause=out.cause.value if out.cause else None))
     return rows
+
+
+# ----------------------------------------------------------------------
+# chaos: site crash, graceful drain, domain partition, registry storms
+# ----------------------------------------------------------------------
+def _chaos_sites(clock: VirtualClock, n_sessions: int):
+    """Federation-scale 3-site topology sized so a crashed edge's orphans
+    always FIT elsewhere: each edge holds half the fleet, the regional tier
+    holds all of it — survival shortfalls are supervisor bugs, not
+    capacity artifacts. RTTs mirror ``default_sites``."""
+    edge_slots = max(64, (2 * n_sessions) // 4)
+    regional_slots = max(256, n_sessions)
+    return {
+        "edge-a": _fed_site(clock, "edge-a",
+                            {"zone-a": 2.0, "zone-b": 9.0, "zone-c": 18.0},
+                            edge_slots),
+        "edge-b": _fed_site(clock, "edge-b",
+                            {"zone-a": 9.0, "zone-b": 2.0, "zone-c": 10.0},
+                            edge_slots),
+        "regional-1": _fed_site(clock, "regional-1",
+                                {"zone-a": 12.0, "zone-b": 12.0,
+                                 "zone-c": 12.0},
+                                regional_slots, kind="regional"),
+    }
+
+
+@dataclass
+class SiteCrashResult:
+    n_sessions: int
+    orphaned: int                  # anchored on the crash site at T0
+    reanchored: int
+    lost: int
+    survival_frac: float
+    failed_inflight: int           # in-flight+queued attributed COMPUTE_SCARCITY
+    recovery_ms_p50: float         # wall-clock per-session re-anchor time
+    recovery_ms_p99: float
+    causes: Dict[str, int]         # Eq. 12 causes of the lost sessions
+    reanchor_sites: Dict[str, int]  # where the orphans landed
+    serve_ok_after: int            # sampled re-anchored sessions that serve
+    post_crash_establish_ok: bool  # new establishes avoid the dead site
+
+
+def simulate_site_crash(*, n_sessions: int = 10_000,
+                        crash_site: str = "edge-a",
+                        inflight: int = 256,
+                        serve_sample: int = 64,
+                        seed: int = 0) -> SiteCrashResult:
+    """Site crash mid-stream at federation scale: ``n_sessions`` AIS
+    establish across a 3-site topology, ``inflight`` requests are queued on
+    the doomed site's plane, then the supervisor declares it dead. Every
+    in-flight request must fail attributably (COMPUTE_SCARCITY — the
+    anchor's compute vanished mid-contract) and every orphaned session
+    re-anchors via AI-PAGING onto a surviving site, with per-session
+    wall-clock recovery time measured — the acceptance bar is ≥99%
+    survival, which the recovery bench guards in CI."""
+    from repro.core import Orchestrator, default_asp
+    from repro.core.asp import QualityTier
+    from repro.serving.supervisor import FleetSupervisor
+
+    rng = np.random.default_rng(seed)
+    clock = VirtualClock()
+    orch = Orchestrator(clock=clock, catalog=_fed_catalog(),
+                        sites=_chaos_sites(clock, n_sessions))
+    asp = default_asp(tier=QualityTier.BASIC)
+    zones = ("zone-a", "zone-b", "zone-c")
+    sessions = []
+    for i in range(n_sessions):
+        sessions.append(orch.establish(asp, invoker=f"ue-{i}",
+                                       zone=zones[i % 3]))
+    on_site = [s for s in sessions
+               if s.binding is not None and s.binding.site_id == crash_site]
+    # queue live work on the doomed plane — these are the requests the
+    # crash must attribute, not silently drop
+    targets = [on_site[int(j)] for j in
+               rng.integers(0, len(on_site), size=min(inflight,
+                                                      len(on_site)))]
+    for s in targets:
+        orch.submit(s, prompt_tokens=64, gen_tokens=16)
+
+    sup = FleetSupervisor(orch)
+    report = sup.crash(crash_site, detail="chaos: simulated site crash")
+
+    landed: Dict[str, int] = {}
+    for s in on_site:
+        if s.committed() and s.binding is not None:
+            landed[s.binding.site_id] = landed.get(s.binding.site_id, 0) + 1
+    # continuity: a sample of the re-anchored fleet keeps serving
+    survivors = [s for s in on_site if s.committed()]
+    serve_ok = 0
+    for s in survivors[:serve_sample]:
+        clock.advance(0.001)
+        res = orch.serve(s, prompt_tokens=64, gen_tokens=16)
+        serve_ok += int(res.completed)
+    # the dead site is DISCOVER-excluded: a fresh establish still lands
+    try:
+        fresh = orch.establish(asp, invoker="ue-post", zone="zone-a")
+        post_ok = fresh.binding is not None \
+            and fresh.binding.site_id != crash_site
+    except Exception:               # noqa: BLE001
+        post_ok = False
+
+    ms = sorted(report.recovery_ms)
+    return SiteCrashResult(
+        n_sessions=n_sessions, orphaned=report.orphaned,
+        reanchored=report.reanchored, lost=report.lost,
+        survival_frac=report.survival_frac,
+        failed_inflight=report.failed_inflight,
+        recovery_ms_p50=float(np.quantile(np.asarray(ms), 0.50))
+        if ms else 0.0,
+        recovery_ms_p99=float(np.quantile(np.asarray(ms), 0.99))
+        if ms else 0.0,
+        causes=dict(report.causes), reanchor_sites=landed,
+        serve_ok_after=serve_ok, post_crash_establish_ok=post_ok)
+
+
+@dataclass
+class DrainUnderLoadResult:
+    n_sessions: int
+    on_site: int                   # sessions anchored at the drain site
+    migrated: int
+    hibernated: int
+    stranded: int
+    failed_inflight: int           # MUST be zero: drain is graceful
+    completed_during_drain: int
+    post_serve_ok: int             # migrated sessions serving elsewhere
+    rejects_after_drain: bool      # drained plane refuses new admissions
+
+
+def simulate_drain_under_load(*, n_sessions: int = 120,
+                              drain_site: str = "edge-a",
+                              inflight: int = 32,
+                              seed: int = 0) -> DrainUnderLoadResult:
+    """Graceful drain with live traffic: sessions serve (so their engine
+    state exists to export), more requests sit queued on the draining
+    site, then the supervisor drains it. Every in-flight request finishes
+    — zero failures — and every bound session leaves make-before-break
+    (hibernation is the fallback for state that cannot move)."""
+    from repro.core import Orchestrator, default_asp
+    from repro.core.asp import QualityTier
+    from repro.serving.supervisor import FleetSupervisor
+
+    rng = np.random.default_rng(seed)
+    clock = VirtualClock()
+    orch = Orchestrator(clock=clock)
+    asp = default_asp(tier=QualityTier.BASIC)
+    sessions = []
+    for i in range(n_sessions):
+        s = orch.establish(asp, invoker=f"ue-{i}", zone="zone-a")
+        clock.advance(0.001)
+        orch.serve(s, prompt_tokens=64, gen_tokens=16)   # live engine state
+        sessions.append(s)
+    on_site = [s for s in sessions
+               if s.binding is not None and s.binding.site_id == drain_site]
+    targets = [on_site[int(j)] for j in
+               rng.integers(0, len(on_site), size=min(inflight,
+                                                      len(on_site)))]
+    for s in targets:
+        orch.submit(s, prompt_tokens=64, gen_tokens=16)
+
+    sup = FleetSupervisor(orch)
+    report = sup.drain(drain_site)
+
+    # continuity on the new anchors — and the drained plane stays closed
+    post_ok = 0
+    for s in on_site:
+        if not s.committed():
+            continue
+        clock.advance(0.001)
+        res = orch.serve(s, prompt_tokens=64, gen_tokens=16)
+        post_ok += int(res.completed)
+    plane = orch.sites[drain_site].plane
+    rejected = plane is None or plane.submit(
+        session_id="drain-probe", klass="best-effort", prompt_tokens=8,
+        gen_tokens=8, t_max_ms=2000.0) is None
+    return DrainUnderLoadResult(
+        n_sessions=n_sessions, on_site=len(on_site),
+        migrated=report.migrated, hibernated=report.hibernated,
+        stranded=report.stranded, failed_inflight=report.failed_inflight,
+        completed_during_drain=report.completed,
+        post_serve_ok=post_ok, rejects_after_drain=rejected)
+
+
+@dataclass
+class PartitionResult:
+    established_home: int
+    established_visited: int
+    partition_failures: int        # zone-b establishes during the partition
+    partition_causes: Dict[str, int]
+    timeout_notes: int             # solicit notes while the link black-holes
+    dead_notes: int                # solicit notes after domain marked dead
+    home_serve_ok_during: int      # home-anchored continuity under partition
+    healed_established: int        # zone-b establishes after the heal
+
+
+def simulate_domain_partition(*, n_sessions: int = 24,
+                              heal_establishes: int = 4) -> PartitionResult:
+    """East-west partition between two peered domains: zone-b traffic that
+    spilled to the visited operator loses its path home. During the
+    partition new zone-b establishes fail attributably (the peer reads as
+    offer-timeout until the supervisor marks the domain dead, then as
+    domain-dead without burning the timeout), home-anchored sessions are
+    untouched, and healing the link restores spillover."""
+    from repro.core import default_asp
+    from repro.core.asp import QualityTier
+    from repro.core.session import SessionError
+
+    clock = VirtualClock()
+    home, visited = _federation_pair(
+        clock, home_slots=n_sessions, visited_slots=2 * n_sessions)
+    asp = default_asp(tier=QualityTier.BASIC)
+    at_home, abroad = [], []
+    for i in range(n_sessions):
+        clock.advance(0.001)
+        zone = "zone-a" if i % 2 == 0 else "zone-b"
+        s = home.core.establish(asp, invoker=f"ue-{i}", zone=zone)
+        (abroad if s.binding.site_id.startswith("visited/")
+         else at_home).append(s)
+
+    # partition: the east-west link black-holes (any send raises)
+    endpoint = home.peers["visited"]
+
+    def _severed(_msg: str) -> str:
+        raise ConnectionError("east-west link partitioned")
+
+    home.peers["visited"] = _severed
+    _, notes = home.solicit_offers(asp, "zone-b")
+    timeout_notes = sum(1 for _, why in notes if why == "offer-timeout")
+
+    failures, causes = 0, {}
+    for i in range(n_sessions // 2):
+        clock.advance(0.001)
+        try:
+            home.core.establish(asp, invoker=f"part-{i}", zone="zone-b")
+        except SessionError as e:
+            failures += 1
+            causes[e.cause.value] = causes.get(e.cause.value, 0) + 1
+
+    # supervisor verdict: stop probing the corpse — fast-fail via the
+    # dead-domain list instead of eating a timeout per solicit
+    home.mark_domain_dead("visited")
+    _, notes = home.solicit_offers(asp, "zone-b")
+    dead_notes = sum(1 for _, why in notes if why == "domain-dead")
+
+    serve_ok = 0
+    for s in at_home:
+        clock.advance(0.001)
+        res = home.core.serve(s, prompt_tokens=64, gen_tokens=16)
+        serve_ok += int(res.completed)
+
+    # heal: link back, domain alive, re-peer (re-registers the provider
+    # that mark_domain_dead dropped) — spillover resumes
+    home.peers["visited"] = endpoint
+    home.mark_domain_alive("visited")
+    home.connect(visited)
+    healed = 0
+    for i in range(heal_establishes):
+        clock.advance(0.001)
+        s = home.core.establish(asp, invoker=f"heal-{i}", zone="zone-b")
+        healed += int(s.binding.site_id.startswith("visited/"))
+    return PartitionResult(
+        established_home=len(at_home), established_visited=len(abroad),
+        partition_failures=failures, partition_causes=causes,
+        timeout_notes=timeout_notes, dead_notes=dead_notes,
+        home_serve_ok_during=serve_ok, healed_established=healed)
+
+
+def _federation_star(clock: VirtualClock, *, n_domains: int,
+                     home_slots: int, peer_slots: int):
+    """One home domain peered with ``n_domains`` visited domains on a
+    SHARED registry: the home edge is only good from zone-a, every peer is
+    only good from zone-b — zone-b traffic exists solely as east-west
+    spillover, so registry health IS admission health for that zone."""
+    from repro.core import Orchestrator
+    from repro.federation import DomainController, FederationRegistry
+
+    registry = FederationRegistry(clock)
+    home = DomainController(
+        "home", registry, solicit="fallback",
+        orchestrator=Orchestrator(
+            clock=clock, catalog=_fed_catalog(),
+            sites={"h-edge": _fed_site(clock, "h-edge",
+                                       {"zone-a": 2.0, "zone-b": 400.0},
+                                       home_slots)}))
+    peers = []
+    for k in range(n_domains):
+        dom = DomainController(
+            f"op-{k}", registry, solicit="fallback",
+            orchestrator=Orchestrator(
+                clock=clock, catalog=_fed_catalog(),
+                sites={f"edge-{k}": _fed_site(
+                    clock, f"edge-{k}",
+                    {"zone-a": 25.0, "zone-b": 2.0 + 0.1 * k},
+                    peer_slots)}))
+        home.connect(dom)
+        peers.append(dom)
+    return home, peers
+
+
+@dataclass
+class StalenessStormResult:
+    n_domains: int
+    established_pre: int           # zone-b spillover before the storm
+    stale_notes: int               # per-domain registry-stale exclusions
+    storm_failures: int            # zone-b establishes during the storm
+    storm_causes: Dict[str, int]
+    established_post_recovery: int  # after ONE provider re-registers
+
+
+def simulate_registry_staleness_storm(*, n_domains: int = 6,
+                                      n_sessions: int = 60,
+                                      seed: int = 0) -> StalenessStormResult:
+    """Registry-staleness storm: every peer's capability digest ages past
+    ``max_age_s`` with its re-pull provider gone (the failure mode of a
+    crashed federation registry sync). All zone-b admission collapses with
+    per-domain ``registry-stale`` notes — attributable, not mysterious —
+    and recovering a single provider restores spillover through that
+    domain alone."""
+    from repro.core import default_asp
+    from repro.core.asp import QualityTier
+    from repro.core.session import SessionError
+
+    clock = VirtualClock()
+    home, peers = _federation_star(
+        clock, n_domains=n_domains, home_slots=4,
+        peer_slots=max(4, (2 * n_sessions) // n_domains))
+    asp = default_asp(tier=QualityTier.BASIC)
+
+    pre = 0
+    for i in range(n_sessions):
+        clock.advance(0.001)
+        s = home.core.establish(asp, invoker=f"ue-{i}", zone="zone-b")
+        pre += int(s.binding.site_id.startswith("op-"))
+
+    # the storm: providers vanish, then every digest ages out at once
+    for dom in peers:
+        home.registry.drop_provider(dom.domain_id)
+    clock.advance(home.registry.max_age_s + 1.0)
+    _, notes = home.solicit_offers(asp, "zone-b")
+    stale_notes = sum(1 for _, why in notes if why == "registry-stale")
+
+    failures, causes = 0, {}
+    for i in range(n_domains):
+        clock.advance(0.001)
+        try:
+            home.core.establish(asp, invoker=f"storm-{i}", zone="zone-b")
+        except SessionError as e:
+            failures += 1
+            causes[e.cause.value] = causes.get(e.cause.value, 0) + 1
+
+    # recovery: ONE domain's provider re-registers → its digest re-pulls
+    # fresh on the next solicit and spillover resumes through it
+    survivor = peers[0]
+    home.registry.register_provider(survivor.domain_id, survivor.digest)
+    post = 0
+    for i in range(4):
+        clock.advance(0.001)
+        try:
+            s = home.core.establish(asp, invoker=f"rec-{i}", zone="zone-b")
+            post += int(s.binding.site_id.startswith(
+                f"{survivor.domain_id}/"))
+        except SessionError:
+            pass
+    return StalenessStormResult(
+        n_domains=n_domains, established_pre=pre, stale_notes=stale_notes,
+        storm_failures=failures, storm_causes=causes,
+        established_post_recovery=post)

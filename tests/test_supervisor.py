@@ -1,0 +1,415 @@
+"""Site supervisor: health probes, graceful drain, crash re-anchoring —
+plus the heartbeat-path crash fixes that ride along (store-full
+degradation, hibernation timestamps, unknown-site-kind predictors,
+hoisted hot-path imports)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Orchestrator, default_asp
+from repro.core.asp import QualityTier
+from repro.core.clock import VirtualClock
+from repro.core.discovery import discover
+from repro.core.failures import FailureCause
+from repro.core.session import SessionError, SessionState
+from repro.serving.supervisor import FleetSupervisor, SiteHealth
+
+CFG = get_config("edge-tiny")
+ASP = default_asp(tier=QualityTier.BASIC)
+
+
+def _orch(clock=None):
+    return Orchestrator(clock=clock or VirtualClock())
+
+
+def _establish(orch, n, zone="zone-a", prefix="ue"):
+    out = []
+    for i in range(n):
+        s = orch.establish(ASP, invoker=f"{prefix}-{i}", zone=zone)
+        orch.clock.advance(0.001)
+        orch.serve(s, prompt_tokens=32, gen_tokens=8)   # live engine state
+        out.append(s)
+    return out
+
+
+# ----------------------------------------------------------------------
+# satellite fixes on the heartbeat path
+# ----------------------------------------------------------------------
+class TestStoreFullDegradation:
+    def test_tick_survives_full_store_and_reports(self):
+        """A capacity-bounded HibernationStore refusing puts must degrade
+        the heartbeat tick, never crash it — refusals surface through
+        PlaneLoad.store_full as back-pressure."""
+        from repro.core.clock import Clock
+        from repro.serving.engine import InferenceEngine
+        from repro.serving.hibernation import HibernationStore
+        from repro.serving.plane import RealEngineBackend, ServingPlane
+
+        store = HibernationStore(capacity_bytes=16)    # below any payload
+        eng = InferenceEngine(CFG, slots=2, max_len=64, paged=True,
+                              page_size=16, hibernation=store)
+        clock = Clock()
+        plane = ServingPlane(
+            clock, RealEngineBackend(eng, clock, hibernate_idle_s=0.0),
+            slots=2, site_id="s", premium_reserved_frac=0.0)
+        rng = np.random.default_rng(0)
+        for i in range(4):
+            r = plane.serve(
+                session_id=f"u{i}", klass="best-effort", prompt_tokens=8,
+                gen_tokens=4, t_max_ms=1e12,
+                prompt=rng.integers(0, CFG.vocab_size, 8).astype(np.int32))
+            assert not r.failed
+            load = plane.load()            # the tick that used to abort
+        assert load.store_full > 0
+        assert load.hibernated_sessions == 0
+        assert store.store_full == load.store_full
+
+    def test_hibernate_slot_returns_false_on_full_store(self):
+        from repro.serving.engine import InferenceEngine
+        from repro.serving.hibernation import HibernationStore
+
+        eng = InferenceEngine(CFG, slots=2, max_len=64,
+                              hibernation=HibernationStore(capacity_bytes=8))
+        eng.prefill_session("a", np.arange(6, dtype=np.int32))
+        assert eng.hibernate_slot("a") is False
+        assert eng.has_slot("a")           # state intact, nothing freed
+        assert eng.hibernation.store_full == 1
+
+
+class TestHibernationTimestamps:
+    def test_hibernated_at_tracks_clock(self):
+        """HibernationRecord.hibernated_at was always 0.0 — the engine now
+        threads its clock through so idle-TTL policy has real times."""
+        from repro.serving.engine import InferenceEngine
+
+        clock = VirtualClock()
+        clock.advance(5.0)
+        eng = InferenceEngine(CFG, slots=2, max_len=64, hibernation=True,
+                              clock=clock)
+        eng.prefill_session("a", np.arange(6, dtype=np.int32))
+        eng.hibernate_slot("a")
+        rec = eng.hibernation.record("a")
+        assert rec.hibernated_at == pytest.approx(5.0)
+        clock.advance(7.0)
+        eng.resume_slot("a")
+        eng.hibernate_slot("a")
+        assert eng.hibernation.record("a").hibernated_at == pytest.approx(12.0)
+
+
+class TestPredictorUnknownKind:
+    def test_unknown_site_kind_predicts_like_regional(self):
+        """A site kind outside {edge, regional, central} must not KeyError
+        the feasibility predictor (Eq. 7-9) — it defaults to the regional
+        arrival assumption."""
+        from repro.core.qos import BEST_EFFORT
+        from repro.core.sites import ExecutionSite, SiteSpec
+
+        orch = _orch()
+        metro = ExecutionSite(SiteSpec(
+            "metro-1", "metro", "eu", chips=16, hbm_bytes_total=16 * 16e9,
+            peak_flops=16 * 197e12, hbm_bw=16 * 819e9, decode_slots=64,
+            rtt_ms={"zone-a": 4.0}, hosted_models=("edge-tiny@1.0",),
+            price_per_chip_s=2.0e-4), orch.clock)
+        model = orch.catalog.get("edge-tiny")
+        pred = orch.predictors.predict(ASP, model, metro, "zone-a",
+                                       BEST_EFFORT)
+        assert pred.t_ff_ms > 0 and pred.l99_ms > pred.t_ff_ms
+
+
+class TestHoistedImports:
+    def test_plane_module_imports_at_module_level(self):
+        """numpy/zlib were imported per-call inside admission hot paths;
+        they now live at module scope."""
+        import inspect
+
+        import repro.serving.plane as plane_mod
+
+        assert plane_mod.np is np
+        assert hasattr(plane_mod, "zlib")
+        src = inspect.getsource(plane_mod)
+        body_lines = [ln for ln in src.splitlines()
+                      if ln.startswith("        import ")
+                      or ln.startswith("            import ")]
+        assert not any("numpy" in ln or "zlib" in ln for ln in body_lines)
+
+
+# ----------------------------------------------------------------------
+# supervisor: probes
+# ----------------------------------------------------------------------
+class TestProbe:
+    def test_healthy_probe_is_live_and_ready(self):
+        orch = _orch()
+        _establish(orch, 2)
+        sup = FleetSupervisor(orch)
+        res = sup.probe_all()
+        assert set(res) == set(orch.sites)
+        assert all(r.live and r.ready for r in res.values())
+        assert res["edge-a"].load is not None
+
+    def test_gated_plane_is_live_but_not_ready(self):
+        orch = _orch()
+        _establish(orch, 1)
+        orch.sites["edge-a"].plane.admitting = False
+        sup = FleetSupervisor(orch)
+        r = sup["edge-a"].probe()
+        assert r.live and not r.ready
+
+    def test_probe_misses_escalate_to_crash(self):
+        """miss_threshold consecutive heartbeat-tick failures declare the
+        site dead and fire the full crash path — a probe itself never
+        raises."""
+        orch = _orch()
+        sessions = _establish(orch, 3)
+        on_a = [s for s in sessions if s.binding.site_id == "edge-a"]
+        sup = FleetSupervisor(orch, miss_threshold=2)
+
+        def broken_load():
+            raise RuntimeError("device wedged")
+
+        orch.sites["edge-a"].plane.load = broken_load
+        r1 = sup["edge-a"].probe()
+        assert not r1.live and r1.state is SiteHealth.SUSPECT
+        r2 = sup["edge-a"].probe()
+        assert r2.state is SiteHealth.DEAD
+        assert orch.sites["edge-a"].dead
+        # orphans were re-anchored by the fired crash path
+        for s in on_a:
+            assert s.committed() and s.binding.site_id != "edge-a"
+
+    def test_probe_feeds_analytics(self):
+        """Supervisor cadence reaches the ξ loop even when no session
+        heartbeat lands on the site."""
+        orch = _orch()
+        sessions = _establish(orch, 1)
+        sid = sessions[0].binding.site_id      # the one site with a plane
+        sup = FleetSupervisor(orch)
+        epoch0 = orch.analytics.load_epoch(sid)
+        sup[sid].probe()
+        assert orch.analytics.load_epoch(sid) != epoch0
+
+
+# ----------------------------------------------------------------------
+# supervisor: graceful drain
+# ----------------------------------------------------------------------
+class TestDrain:
+    def test_drain_under_load_loses_nothing(self):
+        """Every in-flight request finishes, every bound session leaves
+        (migrated, hibernation fallback), the plane refuses new work."""
+        orch = _orch()
+        sessions = _establish(orch, 8)
+        on_a = [s for s in sessions if s.binding.site_id == "edge-a"]
+        assert on_a, "no sessions landed on edge-a"
+        for s in on_a[:4]:
+            assert orch.submit(s, prompt_tokens=16, gen_tokens=8)
+        sup = FleetSupervisor(orch)
+        rep = sup.drain("edge-a")
+        assert rep.sessions == len(on_a)
+        assert rep.failed_inflight == 0
+        assert rep.stranded == 0
+        assert rep.migrated + rep.hibernated == len(on_a)
+        assert sup["edge-a"].state is SiteHealth.DRAINED
+        # sessions serve on their new anchors; the drained plane is closed
+        for s in on_a:
+            if s.committed():
+                assert s.binding.site_id != "edge-a"
+                assert orch.serve(s, prompt_tokens=16, gen_tokens=8).completed
+        plane = orch.sites["edge-a"].plane
+        assert plane.submit(session_id="x", klass="best-effort",
+                            prompt_tokens=8, gen_tokens=8,
+                            t_max_ms=2000.0) is None
+
+    def test_drain_keeps_lease_table(self):
+        """Drain is an exit, not a crash: the site is denied, not dead."""
+        orch = _orch()
+        _establish(orch, 2)
+        FleetSupervisor(orch).drain("edge-a")
+        assert not orch.sites["edge-a"].dead
+        assert not orch.analytics.site_context("edge-a").healthy
+        assert orch.analytics.site_context("edge-a").alive
+
+
+# ----------------------------------------------------------------------
+# supervisor: crash + re-anchoring
+# ----------------------------------------------------------------------
+class TestCrash:
+    def test_crash_attributes_and_reanchors(self):
+        orch = _orch()
+        sessions = _establish(orch, 8)
+        on_a = [s for s in sessions if s.binding.site_id == "edge-a"]
+        assert on_a
+        n_inflight = 0
+        for s in on_a[:3]:
+            if orch.submit(s, prompt_tokens=16, gen_tokens=8):
+                n_inflight += 1
+        sup = FleetSupervisor(orch)
+        rep = sup.crash("edge-a")
+        assert rep.orphaned == len(on_a)
+        assert rep.reanchored == len(on_a) and rep.lost == 0
+        assert rep.survival_frac == 1.0
+        assert rep.failed_inflight == n_inflight
+        assert len(rep.recovery_ms) == rep.reanchored
+        for s in on_a:
+            assert s.committed() and s.binding.site_id != "edge-a"
+            assert any("re-anchored:edge-a->" in ev for _, ev in s.history)
+
+    def test_inflight_failure_is_compute_scarcity(self):
+        """Requests queued on the crashed plane reach the invoker-visible
+        record with the Eq. 12 cause, not a silent drop."""
+        orch = _orch()
+        seen = []
+        orch.result_sinks.append(lambda site, res: seen.append(res))
+        sessions = _establish(orch, 4)
+        on_a = [s for s in sessions if s.binding.site_id == "edge-a"]
+        req = orch.submit(on_a[0], prompt_tokens=16, gen_tokens=8)
+        assert req is not None
+        FleetSupervisor(orch).crash("edge-a")
+        failed = [r for r in seen if r.failed is not None]
+        assert any(r.request_id == req.request_id and
+                   r.failed is FailureCause.COMPUTE_SCARCITY for r in failed)
+
+    def test_dead_site_excluded_from_discover(self):
+        orch = _orch()
+        _establish(orch, 2)
+        FleetSupervisor(orch).crash("edge-a")
+        cands = discover(ASP, orch.catalog, orch.sites, orch.predictors,
+                         "zone-a", analytics=orch.analytics)
+        dead = [c for c in cands if c.site_id == "edge-a"]
+        assert dead and all(c.exclusion_reason == "site-dead" for c in dead)
+        # PREPARE against the dead site refuses with the same cause
+        model = orch.catalog.get("edge-tiny")
+        with pytest.raises(SessionError) as ei:
+            orch.sites["edge-a"].prepare(model, slots=1, cache_bytes=0.0,
+                                         ttl_s=2.0)
+        assert ei.value.cause is FailureCause.COMPUTE_SCARCITY
+        # fresh establishes still land — elsewhere
+        s = orch.establish(ASP, invoker="post", zone="zone-a")
+        assert s.binding.site_id != "edge-a"
+
+    def test_no_surviving_candidate_is_attributable(self):
+        """Crash with every other site already dead: orphans FAIL with an
+        Eq. 12 cause instead of lingering half-bound."""
+        orch = _orch()
+        sessions = _establish(orch, 2)
+        sup = FleetSupervisor(orch)
+        for sid in orch.sites:
+            if sid != "edge-a":
+                orch.sites[sid].mark_dead()
+                orch.analytics.mark_site_dead(sid)
+        on_a = [s for s in sessions if s.binding.site_id == "edge-a"]
+        rep = sup.crash("edge-a")
+        assert rep.reanchored == 0 and rep.lost == len(on_a)
+        assert set(rep.causes) <= {FailureCause.COMPUTE_SCARCITY.value,
+                                   FailureCause.NO_FEASIBLE_BINDING.value}
+        for s in on_a:
+            assert s.state is SessionState.FAILED
+
+    def test_revive_reopens_the_site(self):
+        orch = _orch()
+        _establish(orch, 2)
+        sup = FleetSupervisor(orch)
+        sup.crash("edge-a")
+        sup.revive("edge-a")
+        assert not orch.sites["edge-a"].dead
+        assert sup["edge-a"].state is SiteHealth.HEALTHY
+        s = orch.establish(ASP, invoker="back", zone="zone-a")
+        assert s.committed()   # edge-a is a candidate again
+
+    def test_reanchor_restores_from_surviving_store(self):
+        """A hibernation store that outlives the crashed engine seeds the
+        new anchor: position and state carry over bit-exactly."""
+        from repro.serving.hibernation import HibernationStore
+
+        orch = _orch()
+        sessions = _establish(orch, 2)
+        s = next(x for x in sessions if x.binding.site_id == "edge-a")
+        src_backend = orch.plane_for(orch.sites["edge-a"]).backend
+        store = HibernationStore()
+        store.put(s.session_id, src_backend.export_slot(s.session_id))
+        orch.sites["edge-a"].mark_dead()
+        orch.analytics.mark_site_dead("edge-a")
+        out = orch.reanchor(s, state_source=store)
+        assert out.ok and out.restored
+        assert not store.has(s.session_id)      # dropped after the import
+        new_backend = orch.plane_for(orch.sites[out.to_site]).backend
+        assert new_backend.has_slot(s.session_id)
+        assert orch.serve(s, prompt_tokens=16, gen_tokens=8).completed
+
+    def test_corrupt_store_copy_degrades_to_fresh_context(self):
+        class CorruptStore:
+            def has(self, sid):
+                return True
+
+            def restore(self, sid):
+                raise IOError("fingerprint mismatch")
+
+        orch = _orch()
+        sessions = _establish(orch, 2)
+        s = next(x for x in sessions if x.binding.site_id == "edge-a")
+        orch.sites["edge-a"].mark_dead()
+        orch.analytics.mark_site_dead("edge-a")
+        out = orch.reanchor(s, state_source=CorruptStore())
+        assert out.ok and not out.restored
+        assert s.committed() and s.binding.site_id != "edge-a"
+
+
+# ----------------------------------------------------------------------
+# federation: dead domains
+# ----------------------------------------------------------------------
+class TestDeadDomain:
+    def test_dead_domain_fast_fails_solicit(self):
+        from repro.sim.scenarios import _federation_pair
+
+        clock = VirtualClock()
+        home, visited = _federation_pair(clock, home_slots=8,
+                                         visited_slots=8)
+        offers, notes = home.solicit_offers(ASP, "zone-b")
+        assert offers and not notes
+        home.mark_domain_dead("visited")
+        offers, notes = home.solicit_offers(ASP, "zone-b")
+        assert not offers and ("visited", "domain-dead") in notes
+        home.mark_domain_alive("visited")
+        home.connect(visited)              # re-registers the provider
+        offers, notes = home.solicit_offers(ASP, "zone-b")
+        assert offers and not notes
+
+
+# ----------------------------------------------------------------------
+# chaos scenarios (sim-scale integration of everything above)
+# ----------------------------------------------------------------------
+class TestChaosScenarios:
+    def test_site_crash_scenario(self):
+        from repro.sim.scenarios import simulate_site_crash
+
+        r = simulate_site_crash(n_sessions=240, inflight=24,
+                                serve_sample=8)
+        assert r.survival_frac >= 0.99 and r.lost == 0
+        assert r.failed_inflight == 24
+        assert r.serve_ok_after == 8 and r.post_crash_establish_ok
+        assert "edge-a" not in r.reanchor_sites
+
+    def test_drain_under_load_scenario(self):
+        from repro.sim.scenarios import simulate_drain_under_load
+
+        r = simulate_drain_under_load(n_sessions=48, inflight=12)
+        assert r.failed_inflight == 0 and r.stranded == 0
+        assert r.migrated + r.hibernated == r.on_site
+        assert r.rejects_after_drain
+
+    def test_domain_partition_scenario(self):
+        from repro.sim.scenarios import simulate_domain_partition
+
+        r = simulate_domain_partition(n_sessions=8)
+        assert r.partition_failures == 4
+        assert r.timeout_notes == 1 and r.dead_notes == 1
+        assert r.home_serve_ok_during == r.established_home
+        assert r.healed_established == 4
+
+    def test_registry_staleness_storm_scenario(self):
+        from repro.sim.scenarios import simulate_registry_staleness_storm
+
+        r = simulate_registry_staleness_storm(n_domains=3, n_sessions=18)
+        assert r.established_pre == 18
+        assert r.stale_notes == 3
+        assert r.storm_failures == 3
+        assert r.established_post_recovery > 0
