@@ -1,0 +1,273 @@
+"""Multi-tenant adapter fleet benchmark — the multiplexing numbers.
+
+The claim under test: per-session LoRA multiplexing over a shared base
+costs (nearly) nothing at decode time — a fused chunk whose 32 slots are
+bound to 32 DISTINCT adapters runs at the same tok/s as one where every
+slot shares a single adapter, and both emit tokens identical to applying
+each adapter individually. Three arms:
+
+* ``multiplex`` — fused-decode tok/s with 1 vs N distinct adapters
+  bound across a full batch, interleaved rep-by-rep (engine_bench
+  convention). The guard is the RATIO many/one (same machine, same run —
+  runner speed cancels), not an absolute.
+* ``lifecycle`` — p50/p99 of adapter load (weight pad + device table
+  update) and unload at the engine, the control-plane cost of rotating a
+  tenant fleet through a bounded table.
+* ``identity`` — the correctness bit: a mixed batch {base, tenant-A,
+  tenant-B} must emit, per session, exactly the tokens a solo engine
+  with only that session's adapter emits; and the Pallas grouped-GEMM
+  route must match the XLA gather route token-for-token.
+
+    PYTHONPATH=src python -m benchmarks.adapter_bench [--quick]
+        [--check-baseline] [--write-baseline]
+
+``--check-baseline`` enforces ``benchmarks/baselines/adapters.json``:
+hardware-independent ratios and identity bits only. The CI regression
+guard for the adapter fleet.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import numpy as np  # noqa: E402
+
+from benchmarks import _baseline  # noqa: E402
+from repro.adapters import AdapterRuntime, AdapterSpec, init_adapter_weights  # noqa: E402
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.serving.engine import InferenceEngine  # noqa: E402
+
+BASELINE_NAME = "adapters"
+
+
+def _weights(adapter_id: str, d_model: int, rank: int = 4):
+    spec = AdapterSpec(adapter_id=adapter_id, version="1.0",
+                       base_model_id="edge-tiny", base_model_version="1.0",
+                       rank=rank)
+    return init_adapter_weights(spec, d_model)
+
+
+def _engine(cfg, *, slots, max_adapters, params=None, route="gather"):
+    rt = AdapterRuntime(cfg.d_model, max_adapters=max_adapters, rank=4,
+                        route=route)
+    return InferenceEngine(cfg, params=params, slots=slots, max_len=64,
+                           adapters=rt)
+
+
+def _prompt(i, vocab, n=8):
+    rng = np.random.default_rng(1000 + i)
+    return rng.integers(0, vocab, size=n).astype(np.int32)
+
+
+def bench_multiplex(*, slots: int = 32, gen: int = 16,
+                    reps: int = 5) -> dict:
+    """Fused decode tok/s: every slot on ONE shared adapter vs every
+    slot on its OWN adapter (the worst-case table gather / grouped
+    dispatch), interleaved so machine noise cancels in the ratio."""
+    cfg = get_smoke_config("edge-tiny")
+    one = _engine(cfg, slots=slots, max_adapters=slots)
+    many = _engine(cfg, slots=slots, max_adapters=slots, params=one.params)
+    one.load_adapter("t0", *_weights("t0", cfg.d_model))
+    for i in range(slots):
+        many.load_adapter(f"t{i}", *_weights(f"t{i}", cfg.d_model))
+    for i in range(slots):
+        one.prefill_session(f"s{i}", _prompt(i, cfg.vocab_size),
+                            adapter_id="t0")
+        many.prefill_session(f"s{i}", _prompt(i, cfg.vocab_size),
+                             adapter_id=f"t{i}")
+
+    def chunk(eng):
+        t0 = time.perf_counter()
+        eng.decode_round(steps=gen)
+        return slots * gen / (time.perf_counter() - t0)
+
+    ones, manys, ratios = [], [], []
+    for rep in range(reps + 1):
+        o, m_ = chunk(one), chunk(many)
+        if rep > 0:                        # rep 0 = compile warmup
+            ones.append(o)
+            manys.append(m_)
+            ratios.append(m_ / o)
+    return {"slots": slots, "gen": gen, "distinct_adapters": slots,
+            "one_adapter_tok_s": round(statistics.median(ones), 1),
+            "many_adapters_tok_s": round(statistics.median(manys), 1),
+            "many_over_one": round(statistics.median(ratios), 3)}
+
+
+def jax_block(x):
+    x.block_until_ready()
+
+
+def bench_lifecycle(*, n_adapters: int = 32, sample: int = 16) -> dict:
+    """Adapter load/unload latency at the engine table."""
+    cfg = get_smoke_config("edge-tiny")
+    eng = _engine(cfg, slots=2, max_adapters=n_adapters)
+    pre = [(f"t{i}", *_weights(f"t{i}", cfg.d_model))
+           for i in range(min(sample, n_adapters))]
+    load_ms, unload_ms = [], []
+    for aid, a, b in pre:
+        t0 = time.perf_counter()
+        eng.load_adapter(aid, a, b)
+        jax_block(eng.adapters.A)
+        load_ms.append((time.perf_counter() - t0) * 1e3)
+    for aid, _, _ in pre:
+        t0 = time.perf_counter()
+        eng.unload_adapter(aid)
+        jax_block(eng.adapters.A)
+        unload_ms.append((time.perf_counter() - t0) * 1e3)
+    load_ms.sort()
+    unload_ms.sort()
+
+    def p(xs, q):
+        return round(xs[min(int(q * (len(xs) - 1) + 0.999), len(xs) - 1)], 3)
+
+    return {"sample": len(pre), "table_size": n_adapters,
+            "load_ms_p50": round(statistics.median(load_ms), 3),
+            "load_ms_p99": p(load_ms, 0.99),
+            "unload_ms_p50": round(statistics.median(unload_ms), 3),
+            "unload_ms_p99": p(unload_ms, 0.99)}
+
+
+def bench_identity(*, gen: int = 8) -> dict:
+    """Token identity: mixed multiplexed batch == individual
+    application, and grouped route == gather route."""
+    cfg = get_smoke_config("edge-tiny")
+    sessions = [("s-base", ""), ("s-a", "tenant-a"), ("s-b", "tenant-b")]
+
+    mux = _engine(cfg, slots=4, max_adapters=4)
+    for _, aid in sessions:
+        if aid:
+            mux.load_adapter(aid, *_weights(aid, cfg.d_model))
+    for i, (sid, aid) in enumerate(sessions):
+        mux.prefill_session(sid, _prompt(i, cfg.vocab_size), adapter_id=aid)
+    together = mux.decode_round(steps=gen)
+
+    individual_ok = True
+    for i, (sid, aid) in enumerate(sessions):
+        solo = _engine(cfg, slots=2, max_adapters=4, params=mux.params)
+        if aid:
+            solo.load_adapter(aid, *_weights(aid, cfg.d_model))
+        solo.prefill_session(sid, _prompt(i, cfg.vocab_size), adapter_id=aid)
+        individual_ok = individual_ok and \
+            solo.decode_round(steps=gen)[sid] == together[sid]
+
+    grouped = _engine(cfg, slots=4, max_adapters=4, params=mux.params,
+                      route="grouped")
+    for _, aid in sessions:
+        if aid:
+            grouped.load_adapter(aid, *_weights(aid, cfg.d_model))
+    for i, (sid, aid) in enumerate(sessions):
+        grouped.prefill_session(sid, _prompt(i, cfg.vocab_size),
+                                adapter_id=aid)
+    routes_ok = grouped.decode_round(steps=gen) == together
+
+    return {"sessions": len(sessions), "gen": gen,
+            "mixed_equals_individual": individual_ok,
+            "grouped_equals_gather": routes_ok,
+            "tokens_identical": individual_ok and routes_ok}
+
+
+def run(*, quick: bool = False) -> dict:
+    slots = 8 if quick else 32
+    mux = bench_multiplex(slots=slots, reps=3 if quick else 5)
+    life = bench_lifecycle(n_adapters=slots, sample=8 if quick else 16)
+    ident = bench_identity(gen=6 if quick else 8)
+    out = {"multiplex": mux, "lifecycle": life, "identity": ident}
+    out["holds"] = (ident["tokens_identical"]
+                    and mux["many_over_one"] >= 0.5)
+    return out
+
+
+def check_baseline(result: dict) -> list:
+    """Regression guard, hardware-independent by construction: the one
+    enforced performance metric is the many/one tok-s ratio between two
+    arms interleaved on the same machine (runner speed cancels); the
+    rest are correctness bits. Absolute ms / tok-s figures in the
+    baseline are reference only. Returns failure messages."""
+    base = _baseline.load_baseline(BASELINE_NAME)
+    inv = base["invariants"]
+    mux, ident = result["multiplex"], result["identity"]
+    failures = []
+    if mux["many_over_one"] < inv["many_over_one_min"]:
+        failures.append(
+            f"multiplex: many/one tok-s ratio {mux['many_over_one']:.2f} "
+            f"< floor {inv['many_over_one_min']:.2f} (distinct-adapter "
+            f"batches no longer ride the shared-base hot path)")
+    if not ident["mixed_equals_individual"]:
+        failures.append(
+            "identity: multiplexed batch tokens diverge from individual "
+            "adapter application")
+    if not ident["grouped_equals_gather"]:
+        failures.append(
+            "identity: grouped (Pallas moe_gemm) route diverges from the "
+            "gather route")
+    return failures
+
+
+def figure_rows(*, quick: bool = False):
+    """run.py convention: (csv rows, derived dict)."""
+    out = run(quick=quick)
+    rows = [
+        {"arm": "multiplex", "metric": "one_adapter_tok_s",
+         "value": out["multiplex"]["one_adapter_tok_s"]},
+        {"arm": "multiplex", "metric": "many_adapters_tok_s",
+         "value": out["multiplex"]["many_adapters_tok_s"]},
+        {"arm": "multiplex", "metric": "many_over_one",
+         "value": out["multiplex"]["many_over_one"]},
+        {"arm": "lifecycle", "metric": "load_ms_p50",
+         "value": out["lifecycle"]["load_ms_p50"]},
+        {"arm": "lifecycle", "metric": "unload_ms_p50",
+         "value": out["lifecycle"]["unload_ms_p50"]},
+        {"arm": "identity", "metric": "tokens_identical",
+         "value": int(out["identity"]["tokens_identical"])},
+    ]
+    derived = {"holds": out["holds"],
+               "many_over_one": out["multiplex"]["many_over_one"],
+               "tokens_identical": out["identity"]["tokens_identical"]}
+    return rows, derived
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller fleet / fewer reps")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="enforce benchmarks/baselines/adapters.json "
+                         "ratio invariants (CI guard)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="overwrite the checked-in baseline with this run")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    print(json.dumps(out, indent=1))
+    os.makedirs("artifacts/bench", exist_ok=True)
+    with open("artifacts/bench/adapters.json", "w") as f:
+        json.dump(out, f, indent=1)
+    if args.write_baseline:
+        _baseline.write_baseline(
+            {"_comment": "regression-guard invariants for the multi-tenant "
+                         "adapter fleet. check_baseline enforces "
+                         "HARDWARE-INDEPENDENT metrics only: many/one "
+                         "fused-decode tok/s ratio (32 distinct adapters "
+                         "vs 1 shared, both arms interleaved on the same "
+                         "machine; floor 0.5 sits well under the observed "
+                         "~0.9-1.0) and the two token-identity bits "
+                         "(multiplexed==individual, grouped==gather). "
+                         "Reference absolutes are NOT enforced.",
+             "invariants": {"many_over_one_min": 0.5},
+             "reference": out}, BASELINE_NAME)
+    if args.check_baseline:
+        _baseline.enforce(check_baseline(out))
+    if not out["holds"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -40,11 +40,14 @@ def main() -> None:
     n_req = 4000 if args.fast else 20_000
     n_sess = 15 if args.fast else 40
 
-    from benchmarks import (engine_bench, federation_bench,  # noqa: E402
-                            gateway_bench, migration_bench, plane_bench)
+    from benchmarks import (adapter_bench, engine_bench,  # noqa: E402
+                            federation_bench, gateway_bench,
+                            migration_bench, plane_bench)
     benches = [
         ("engine",
          lambda: engine_bench.figure_rows(quick=args.fast)),
+        ("adapters",
+         lambda: adapter_bench.figure_rows(quick=args.fast)),
         ("fig2_p99_vs_load",
          lambda: figures.fig2_p99_vs_load(n_requests=n_req)),
         ("fig3_violation_vs_load",

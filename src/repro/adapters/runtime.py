@@ -1,0 +1,151 @@
+"""Engine-side adapter runtime (data plane).
+
+Loaded adapters live in two stacked device tables, ``A: [E, d, r]``
+and ``B: [E, r, d]``, where row 0 is the null adapter (all zeros, so
+its delta is exactly zero and base sessions are bit-identical to an
+adapter-free engine). Each engine slot carries an int32 index into
+the tables; the fused K-step decode scan gathers rows per slot.
+
+Two token-identical routes compute the batched delta:
+
+- ``gather``: per-row gather + f32 einsum (XLA fallback, default off
+  TPU — interpret-mode Pallas in the hot scan would dominate).
+- ``grouped``: slots grouped by adapter index and pushed through the
+  Pallas ``moe_gemm`` kernel — the exact MoE dispatch shape with
+  "slots grouped by adapter" standing in for "tokens grouped by
+  expert". Empty groups and ragged capacities fall out of the same
+  padding discipline the MoE path uses.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.moe_gemm.ops import grouped_gemm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lora_apply_rows(h, a, b):
+    """Delta for one adapter applied to every row of ``h: [b, d]``
+    (prefill path — the whole batch shares one adapter)."""
+    hf = h.astype(jnp.float32)
+    t = hf @ a.astype(jnp.float32)
+    return (t @ b.astype(jnp.float32)).astype(h.dtype)
+
+
+def _delta_gather(h, A, B, idx):
+    hf = h.astype(jnp.float32)
+    a = A[idx].astype(jnp.float32)          # [b, d, r]
+    b = B[idx].astype(jnp.float32)          # [b, r, d]
+    t = jnp.einsum("bd,bdr->br", hf, a)
+    return jnp.einsum("br,brd->bd", t, b).astype(h.dtype)
+
+
+def _delta_grouped(h, A, B, idx):
+    n, _ = h.shape
+    E = A.shape[0]
+    order = jnp.argsort(idx)                # stable: groups stay contiguous
+    sidx = idx[order]
+    # position of each row within its adapter group: offset from the
+    # first occurrence of its index in the sorted vector
+    start = jnp.searchsorted(sidx, sidx, side="left")
+    pos = jnp.arange(n) - start
+    # scatter rows into the [E, C, D] expert layout; capacity = n is
+    # always enough (each slot maps to exactly one adapter), unused
+    # (e, c) cells stay zero
+    xg = jnp.zeros((E, n, h.shape[1]), jnp.float32)
+    xg = xg.at[sidx, pos].set(h[order].astype(jnp.float32))
+    t = grouped_gemm(xg, A.astype(jnp.float32),
+                     block_c=128, block_f=128)        # [E, C, r]
+    y = grouped_gemm(t, B.astype(jnp.float32),
+                     block_c=128, block_f=128)        # [E, C, d]
+    delta = y[sidx, pos]                    # back to sorted row order
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(n))
+    return delta[inv].astype(h.dtype)
+
+
+def lora_delta(h, A, B, idx, *, route: str = "gather"):
+    """Batched per-row adapter delta for ``h: [b, d]`` under the
+    per-slot int32 table ``idx: [b]``. Rows with index 0 get an exact
+    zero delta."""
+    if route == "grouped":
+        return _delta_grouped(h, A, B, idx)
+    return _delta_gather(h, A, B, idx)
+
+
+class AdapterRuntime:
+    """Mutable device tables for one engine.
+
+    ``max_adapters`` tenant adapters share the table on top of the
+    reserved null row. Adapters of smaller rank are zero-padded up to
+    the table rank, which changes nothing numerically (extra columns
+    of A meet extra zero rows of B).
+    """
+
+    def __init__(self, d_model: int, *, max_adapters: int = 8,
+                 rank: int = 8, route: str = "auto") -> None:
+        if route == "auto":
+            route = "grouped" if _on_tpu() else "gather"
+        if route not in ("gather", "grouped"):
+            raise ValueError(f"unknown adapter route {route!r}")
+        self.d_model = int(d_model)
+        self.rank = int(rank)
+        self.max_adapters = int(max_adapters)
+        self.route = route
+        E = self.max_adapters + 1
+        self.A = jnp.zeros((E, self.d_model, self.rank), jnp.float32)
+        self.B = jnp.zeros((E, self.rank, self.d_model), jnp.float32)
+        self._index: Dict[str, int] = {}
+        self._free: List[int] = list(range(1, E))
+
+    def _fit(self, w: np.ndarray, shape: Tuple[int, int]) -> np.ndarray:
+        w = np.asarray(w, np.float32)
+        if w.shape[0] > shape[0] or w.shape[1] > shape[1]:
+            raise ValueError(
+                f"adapter weights {w.shape} exceed table shape {shape}")
+        out = np.zeros(shape, np.float32)
+        out[: w.shape[0], : w.shape[1]] = w
+        return out
+
+    def load(self, adapter_id: str, a, b) -> int:
+        """Install weights for ``adapter_id``; idempotent. Returns the
+        table index slots reference."""
+        if adapter_id in self._index:
+            return self._index[adapter_id]
+        if not self._free:
+            raise RuntimeError(
+                f"adapter table full ({self.max_adapters} loaded)")
+        a = self._fit(a, (self.d_model, self.rank))
+        b = self._fit(b, (self.rank, self.d_model))
+        idx = self._free.pop(0)
+        self.A = self.A.at[idx].set(a)
+        self.B = self.B.at[idx].set(b)
+        self._index[adapter_id] = idx
+        return idx
+
+    def unload(self, adapter_id: str) -> None:
+        idx = self._index.pop(adapter_id)    # KeyError if not loaded
+        self.A = self.A.at[idx].set(0.0)
+        self.B = self.B.at[idx].set(0.0)
+        self._free.insert(0, idx)
+
+    def index_of(self, adapter_id: str) -> int:
+        """Table index for a session's adapter ("" means none)."""
+        if not adapter_id:
+            return 0
+        if adapter_id not in self._index:
+            raise KeyError(adapter_id)
+        return self._index[adapter_id]
+
+    def is_loaded(self, adapter_id: str) -> bool:
+        return adapter_id in self._index
+
+    def loaded(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._index))

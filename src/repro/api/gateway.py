@@ -31,10 +31,10 @@ from typing import Callable, Deque, Dict, Iterator, List, Optional, Tuple, Union
 
 from repro.api import messages as m
 from repro.core.asp import SchemaVersionError
-from repro.core.failures import SessionError
+from repro.core.failures import FailureCause, SessionError
 from repro.core.migration import MigrationTriggers
 from repro.core.orchestrator import Orchestrator
-from repro.core.session import AISession
+from repro.core.session import AISession, SessionState
 
 Reply = Union[m.Message, List[m.Message]]
 
@@ -420,6 +420,102 @@ class NorthboundGateway:
         return list(self.poll_completions(msg.invoker))
 
     # ------------------------------------------------------------------
+    # tenant adapter lifecycle
+    # ------------------------------------------------------------------
+    def register_adapter(self, msg: m.RegisterAdapterRequest) -> Reply:
+        """Publish a versioned adapter into the domain catalog (weights
+        materialised deterministically from the seed — the stand-in for
+        a tenant upload). Duplicate keys and unknown base models are
+        input refusals, not lifecycle failures."""
+        from repro.adapters.catalog import AdapterSpec
+        spec = AdapterSpec(
+            adapter_id=msg.adapter_id, version=msg.version,
+            base_model_id=msg.base_model_id,
+            base_model_version=msg.base_model_version,
+            rank=int(msg.rank), regions=tuple(msg.regions),
+            scale=float(msg.scale), seed=int(msg.seed))
+        try:
+            stored = self.orch.catalog.register_adapter(spec)
+        except ValueError as e:
+            return m.ErrorResponse("E_BAD_REQUEST", detail=str(e))
+        return m.RegisterAdapterResponse(
+            adapter_id=stored.adapter_id, version=stored.version,
+            base_model_id=stored.base_model_id,
+            weight_fingerprint=stored.weight_fingerprint,
+            at_s=self.orch.clock.now())
+
+    def _adapter_site(self, site_id: str):
+        site = self.orch.sites.get(site_id)
+        if site is None:
+            return None, m.ErrorResponse(
+                "E_BAD_REQUEST", detail=f"unknown site {site_id!r}")
+        return site, None
+
+    def load_adapter(self, msg: m.LoadAdapterRequest) -> Reply:
+        site, err = self._adapter_site(msg.site_id)
+        if err is not None:
+            return err
+        adapters = self.orch.catalog.adapters
+        try:
+            spec = adapters.get(msg.adapter_id, msg.version or None)
+        except KeyError:
+            raise SessionError(
+                FailureCause.MODEL_UNAVAILABLE,
+                f"adapter {msg.adapter_id!r} is not registered") from None
+        if site.spec.region not in spec.regions:
+            raise SessionError(
+                FailureCause.SOVEREIGNTY_VIOLATION,
+                f"adapter {spec.key} not licensed for region "
+                f"{site.spec.region!r}")
+        engine_loaded = False
+        backend = self.orch.plane_for(site).backend
+        eng = getattr(backend, "engine", None)
+        if eng is not None and getattr(eng, "adapters", None) is not None:
+            a, b = adapters.weights(spec.adapter_id, spec.version)
+            eng.load_adapter(spec.adapter_id, a, b)
+            engine_loaded = True
+        adapters.mark_loaded(spec.adapter_id, msg.site_id)
+        return m.LoadAdapterResponse(
+            adapter_id=spec.adapter_id, site_id=msg.site_id, loaded=True,
+            engine_loaded=engine_loaded, at_s=self.orch.clock.now())
+
+    def unload_adapter(self, msg: m.UnloadAdapterRequest) -> Reply:
+        site, err = self._adapter_site(msg.site_id)
+        if err is not None:
+            return err
+        adapters = self.orch.catalog.adapters
+        try:
+            spec = adapters.get(msg.adapter_id)
+        except KeyError:
+            raise SessionError(
+                FailureCause.MODEL_UNAVAILABLE,
+                f"adapter {msg.adapter_id!r} is not registered") from None
+        live = (SessionState.PREPARED, SessionState.COMMITTED,
+                SessionState.MIGRATING)
+        bound = [s.session_id for s in self.orch.sessions.values()
+                 if s.state in live and s.binding is not None
+                 and s.binding.site_id == msg.site_id
+                 and s.asp.adapter_id == spec.adapter_id]
+        if bound:
+            return m.ErrorResponse(
+                "E_BAD_REQUEST", session_id=None,
+                detail=f"adapter {spec.adapter_id!r} still bound at "
+                       f"{msg.site_id} by live sessions {bound[:3]}")
+        backend = self.orch.plane_for(site).backend
+        eng = getattr(backend, "engine", None)
+        if eng is not None and getattr(eng, "adapters", None) is not None \
+                and eng.adapters.is_loaded(spec.adapter_id):
+            try:
+                eng.unload_adapter(spec.adapter_id)
+            except RuntimeError as e:     # engine slots still bound
+                return m.ErrorResponse("E_BAD_REQUEST", detail=str(e),
+                                       session_id=None)
+        adapters.mark_unloaded(spec.adapter_id, msg.site_id)
+        return m.UnloadAdapterResponse(
+            adapter_id=spec.adapter_id, site_id=msg.site_id, unloaded=True,
+            at_s=self.orch.clock.now())
+
+    # ------------------------------------------------------------------
     # continuity + teardown
     # ------------------------------------------------------------------
     def heartbeat(self, msg: m.HeartbeatReport) -> Reply:
@@ -480,6 +576,9 @@ class NorthboundGateway:
         m.ReleaseRequest: release,
         m.EventPoll: _handle_event_poll,
         m.CompletionPoll: _handle_completion_poll,
+        m.RegisterAdapterRequest: register_adapter,
+        m.LoadAdapterRequest: load_adapter,
+        m.UnloadAdapterRequest: unload_adapter,
     }
 
 

@@ -31,7 +31,9 @@ from repro.core.failures import FailureCause, SessionError
 #: between invoker and gateway (minor additions are backward-compatible).
 #: 1.1: federation — candidate entries and PageResponse carry the owning
 #: ``domain`` (and candidate ``region``); "" means the home domain.
-SCHEMA_VERSION = "1.1"
+#: 1.2: tenant adapters — RegisterAdapter/LoadAdapter/UnloadAdapter
+#: lifecycle messages; ``ASP.adapter_id`` rides the existing ASP codec.
+SCHEMA_VERSION = "1.2"
 
 _REGISTRY: Dict[str, type] = {}
 
@@ -347,6 +349,90 @@ class ComplianceReport(Message):
     #: boundary snapshot Z(t) (Eq. 5/13) as a flat dict
     z: dict = field(default_factory=dict)
     n: int = 0
+    schema_version: str = SCHEMA_VERSION
+
+
+# ----------------------------------------------------------------------
+# tenant adapter lifecycle: register (catalog) / load / unload (engine)
+# ----------------------------------------------------------------------
+@_registered
+@dataclass
+class RegisterAdapterRequest(Message):
+    """Publish a versioned tenant adapter into the domain catalog. The
+    gateway materialises deterministic weights from ``seed`` against the
+    base model's d_model (the stand-in for a tenant weight upload) and
+    answers with the resulting weight fingerprint — the value migration
+    and federation advertisement key on."""
+    TYPE: ClassVar[str] = "register_adapter_request"
+    adapter_id: str
+    base_model_id: str
+    version: str = "1.0"
+    base_model_version: str = "1.0"
+    rank: int = 8
+    #: sovereignty tags of the adapter weights themselves
+    regions: List[str] = field(default_factory=lambda: ["eu", "us", "apac"])
+    scale: float = 1.0
+    seed: int = 0
+    schema_version: str = SCHEMA_VERSION
+
+
+@_registered
+@dataclass
+class RegisterAdapterResponse(Message):
+    TYPE: ClassVar[str] = "register_adapter_response"
+    adapter_id: str
+    version: str
+    base_model_id: str = ""
+    weight_fingerprint: str = ""
+    at_s: float = 0.0
+    schema_version: str = SCHEMA_VERSION
+
+
+@_registered
+@dataclass
+class LoadAdapterRequest(Message):
+    """Make a registered adapter hot at one site. On a real engine this
+    installs A/B rows into the device tables; on simulated backends only
+    the control-plane residency record advances (discovery admissibility
+    is control-plane either way)."""
+    TYPE: ClassVar[str] = "load_adapter_request"
+    adapter_id: str
+    site_id: str
+    version: str = ""            # "" = highest registered version
+    schema_version: str = SCHEMA_VERSION
+
+
+@_registered
+@dataclass
+class LoadAdapterResponse(Message):
+    TYPE: ClassVar[str] = "load_adapter_response"
+    adapter_id: str
+    site_id: str
+    loaded: bool = False
+    #: True when weights landed in a real engine's device tables (False:
+    #: simulated backend — control-plane record only)
+    engine_loaded: bool = False
+    at_s: float = 0.0
+    schema_version: str = SCHEMA_VERSION
+
+
+@_registered
+@dataclass
+class UnloadAdapterRequest(Message):
+    TYPE: ClassVar[str] = "unload_adapter_request"
+    adapter_id: str
+    site_id: str
+    schema_version: str = SCHEMA_VERSION
+
+
+@_registered
+@dataclass
+class UnloadAdapterResponse(Message):
+    TYPE: ClassVar[str] = "unload_adapter_response"
+    adapter_id: str
+    site_id: str
+    unloaded: bool = False
+    at_s: float = 0.0
     schema_version: str = SCHEMA_VERSION
 
 

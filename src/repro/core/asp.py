@@ -23,7 +23,8 @@ from typing import Tuple
 #: wire-schema version of the ASP record. Bound into ``digest()`` so two
 #: parties hashing the same intent under different field sets can never
 #: collide silently; the northbound gateway refuses mismatched majors.
-ASP_SCHEMA_VERSION = "1.0"
+#: 1.1: adds ``adapter_id`` (tenant LoRA adapter binding; "" = base).
+ASP_SCHEMA_VERSION = "1.1"
 
 
 class SchemaVersionError(ValueError):
@@ -99,6 +100,14 @@ class ASP:
     # (f) ordered fallback ladder: the only admissible degradation path,
     #     as (model_id, tier) pairs, most-preferred first
     fallback_ladder: Tuple[Tuple[str, int], ...] = ()
+    # (g) tenant adapter binding: a LoRA adapter id multiplexed over the
+    #     base model ("" = the bare base). Part of the digest, so the
+    #     tenant-model contract is one identity across DISCOVER
+    #     admissibility, federation advertisement, and migration
+    #     fingerprints. The fallback ladder may still name full models —
+    #     that is the "base+adapter at edge" vs. "full model in region"
+    #     degradation choice.
+    adapter_id: str = ""
 
     def validate(self) -> None:
         self.objectives.validate()
@@ -138,6 +147,7 @@ class ASP:
             "max_cost_per_1k_tokens": self.max_cost_per_1k_tokens,
             "max_session_cost": self.max_session_cost,
             "fallback_ladder": [[m, int(t)] for m, t in self.fallback_ladder],
+            "adapter_id": self.adapter_id,
         }
 
     @classmethod
@@ -160,6 +170,8 @@ class ASP:
             max_session_cost=float(d["max_session_cost"]),
             fallback_ladder=tuple((m, int(t))
                                   for m, t in d["fallback_ladder"]),
+            # minor-version tolerance: pre-1.1 peers omit the field
+            adapter_id=str(d.get("adapter_id", "")),
         )
         asp.validate()
         return asp

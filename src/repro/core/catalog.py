@@ -13,6 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
+from repro.adapters.catalog import AdapterCatalog, AdapterSpec, version_key
 from repro.core.asp import ASP, Modality, QualityTier
 from repro.models.config import ModelConfig
 from repro.models.kvcache import cache_bytes
@@ -82,6 +83,8 @@ class ModelEntry:
 class Catalog:
     def __init__(self):
         self._entries: Dict[str, ModelEntry] = {}
+        #: versioned LoRA adapters registered against base models here
+        self.adapters = AdapterCatalog()
 
     def register(self, entry: ModelEntry) -> None:
         key = f"{entry.model_id}@{entry.version}"
@@ -89,13 +92,27 @@ class Catalog:
             raise ValueError(f"duplicate catalog entry {key}")
         self._entries[key] = entry
 
+    def register_adapter(self, spec: AdapterSpec, weights=None) -> AdapterSpec:
+        """Register a tenant adapter against its base model. The base
+        must already be registered; deterministic weights are
+        materialised from the base's d_model when none are supplied."""
+        try:
+            base = self.get(spec.base_model_id, spec.base_model_version)
+        except KeyError:
+            raise ValueError(
+                f"adapter {spec.key} targets unregistered base "
+                f"{spec.base_key()}")
+        return self.adapters.register(
+            spec, weights, d_model=base.cfg.d_model)
+
     def get(self, model_id: str, version: Optional[str] = None) -> ModelEntry:
         if version:
             return self._entries[f"{model_id}@{version}"]
         matches = [e for e in self._entries.values() if e.model_id == model_id]
         if not matches:
             raise KeyError(model_id)
-        return sorted(matches, key=lambda e: e.version)[-1]
+        # numeric-aware: "10.0" must outrank "9.0" deterministically
+        return sorted(matches, key=lambda e: version_key(e.version))[-1]
 
     def keys(self):
         """All registered model keys ("model_id@version")."""

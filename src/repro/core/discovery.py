@@ -70,6 +70,18 @@ def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
         raise SessionError(FailureCause.MODEL_UNAVAILABLE,
                            f"no catalog entry admits modality="
                            f"{asp.modality.value} tier≥{int(asp.tier)}")
+    # tenant adapter binding: resolve once; unknown ids exclude every
+    # candidate (PREPARE re-checks and raises NO_FEASIBLE_BINDING)
+    adapter = None
+    adapter_known = True
+    if asp.adapter_id:
+        adapters = getattr(catalog, "adapters", None)
+        try:
+            adapter = adapters.get(asp.adapter_id) if adapters else None
+        except KeyError:
+            adapter = None
+        adapter_known = adapter is not None
+    ladder_models = {m for m, _ in asp.fallback_ladder}
     klass = PREMIUM if asp.tier >= 2 else BEST_EFFORT
     out: List[Candidate] = []
     for model in models:
@@ -95,6 +107,26 @@ def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
             if not site.hosts(key):
                 out.append(_excl("not-resident"))
                 continue
+            # ---- tenant adapter admissibility ------------------------
+            if asp.adapter_id:
+                if not adapter_known:
+                    out.append(_excl("adapter-unknown"))
+                    continue
+                if model.model_id == adapter.base_model_id:
+                    # "base+adapter at the edge": the adapter's own
+                    # sovereignty tags gate the site, on top of the
+                    # base model's license
+                    if model.version != adapter.base_model_version:
+                        out.append(_excl("adapter-base-mismatch"))
+                        continue
+                    if region not in adapter.regions:
+                        out.append(_excl("adapter-region"))
+                        continue
+                elif model.model_id not in ladder_models:
+                    # a non-base model is only admissible as a declared
+                    # "full model in region" rung of the fallback ladder
+                    out.append(_excl("adapter-base-mismatch"))
+                    continue
             if site.slots_in_use() >= site.spec.decode_slots:
                 # current occupancy IS a feasibility signal: a saturated
                 # site would only fail later at PREPARE with

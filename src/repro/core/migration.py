@@ -117,7 +117,7 @@ class PlaneTransferPath:
         state (cache tensors, position, last token) crosses the domain
         boundary — any auxiliary per-request bookkeeping a backend attaches
         stays home (§ federation trust boundary)."""
-        keep = ("cache", "position", "last_token")
+        keep = ("cache", "position", "last_token", "adapter_id")
         return {k: v for k, v in payload.items() if k in keep}
 
     # ------------------------------------------------------------------

@@ -147,6 +147,7 @@ class Orchestrator:
         """PREPARE: provisional co-reservation on both planes (2PC stage 1).
         A remote candidate routes the compute half east-west; the home
         domain keeps only its transport share."""
+        self._check_adapter_binding(session, chosen)
         session.mark_preparing()
         if self.federation is not None and self.federation.is_remote(chosen):
             prepared = self.federation.prepare_remote(session, chosen)
@@ -156,6 +157,31 @@ class Orchestrator:
                 slots=1, cache_bytes=chosen.model.session_state_bytes(2048))
         session.mark_prepared()
         return prepared
+
+    def _check_adapter_binding(self, session: AISession, chosen) -> None:
+        """Fail fast at PREPARE when the ASP names an adapter this
+        catalog cannot resolve, or one whose base does not match the
+        chosen model (outside the declared fallback ladder). Without
+        this the unknown id would ride all the way to the engine bind
+        and surface as an opaque serve failure."""
+        aid = session.asp.adapter_id
+        if not aid:
+            return
+        try:
+            spec = self.catalog.adapters.get(aid)
+        except KeyError:
+            raise SessionError(
+                FailureCause.NO_FEASIBLE_BINDING,
+                f"unknown adapter {aid!r}: not registered in the "
+                f"catalog") from None
+        ladder = {m for m, _ in session.asp.fallback_ladder}
+        if chosen.model.model_id != spec.base_model_id \
+                and chosen.model.model_id not in ladder:
+            raise SessionError(
+                FailureCause.NO_FEASIBLE_BINDING,
+                f"adapter {aid!r} targets base {spec.base_model_id!r}; "
+                f"chosen model {chosen.model.model_id!r} is not its base "
+                f"and not on the fallback ladder")
 
     def commit_for(self, session: AISession, chosen, prepared) -> AISession:
         """COMMIT: confirm both leases, bind, open charging + telemetry.
@@ -324,7 +350,8 @@ class Orchestrator:
             prompt_tokens=prompt_tokens, gen_tokens=gen_tokens,
             t_max_ms=session.asp.objectives.t_max_ms,
             hint_ttfb_ms=hint_ttfb, hint_total_ms=hint_total,
-            request_id=request_id, prompt=prompt)
+            request_id=request_id, prompt=prompt,
+            adapter_id=session.asp.adapter_id)
 
     # ------------------------------------------------------------------
     def serve(self, session: AISession, *, prompt_tokens: int = 512,
@@ -347,7 +374,8 @@ class Orchestrator:
             session_id=session.session_id, klass=klass.name,
             prompt_tokens=prompt_tokens, gen_tokens=gen_tokens,
             t_max_ms=session.asp.objectives.t_max_ms, request_id=request_id,
-            hint_ttfb_ms=hint_ttfb, hint_total_ms=hint_total, prompt=prompt)
+            hint_ttfb_ms=hint_ttfb, hint_total_ms=hint_total, prompt=prompt,
+            adapter_id=session.asp.adapter_id)
         self.record_results(site)
         return ServeResult(res.tokens, res.ttfb_ms, res.latency_ms,
                            res.completed, queue_wait_ms=res.queue_wait_ms,

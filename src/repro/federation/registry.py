@@ -40,6 +40,10 @@ class CapabilityDigest:
     regions: Tuple[str, ...]
     load_bucket: str             # low | medium | high (coarse, not raw util)
     min_price_per_1k: float = 0.0
+    #: tenant adapters ("adapter_id@version") this domain hosts for
+    #: roamers — a peer can pre-screen "does domain X even carry my
+    #: adapter" before soliciting, same coarseness rules as model_keys
+    adapter_keys: Tuple[str, ...] = ()
 
     def to_wire(self) -> dict:
         return {
@@ -50,6 +54,7 @@ class CapabilityDigest:
             "regions": list(self.regions),
             "load_bucket": self.load_bucket,
             "min_price_per_1k": self.min_price_per_1k,
+            "adapter_keys": list(self.adapter_keys),
         }
 
     @classmethod
@@ -60,7 +65,8 @@ class CapabilityDigest:
                    modalities=tuple(d["modalities"]),
                    regions=tuple(d["regions"]),
                    load_bucket=d["load_bucket"],
-                   min_price_per_1k=float(d.get("min_price_per_1k", 0.0)))
+                   min_price_per_1k=float(d.get("min_price_per_1k", 0.0)),
+                   adapter_keys=tuple(d.get("adapter_keys", ())))
 
 
 def load_bucket(mean_utilization: float) -> str:
@@ -82,13 +88,15 @@ def digest_of(domain_id: str, catalog, sites, clock: Clock,
     regions = sorted({s.spec.region for s in sites.values()})
     utils = [s.utilization() for s in sites.values()]
     mean_util = sum(utils) / max(len(utils), 1)
+    adapters = getattr(catalog, "adapters", None)
     return CapabilityDigest(
         domain_id=domain_id, epoch=epoch, advertised_at=clock.now(),
         model_keys=tuple(sorted(catalog.keys())),
         modalities=tuple(modalities), regions=tuple(regions),
         load_bucket=load_bucket(mean_util),
         min_price_per_1k=min((e.price_per_1k_tokens for e in entries),
-                             default=0.0))
+                             default=0.0),
+        adapter_keys=tuple(adapters.keys()) if adapters is not None else ())
 
 
 class FederationRegistry:

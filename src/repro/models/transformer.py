@@ -478,7 +478,7 @@ class LM:
         return total, {"ce": ce, "aux": aux, "ntok": ntok}
 
     # -- prefill ------------------------------------------------------------
-    def prefill(self, params, batch, max_len: int):
+    def prefill(self, params, batch, max_len: int, adapter=None):
         """Build the decode cache for one prompt.
 
         ``batch["length"]`` (optional traced int32 scalar) marks the true
@@ -487,6 +487,11 @@ class LM:
         state are taken at ``length`` rather than the padded width, so the
         engine compiles O(log max_len) prefill variants instead of one per
         distinct prompt length (see InferenceEngine.prefill_session).
+
+        ``adapter`` (optional ``(A [d, r], B [r, d])``): per-session LoRA
+        delta applied to the final hidden state before the LM head — the
+        KV cache is adapter-free, so exported state stays shape-identical
+        to the base model's.
         """
         cfg = self.cfg
         x = self._embed(params, batch)
@@ -543,6 +548,9 @@ class LM:
             x_last = jax.lax.dynamic_index_in_dim(x, length - 1, axis=1,
                                                   keepdims=False)
         x_last = L.rmsnorm_apply(params["final_norm"], x_last, cfg.norm_eps)
+        if adapter is not None:
+            from repro.adapters.runtime import lora_apply_rows
+            x_last = x_last + lora_apply_rows(x_last, adapter[0], adapter[1])
         return self._logits(params, x_last), cache
 
     @staticmethod
@@ -552,8 +560,15 @@ class LM:
         return jnp.broadcast_to(jnp.asarray(length, jnp.int32), (x.shape[0],))
 
     # -- decode ---------------------------------------------------------------
-    def decode_step(self, params, cache, tokens, active=None):
+    def decode_step(self, params, cache, tokens, active=None, adapter=None):
         """tokens: [b, 1] -> (logits [b, 1, V], updated cache).
+
+        ``adapter`` (optional ``(A [E, d, r], B [E, r, d], idx [b],
+        route)``): stacked LoRA tables plus the per-slot int32 adapter
+        table. Each row's delta is gathered by ``idx`` and added to the
+        final hidden state before the LM head; index 0 is the null
+        adapter (exact zero delta), so base sessions are bit-identical
+        with or without the tables.
 
         ``active`` ([b] bool, optional): rows whose state may advance this
         step. Inactive rows (parked sessions, empty slots) still flow through
@@ -624,6 +639,11 @@ class LM:
                 new_cache["cross_k"] = cache["cross_k"]
                 new_cache["cross_v"] = cache["cross_v"]
         x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        if adapter is not None:
+            from repro.adapters.runtime import lora_delta
+            adp_a, adp_b, adp_idx, route = adapter
+            delta = lora_delta(x[:, 0], adp_a, adp_b, adp_idx, route=route)
+            x = x + delta[:, None]
         return self._logits(params, x), new_cache
 
     # -- cache helpers ----------------------------------------------------

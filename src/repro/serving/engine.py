@@ -81,6 +81,10 @@ class SlotState:
     position: int
     tokens_generated: int = 0
     last_token: int = 0
+    #: tenant adapter bound to this session ("" = base model). Resolved
+    #: to an int32 table index per decode round; travels with the
+    #: export payload so migration/hibernation keep the binding.
+    adapter_id: str = ""
     #: parked = bound-but-idle: the session keeps its slot (and pages) but
     #: rides decode rounds with active=False, so its state never advances —
     #: the cheap-resume tier between resident and hibernated
@@ -97,7 +101,7 @@ class InferenceEngine:
                  paged: bool = False,
                  page_size: int = KV.DEFAULT_PAGE_SIZE,
                  num_pages: Optional[int] = None,
-                 hibernation=None, clock=None):
+                 hibernation=None, clock=None, adapters=None):
         """``paged=True`` selects the block-table paged KV layout for
         families that support it (full-attention stacked KV — see
         ``kvcache.supports_paging``); other families silently keep the dense
@@ -108,7 +112,10 @@ class InferenceEngine:
         :class:`~repro.serving.hibernation.HibernationStore` (or ``True``
         for a private unbounded one) enabling the host-memory tier.
         ``clock`` (any object with ``now()``) timestamps hibernation
-        records so store-side TTL/LRU ordering sees real ages."""
+        records so store-side TTL/LRU ordering sees real ages.
+        ``adapters`` is an :class:`~repro.adapters.runtime.AdapterRuntime`
+        (or ``True`` for a default-sized one) enabling per-session LoRA
+        multiplexing over this engine's base model."""
         self.cfg = cfg
         self.lm = LM(cfg)
         self.slots = slots
@@ -163,10 +170,20 @@ class InferenceEngine:
         self._compiled_buckets: set = set()
         self._prefill = jax.jit(
             lambda p, b: self.lm.prefill(p, b, self.max_len))
+        self._prefill_adapter = jax.jit(
+            lambda p, b, a1, b1: self.lm.prefill(p, b, self.max_len,
+                                                 adapter=(a1, b1)))
         # K-step fused decode: cache is DONATED — the scan updates it in
         # place instead of double-buffering the whole KV cache
         self._decode_fused = jax.jit(self._fused_impl, static_argnums=(4,),
                                      donate_argnums=(1,))
+        self._decode_fused_adp = jax.jit(self._fused_adapter_impl,
+                                         static_argnums=(7, 8),
+                                         donate_argnums=(1,))
+        if adapters is True:
+            from repro.adapters.runtime import AdapterRuntime
+            adapters = AdapterRuntime(cfg.d_model)
+        self.adapters = adapters if adapters else None
         # slot insert: donate the full cache so admit/import is a per-slot
         # dynamic_update, not a full-cache copy
         self._slot_write = jax.jit(self._slot_write_impl, donate_argnums=(0,))
@@ -416,7 +433,8 @@ class InferenceEngine:
             state = dict(self._slot_read(self.cache, jnp.int32(idx)))
             state["pos"] = jnp.full((1,), meta.position, jnp.int32)
         return {"cache": state, "position": meta.position,
-                "last_token": meta.last_token}
+                "last_token": meta.last_token,
+                "adapter_id": meta.adapter_id}
 
     def import_slot(self, session_id: str, payload) -> None:
         """Install a migrated session's state into a free slot. Raises
@@ -430,9 +448,20 @@ class InferenceEngine:
             raise AdmissionDenied(
                 f"target admission denied: no free decode slots for "
                 f"{session_id}")
+        adapter_id = str(payload.get("adapter_id", ""))
+        if adapter_id and (self.adapters is None
+                           or not self.adapters.is_loaded(adapter_id)):
+            # the adapter binding is part of the session contract: a
+            # target that cannot realise it must refuse the transfer,
+            # not silently continue on the base model
+            from repro.serving.state_transfer import AdmissionDenied
+            raise AdmissionDenied(
+                f"target admission denied: adapter {adapter_id!r} not "
+                f"loaded for {session_id}")
         idx = self._alloc(session_id)
         meta = SlotState(session_id, payload["position"],
                          last_token=payload["last_token"],
+                         adapter_id=adapter_id,
                          last_used=next(self._use_clock))
         self._slots[idx] = meta
         if self.paged:
@@ -520,15 +549,53 @@ class InferenceEngine:
             return
         raise KeyError(f"unknown session {session_id}")
 
+    # -- adapter lifecycle ------------------------------------------------
+    def load_adapter(self, adapter_id: str, a, b) -> int:
+        """Install adapter weights into this engine's device tables;
+        idempotent. Returns the table index."""
+        if self.adapters is None:
+            raise RuntimeError("engine has no adapter runtime")
+        return self.adapters.load(adapter_id, a, b)
+
+    def unload_adapter(self, adapter_id: str) -> None:
+        """Evict an adapter. Refused while any bound session (resident
+        or parked) still references it — unloading under a live binding
+        would silently continue those sessions on the base model."""
+        if self.adapters is None:
+            raise RuntimeError("engine has no adapter runtime")
+        users = [s.session_id for s in self._slots
+                 if s is not None and s.adapter_id == adapter_id]
+        if users:
+            raise RuntimeError(
+                f"adapter {adapter_id!r} still bound by {users}")
+        self.adapters.unload(adapter_id)
+
     # ------------------------------------------------------------------
-    def prefill_session(self, session_id: str, prompt: np.ndarray) -> dict:
+    def prefill_session(self, session_id: str, prompt: np.ndarray, *,
+                        adapter_id: str = "") -> dict:
         """Admit a session: run prefill, install the cache, return TTFT.
 
         The prompt is right-padded to its power-of-two bucket with the true
         length passed as a traced scalar — the whole mix of prompt lengths
         compiles at most ``len(self.buckets)`` prefill variants.
+
+        ``adapter_id`` binds a tenant adapter for the session's lifetime;
+        it must already be loaded on this engine (ValueError otherwise —
+        the serving plane maps that to NO_FEASIBLE_BINDING).
         """
         t0 = time.perf_counter()
+        aidx = 0
+        if adapter_id:
+            if self.adapters is None:
+                raise ValueError(
+                    f"engine has no adapter runtime; cannot bind "
+                    f"{adapter_id!r} for {session_id}")
+            try:
+                aidx = self.adapters.index_of(adapter_id)
+            except KeyError:
+                raise ValueError(
+                    f"adapter {adapter_id!r} not loaded on this engine "
+                    f"for {session_id}")
         n = len(prompt)
         if n > self.max_len:
             # refuse rather than silently truncate: a truncated prefill
@@ -543,11 +610,17 @@ class InferenceEngine:
         self._compiled_buckets.add(width)
         batch = {"tokens": jnp.asarray(padded[None, :], jnp.int32),
                  "length": jnp.int32(n)}
-        logits, cache1 = self._prefill(self.params, batch)
+        if aidx:
+            logits, cache1 = self._prefill_adapter(
+                self.params, batch, self.adapters.A[aidx],
+                self.adapters.B[aidx])
+        else:
+            logits, cache1 = self._prefill(self.params, batch)
         tok = int(jnp.argmax(logits[0]))
         idx = self._alloc(session_id)
         meta = SlotState(session_id, position=n, tokens_generated=1,
-                         last_token=tok, last_used=next(self._use_clock))
+                         last_token=tok, adapter_id=adapter_id,
+                         last_used=next(self._use_clock))
         self._slots[idx] = meta
         if self.paged:
             try:
@@ -580,6 +653,26 @@ class InferenceEngine:
             c, fed = carry
             logits, c = self.lm.decode_step(params, c, fed[:, None],
                                             active=active)
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            fed = jnp.where(active, nxt, fed)
+            return (c, fed), fed
+
+        (cache, _), toks = jax.lax.scan(step, (cache, last), None,
+                                        length=steps)
+        return cache, jnp.moveaxis(toks, 0, 1)          # [slots, K]
+
+    def _fused_adapter_impl(self, params, cache, last, active, aidx,
+                            adp_a, adp_b, steps: int, route: str):
+        """Adapter-aware variant of the fused K-step scan: the per-slot
+        int32 table ``aidx`` gathers stacked LoRA A/B rows inside every
+        decode step. Tables are traced arguments (NOT closure constants),
+        so load/unload between rounds needs no retrace — only the table
+        contents change."""
+        def step(carry, _):
+            c, fed = carry
+            logits, c = self.lm.decode_step(
+                params, c, fed[:, None], active=active,
+                adapter=(adp_a, adp_b, aidx, route))
             nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
             fed = jnp.where(active, nxt, fed)
             return (c, fed), fed
@@ -633,9 +726,19 @@ class InferenceEngine:
                 cache["block"] = jnp.asarray(self._block_host)
             self.cache = cache
             self._pos_dirty = any_parked
-        self.cache, block = self._decode_fused(
-            self.params, self.cache, jnp.asarray(last),
-            jnp.asarray(active), k)
+        if self.adapters is not None:
+            aidx = np.zeros(self.slots, np.int32)
+            for i, s in enumerate(self._slots):
+                if s is not None and s.adapter_id:
+                    aidx[i] = self.adapters.index_of(s.adapter_id)
+            self.cache, block = self._decode_fused_adp(
+                self.params, self.cache, jnp.asarray(last),
+                jnp.asarray(active), jnp.asarray(aidx),
+                self.adapters.A, self.adapters.B, k, self.adapters.route)
+        else:
+            self.cache, block = self._decode_fused(
+                self.params, self.cache, jnp.asarray(last),
+                jnp.asarray(active), k)
         block = np.asarray(block)                        # [slots, K]
         out: Dict[str, Union[int, List[int]]] = {}
         for i, s in enumerate(self._slots):
@@ -652,7 +755,7 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     def serve(self, session_id: str, prompt_tokens: int, gen_tokens: int,
               *, prompt: Optional[np.ndarray] = None,
-              chunk: int = 16) -> dict:
+              chunk: int = 16, adapter_id: str = "") -> dict:
         """Unary convenience: prefill + chunked decode for one session.
 
         Synthetic prompts are crc32-seeded (NOT ``hash()``, which varies
@@ -664,7 +767,8 @@ class InferenceEngine:
             prompt = rng.integers(0, self.cfg.vocab_size,
                                   size=prompt_tokens).astype(np.int32)
         t0 = time.perf_counter()
-        pre = self.prefill_session(session_id, prompt)
+        pre = self.prefill_session(session_id, prompt,
+                                   adapter_id=adapter_id)
         toks = [pre["first_token"]]
         remaining = gen_tokens - 1
         while remaining > 0:

@@ -30,7 +30,8 @@ def _to_host(payload) -> dict:
     return {"cache": jax.tree.map(lambda l: np.array(l, copy=True),
                                   payload["cache"]),
             "position": int(payload["position"]),
-            "last_token": int(payload["last_token"])}
+            "last_token": int(payload["last_token"]),
+            "adapter_id": str(payload.get("adapter_id", ""))}
 
 
 @dataclass

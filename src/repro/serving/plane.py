@@ -231,7 +231,12 @@ class RealEngineBackend:
             prompt = rng.integers(
                 0, self.engine.cfg.vocab_size,
                 size=max(req.prompt_tokens, 1)).astype(np.int32)
-        out = self.engine.prefill_session(req.session_id, prompt)
+        aid = getattr(req, "adapter_id", "")
+        if aid:
+            out = self.engine.prefill_session(req.session_id, prompt,
+                                              adapter_id=aid)
+        else:
+            out = self.engine.prefill_session(req.session_id, prompt)
         return Admission(ttfb_ms=out["ttfb_ms"], finish_at=None,
                          first_token=out["first_token"])
 
@@ -476,7 +481,8 @@ class ServingPlane:
                request_id: Optional[str] = None,
                hint_ttfb_ms: Optional[float] = None,
                hint_total_ms: Optional[float] = None,
-               prompt=None, resume: bool = False) -> Optional[Request]:
+               prompt=None, resume: bool = False,
+               adapter_id: str = "") -> Optional[Request]:
         """Enqueue one request; returns None when admission control rejects
         it (bounded-queue planes, or a plane gated closed by its
         supervisor), after accounting the rejection."""
@@ -495,7 +501,8 @@ class ServingPlane:
             session_id=session_id, klass=klass,
             prompt_tokens=prompt_tokens, gen_tokens=gen_tokens,
             t_max_ms=t_max_ms, hint_ttfb_ms=hint_ttfb_ms,
-            hint_total_ms=hint_total_ms, prompt=prompt, resume=resume)
+            hint_total_ms=hint_total_ms, prompt=prompt, resume=resume,
+            adapter_id=adapter_id)
         self._by_request[req.request_id] = req
         self.scheduler.submit(req)
         self._admit()
@@ -754,7 +761,8 @@ class ServingPlane:
               request_id: Optional[str] = None,
               hint_ttfb_ms: Optional[float] = None,
               hint_total_ms: Optional[float] = None,
-              prompt=None, resume: bool = False) -> PlaneResult:
+              prompt=None, resume: bool = False,
+              adapter_id: str = "") -> PlaneResult:
         """Unary convenience: submit and drive the plane until THIS request
         completes (other in-flight sessions make progress too — decode
         rounds are shared)."""
@@ -762,7 +770,7 @@ class ServingPlane:
             session_id=session_id, klass=klass, prompt_tokens=prompt_tokens,
             gen_tokens=gen_tokens, t_max_ms=t_max_ms, request_id=request_id,
             hint_ttfb_ms=hint_ttfb_ms, hint_total_ms=hint_total_ms,
-            prompt=prompt, resume=resume)
+            prompt=prompt, resume=resume, adapter_id=adapter_id)
         if req is None:
             return PlaneResult(
                 request_id="rejected", session_id=session_id, klass=klass,

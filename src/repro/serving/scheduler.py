@@ -50,6 +50,9 @@ class Request:
     #: continue a bound (parked / hibernated) session's generation instead
     #: of superseding its state with a fresh prefill
     resume: bool = False
+    #: tenant adapter the session is bound to ("" = base model); consumed
+    #: by real-engine backends at prefill admission
+    adapter_id: str = ""
 
     def wait_ms(self, now: float) -> float:
         return (now - self.submitted_at) * 1e3

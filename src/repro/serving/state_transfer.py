@@ -73,6 +73,11 @@ def fingerprint(payload) -> str:
     for leaf in jax.tree.leaves(payload["cache"]):
         h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
     h.update(str(payload["position"]).encode())
+    # adapter identity is part of the session contract: the same cache
+    # under a different tenant adapter is a DIFFERENT session state.
+    # Absent/empty contributes no bytes, so base-model fingerprints are
+    # unchanged from pre-adapter payloads.
+    h.update(str(payload.get("adapter_id", "")).encode())
     return h.hexdigest()[:16]
 
 

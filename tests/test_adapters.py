@@ -1,0 +1,601 @@
+"""Multi-tenant adapter fleet: per-session LoRA multiplexing over a
+shared base model.
+
+Correctness bar mirrors the serving hot path's: batched adapter decode
+(one fused chunk, slots bound to different adapters) must be
+TOKEN-IDENTICAL to applying each adapter individually, on both the
+gather (XLA) and grouped (Pallas moe_gemm) routes; and the adapter
+binding is part of the session contract — it must survive migration and
+hibernate/resume with matching fingerprints, and a target that cannot
+realise it must refuse the transfer."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.adapters import (AdapterCatalog, AdapterRuntime, AdapterSpec,
+                            init_adapter_weights, version_key,
+                            weight_fingerprint)
+from repro.adapters.runtime import lora_delta
+from repro.api import NorthboundGateway
+from repro.api import messages as m
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.asp import (ASP, InteractionMode, Modality, MobilityClass,
+                            Objectives, QualityTier, default_asp)
+from repro.core.catalog import (MODALITY_FAMILIES, Catalog, ModelEntry,
+                                default_catalog)
+from repro.core.clock import VirtualClock
+from repro.core.failures import FailureCause, SessionError
+from repro.serving import state_transfer
+from repro.serving.engine import InferenceEngine
+from repro.serving.state_transfer import AdmissionDenied
+
+CFG = get_config("edge-tiny")
+
+
+def spec_for(adapter_id, *, version="1.0", base="edge-tiny", rank=4,
+             seed=0, regions=("eu", "us", "apac")):
+    return AdapterSpec(adapter_id=adapter_id, version=version,
+                       base_model_id=base, base_model_version="1.0",
+                       rank=rank, regions=tuple(regions), seed=seed)
+
+
+def weights_for(adapter_id, d_model, **kw):
+    return init_adapter_weights(spec_for(adapter_id, **kw), d_model)
+
+
+# ----------------------------------------------------------------------
+# control plane: catalog + versioning
+# ----------------------------------------------------------------------
+class TestAdapterCatalog:
+    def test_get_picks_highest_numeric_version(self):
+        cat = AdapterCatalog()
+        for v in ("9.0", "10.0", "2.1"):
+            cat.register(spec_for("acme", version=v), d_model=32)
+        assert cat.get("acme").version == "10.0"
+        assert cat.get("acme", "9.0").version == "9.0"
+
+    def test_model_catalog_get_is_numeric_aware_too(self):
+        """Catalog.get used lexicographic max, so "9.0" outranked
+        "10.0" — the same version_key now orders both catalogs."""
+        cat = Catalog()
+        for v in ("9.0", "10.0"):
+            cat.register(ModelEntry(model_id="edge-tiny", version=v,
+                                    cfg=CFG, tier=QualityTier.BASIC,
+                                    modalities=(Modality.TEXT_GEN,)))
+        assert cat.get("edge-tiny").version == "10.0"
+        assert version_key("10.0") > version_key("9.0")
+        assert version_key("1.0rc1") > version_key("1.0")  # non-numeric tail
+
+    def test_duplicate_and_unknown_base_refused(self):
+        cat = Catalog()
+        cat.register(ModelEntry(model_id="edge-tiny", version="1.0",
+                                cfg=CFG, tier=QualityTier.BASIC,
+                                modalities=(Modality.TEXT_GEN,)))
+        cat.register_adapter(spec_for("acme"))
+        with pytest.raises(ValueError, match="duplicate"):
+            cat.register_adapter(spec_for("acme"))
+        with pytest.raises(ValueError, match="unregistered base"):
+            cat.register_adapter(spec_for("ghost", base="no-such-model"))
+
+    def test_deterministic_weights_and_fingerprint(self):
+        """Same spec materialises bit-identical weights in independent
+        catalogs (fingerprints must agree across domains); a different
+        seed yields different weights."""
+        a1, b1 = weights_for("acme", CFG.d_model)
+        a2, b2 = weights_for("acme", CFG.d_model)
+        np.testing.assert_array_equal(a1, a2)
+        np.testing.assert_array_equal(b1, b2)
+        assert weight_fingerprint(a1, b1) == weight_fingerprint(a2, b2)
+        a3, b3 = weights_for("acme", CFG.d_model, seed=1)
+        assert weight_fingerprint(a3, b3) != weight_fingerprint(a1, b1)
+
+    def test_register_stamps_fingerprint_and_tracks_sites(self):
+        cat = AdapterCatalog()
+        stored = cat.register(spec_for("acme"), d_model=CFG.d_model)
+        assert stored.weight_fingerprint
+        a, b = cat.weights("acme")
+        assert stored.weight_fingerprint == weight_fingerprint(a, b)
+        cat.mark_loaded("acme", "edge-a")
+        cat.mark_loaded("acme", "edge-b")
+        cat.mark_unloaded("acme", "edge-a")
+        assert cat.loaded_sites("acme") == ("edge-b",)
+
+
+# ----------------------------------------------------------------------
+# data plane: runtime tables + delta routes
+# ----------------------------------------------------------------------
+class TestAdapterRuntime:
+    def test_table_full_idempotent_load_and_unload(self):
+        rt = AdapterRuntime(32, max_adapters=2, rank=4)
+        a, b = weights_for("x", 32)
+        idx = rt.load("x", a, b)
+        assert rt.load("x", a, b) == idx            # idempotent
+        rt.load("y", *weights_for("y", 32, seed=1))
+        with pytest.raises(RuntimeError, match="table full"):
+            rt.load("z", *weights_for("z", 32, seed=2))
+        rt.unload("y")
+        assert not rt.is_loaded("y")
+        rt.load("z", *weights_for("z", 32, seed=2))  # slot reused
+        assert rt.loaded() == ("x", "z")
+        assert rt.index_of("") == 0
+        with pytest.raises(KeyError):
+            rt.index_of("y")
+
+    def test_smaller_rank_zero_pads_without_numeric_change(self):
+        """A rank-2 adapter in a rank-8 table: the extra A columns meet
+        zero B rows, so the padded delta equals the unpadded one."""
+        d = 32
+        rt = AdapterRuntime(d, max_adapters=2, rank=8)
+        a, b = weights_for("lo", d, rank=2)
+        idx = rt.load("lo", a, b)
+        h = np.random.default_rng(3).standard_normal((5, d)).astype(np.float32)
+        want = (h @ a) @ b
+        got = lora_delta(h, rt.A, rt.B, np.full(5, idx, np.int32))
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   atol=5e-5, rtol=1e-4)
+
+    def test_null_row_gives_exact_zero_delta(self):
+        rt = AdapterRuntime(32, max_adapters=2, rank=4)
+        rt.load("x", *weights_for("x", 32))
+        h = np.ones((4, 32), np.float32)
+        delta = lora_delta(h, rt.A, rt.B, np.zeros(4, np.int32))
+        assert float(np.abs(np.asarray(delta)).max()) == 0.0
+
+    @pytest.mark.parametrize("idx_mix", [
+        [0, 0, 0, 0], [1, 1, 1, 1], [2, 0, 1, 2], [0, 2, 0, 1],
+    ])
+    def test_gather_and_grouped_routes_agree(self, idx_mix):
+        """The Pallas grouped-GEMM route (slots grouped by adapter =
+        tokens grouped by expert) matches the gather oracle on every
+        batch composition, including all-base and empty groups."""
+        d = 64
+        rt = AdapterRuntime(d, max_adapters=3, rank=4)
+        rt.load("x", *weights_for("x", d))
+        rt.load("y", *weights_for("y", d, seed=1))
+        h = np.random.default_rng(5).standard_normal((4, d)).astype(np.float32)
+        idx = np.asarray(idx_mix, np.int32)
+        g1 = lora_delta(h, rt.A, rt.B, idx, route="gather")
+        g2 = lora_delta(h, rt.A, rt.B, idx, route="grouped")
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   atol=5e-5, rtol=1e-4)
+
+    def test_unknown_route_refused(self):
+        with pytest.raises(ValueError, match="unknown adapter route"):
+            AdapterRuntime(32, route="banana")
+
+
+# ----------------------------------------------------------------------
+# engine: batched multiplexed decode == individual application
+# ----------------------------------------------------------------------
+def _adapter_engine(cfg, *, params=None, slots=4, route="gather",
+                    adapters=("acme", "globex"), **kw):
+    rt = AdapterRuntime(cfg.d_model, max_adapters=4, rank=4, route=route)
+    eng = InferenceEngine(cfg, params=params, slots=slots, max_len=64,
+                          adapters=rt, **kw)
+    for aid in adapters:
+        # weights are a function of the adapter id alone — engines that
+        # load different subsets still agree per id
+        eng.load_adapter(aid, *weights_for(aid, cfg.d_model))
+    return eng
+
+
+ADAPTER_ARCHS = ["edge-tiny", "qwen3-moe-30b-a3b"]   # dense + moe
+
+
+def _cfg(arch):
+    return CFG if arch == "edge-tiny" else get_smoke_config(arch)
+
+
+class TestEngineAdapterDecode:
+    @pytest.mark.parametrize("arch", ADAPTER_ARCHS)
+    def test_mixed_batch_identical_to_individual(self, arch):
+        """One fused chunk over {base, acme, globex} slots emits, for
+        every session, the same tokens as an engine serving only that
+        session with only its adapter — the tentpole acceptance bar."""
+        cfg = _cfg(arch)
+        mux = _adapter_engine(cfg)
+        prompts = {"s-base": ("", np.arange(9, dtype=np.int32) * 5),
+                   "s-acme": ("acme", np.arange(7, dtype=np.int32) * 3),
+                   "s-glob": ("globex", np.arange(11, dtype=np.int32) * 2)}
+        for sid, (aid, p) in prompts.items():
+            mux.prefill_session(sid, p % cfg.vocab_size, adapter_id=aid)
+        together = {}
+        for k in (4, 3):                        # uneven chunking
+            for sid, toks in mux.decode_round(steps=k).items():
+                together.setdefault(sid, []).extend(toks)
+
+        for sid, (aid, p) in prompts.items():
+            solo = _adapter_engine(cfg, params=mux.params, slots=2,
+                                   adapters=(aid,) if aid else ())
+            solo.prefill_session(sid, p % cfg.vocab_size, adapter_id=aid)
+            alone = []
+            for k in (4, 3):
+                alone.extend(solo.decode_round(steps=k)[sid])
+            assert alone == together[sid], sid
+
+    def test_base_sessions_bit_identical_to_adapter_free_engine(self):
+        """Row 0 of the tables is all-zero: an engine with an adapter
+        runtime (and other tenants' adapters loaded) serves base
+        sessions exactly as an engine with no runtime at all."""
+        plain = InferenceEngine(CFG, slots=2, max_len=64)
+        mux = _adapter_engine(CFG, params=plain.params, slots=2)
+        prompt = (np.arange(8, dtype=np.int32) * 7) % CFG.vocab_size
+        plain.prefill_session("s", prompt)
+        mux.prefill_session("s", prompt)
+        assert plain.decode_round(steps=6)["s"] == \
+            mux.decode_round(steps=6)["s"]
+
+    def test_grouped_route_matches_gather_route_tokens(self):
+        """Engine-level route identity: the Pallas grouped-GEMM decode
+        emits the same tokens as the XLA gather fallback."""
+        ga = _adapter_engine(CFG, route="gather")
+        gr = _adapter_engine(CFG, params=ga.params, route="grouped")
+        for eng in (ga, gr):
+            eng.prefill_session("a", np.arange(6, dtype=np.int32),
+                                adapter_id="acme")
+            eng.prefill_session("b", np.arange(9, dtype=np.int32),
+                                adapter_id="globex")
+            eng.prefill_session("c", np.arange(4, dtype=np.int32))
+        assert ga.decode_round(steps=4) == gr.decode_round(steps=4)
+
+    def test_prefill_refuses_unloaded_adapter(self):
+        eng = _adapter_engine(CFG, adapters=("acme",))
+        with pytest.raises(ValueError, match="not loaded"):
+            eng.prefill_session("s", np.arange(4, dtype=np.int32),
+                                adapter_id="ghost")
+        plain = InferenceEngine(CFG, params=eng.params, slots=2, max_len=64)
+        with pytest.raises(ValueError, match="no adapter runtime"):
+            plain.prefill_session("s", np.arange(4, dtype=np.int32),
+                                  adapter_id="acme")
+
+    def test_unload_refused_while_bound(self):
+        eng = _adapter_engine(CFG, adapters=("acme",))
+        eng.prefill_session("s", np.arange(4, dtype=np.int32),
+                            adapter_id="acme")
+        with pytest.raises(RuntimeError, match="still bound"):
+            eng.unload_adapter("acme")
+        eng.release_slot("s")
+        eng.unload_adapter("acme")
+        assert not eng.adapters.is_loaded("acme")
+
+
+# ----------------------------------------------------------------------
+# session contract: migration + hibernation carry the binding
+# ----------------------------------------------------------------------
+class TestAdapterSessionContract:
+    def test_migration_preserves_binding_and_stream(self):
+        """export→transfer→import between engines: fingerprints match
+        (asserted inside transfer), the binding survives, and the
+        stream continues token-identical to an unmigrated reference."""
+        ref = _adapter_engine(CFG)
+        prompt = (np.arange(10, dtype=np.int32) * 3) % CFG.vocab_size
+        ref.prefill_session("m", prompt, adapter_id="acme")
+        expect = []
+        for k in (5, 6):
+            expect.extend(ref.decode_round(steps=k)["m"])
+
+        src = _adapter_engine(CFG, params=ref.params)
+        dst = _adapter_engine(CFG, params=ref.params)
+        src.prefill_session("m", prompt, adapter_id="acme")
+        got = list(src.decode_round(steps=5)["m"])
+        state_transfer.transfer(src, dst, "m")      # fingerprint-verified
+        src.release_slot("m")
+        assert dst.export_slot("m")["adapter_id"] == "acme"
+        got.extend(dst.decode_round(steps=6)["m"])
+        assert got == expect
+
+    def test_import_refused_when_target_lacks_adapter(self):
+        """An adapter binding the target cannot realise refuses the
+        transfer instead of silently continuing on the base model."""
+        src = _adapter_engine(CFG)
+        src.prefill_session("m", np.arange(6, dtype=np.int32),
+                            adapter_id="acme")
+        payload = src.export_slot("m")
+        bare = InferenceEngine(CFG, params=src.params, slots=2, max_len=64)
+        with pytest.raises(AdmissionDenied, match="acme"):
+            bare.import_slot("m", payload)
+        wrong = _adapter_engine(CFG, params=src.params, adapters=("globex",))
+        with pytest.raises(AdmissionDenied, match="acme"):
+            wrong.import_slot("m", payload)
+
+    def test_hibernate_resume_preserves_binding_and_fingerprint(self):
+        ref = _adapter_engine(CFG)
+        prompt = (np.arange(8, dtype=np.int32) * 5) % CFG.vocab_size
+        ref.prefill_session("h", prompt, adapter_id="acme")
+        expect = []
+        for k in (4, 7):
+            expect.extend(ref.decode_round(steps=k)["h"])
+
+        eng = _adapter_engine(CFG, params=ref.params, hibernation=True)
+        eng.prefill_session("h", prompt, adapter_id="acme")
+        got = list(eng.decode_round(steps=4)["h"])
+        fp = state_transfer.fingerprint(eng.export_slot("h"))
+        assert eng.hibernate_slot("h")
+        assert eng.has_hibernated("h")
+        eng.resume_session("h")
+        assert state_transfer.fingerprint(eng.export_slot("h")) == fp
+        assert eng.export_slot("h")["adapter_id"] == "acme"
+        got.extend(eng.decode_round(steps=7)["h"])
+        assert got == expect
+
+    def test_fingerprint_binds_adapter_id_and_stays_back_compat(self):
+        eng = _adapter_engine(CFG)
+        prompt = np.arange(6, dtype=np.int32)
+        eng.prefill_session("a", prompt, adapter_id="acme")
+        eng.prefill_session("b", prompt)
+        pa, pb = eng.export_slot("a"), eng.export_slot("b")
+        # same logical content except the binding ⇒ different identity
+        stripped = dict(pa, adapter_id="")
+        assert state_transfer.fingerprint(pa) != \
+            state_transfer.fingerprint(stripped)
+        # pre-adapter payloads (no key at all) fingerprint as empty
+        legacy = {k: v for k, v in pb.items() if k != "adapter_id"}
+        assert state_transfer.fingerprint(pb) == \
+            state_transfer.fingerprint(legacy)
+
+
+# ----------------------------------------------------------------------
+# control plane: ASP binding, discovery, PREPARE fail-fast
+# ----------------------------------------------------------------------
+def asp_with_adapter(adapter_id, ladder=()):
+    # BASIC tier: the demo base model edge-tiny must itself be admissible
+    return dataclasses.replace(default_asp(tier=QualityTier.BASIC),
+                               adapter_id=adapter_id,
+                               fallback_ladder=tuple(ladder))
+
+
+class TestAspAdapterBinding:
+    def test_wire_round_trip_and_default(self):
+        asp = asp_with_adapter("acme")
+        again = ASP.from_wire(asp.to_wire())
+        assert again == asp and again.adapter_id == "acme"
+        wire = default_asp().to_wire()
+        wire.pop("adapter_id")
+        assert ASP.from_wire(wire).adapter_id == ""   # pre-1.1 peers
+
+    def test_digest_binds_adapter_identity(self):
+        base, bound = default_asp(), asp_with_adapter("acme")
+        assert base.digest() != bound.digest()
+        assert bound.digest() == asp_with_adapter("acme").digest()
+
+    def test_discovery_excludes_by_adapter_constraints(self):
+        from repro.core.analytics import Analytics
+        from repro.core.discovery import admissible_set, discover
+        from repro.core.predictors import Predictors
+        from repro.core.sites import default_sites
+        clock = VirtualClock()
+        cat = default_catalog()
+        sites = default_sites(clock, cat.keys())
+        pred = Predictors(Analytics(clock))
+
+        def reasons(asp):
+            cands = discover(asp, cat, sites, pred, "zone-a")
+            return ({c.exclusion_reason for c in cands
+                     if not c.admissible and c.exclusion_reason},
+                    [c for c in cands if c.admissible])
+
+        excl, adm = reasons(asp_with_adapter("ghost"))
+        assert "adapter-unknown" in excl and not adm
+        with pytest.raises(SessionError) as ei:
+            admissible_set(discover(asp_with_adapter("ghost"), cat, sites,
+                                    pred, "zone-a"))
+        assert ei.value.cause is FailureCause.NO_FEASIBLE_BINDING
+
+        # us-only adapter on an eu-licensed base: edge/regional sites
+        # (eu) are excluded by the ADAPTER's sovereignty tags
+        cat.register_adapter(spec_for("us-only", regions=("us",)))
+        excl, adm = reasons(asp_with_adapter("us-only"))
+        assert "adapter-region" in excl
+        assert {c.site_id for c in adm
+                if c.model.model_id == "edge-tiny"} <= {"central-1"}
+
+        # non-base models only admit as declared fallback-ladder rungs
+        cat.register_adapter(spec_for("acme", seed=3))
+        excl, adm = reasons(asp_with_adapter("acme"))
+        assert "adapter-base-mismatch" in excl
+        assert {c.model.model_id for c in adm} == {"edge-tiny"}
+        _, adm = reasons(asp_with_adapter("acme",
+                                          ladder=(("mamba2-1.3b", 1),)))
+        assert "mamba2-1.3b" in {c.model.model_id for c in adm}
+
+    def test_prepare_fails_fast_on_unknown_adapter(self):
+        """Satellite: an unknown adapter_id surfaces at PREPARE as
+        NO_FEASIBLE_BINDING, never as an opaque serve failure."""
+        from repro.core.orchestrator import Orchestrator
+        orch = Orchestrator(clock=VirtualClock())
+        s = orch.begin_session(default_asp(), "u", "zone-a")
+        chosen = orch.page_for(s, orch.discover_for(s))
+        s.asp = dataclasses.replace(s.asp, adapter_id="ghost")
+        with pytest.raises(SessionError) as ei:
+            orch.prepare_for(s, chosen)
+        assert ei.value.cause is FailureCause.NO_FEASIBLE_BINDING
+        assert "ghost" in str(ei.value)
+
+    def test_prepare_refuses_base_mismatch_outside_ladder(self):
+        from repro.core.orchestrator import Orchestrator
+        orch = Orchestrator(clock=VirtualClock())
+        orch.catalog.register_adapter(
+            spec_for("acme", base="mamba2-1.3b"))
+        s = orch.begin_session(default_asp(), "u", "zone-a")
+        chosen = orch.page_for(s, orch.discover_for(s))
+        assert chosen.model.model_id != "mamba2-1.3b"
+        s.asp = dataclasses.replace(s.asp, adapter_id="acme")
+        with pytest.raises(SessionError) as ei:
+            orch.prepare_for(s, chosen)
+        assert ei.value.cause is FailureCause.NO_FEASIBLE_BINDING
+
+
+# ----------------------------------------------------------------------
+# northbound: the network-exposed adapter catalog
+# ----------------------------------------------------------------------
+def send(gw, msg):
+    out = gw.handle_json(msg.to_json())
+    if isinstance(out, list):
+        return [m.from_json(o) for o in out]
+    return m.from_json(out)
+
+
+class TestGatewayAdapterLifecycle:
+    @pytest.fixture
+    def gw(self):
+        return NorthboundGateway(clock=VirtualClock())
+
+    def test_register_load_establish_serve(self, gw):
+        reg = send(gw, m.RegisterAdapterRequest(
+            adapter_id="acme", base_model_id="edge-tiny", rank=4))
+        assert isinstance(reg, m.RegisterAdapterResponse)
+        assert reg.weight_fingerprint
+        assert gw.orch.catalog.adapters.has("acme")
+
+        load = send(gw, m.LoadAdapterRequest(adapter_id="acme",
+                                             site_id="edge-a"))
+        assert isinstance(load, m.LoadAdapterResponse) and load.loaded
+        assert gw.orch.catalog.adapters.loaded_sites("acme") == ("edge-a",)
+
+        disc = send(gw, m.DiscoverRequest(
+            invoker="t1", zone="zone-a", asp=asp_with_adapter("acme")))
+        assert isinstance(disc, m.DiscoverResponse)
+        admissible = [c for c in disc.candidates if c["admissible"]]
+        assert admissible and all(c["model_id"] == "edge-tiny"
+                                  for c in admissible)
+        sid = disc.session_id
+        send(gw, m.PageRequest(session_id=sid))
+        prep = send(gw, m.PrepareRequest(session_id=sid,
+                                         idempotency_key="p"))
+        assert isinstance(prep, m.PrepareResponse)
+        com = send(gw, m.CommitRequest(session_id=sid,
+                                       prepared_ref=prep.prepared_ref,
+                                       idempotency_key="c"))
+        assert isinstance(com, m.CommitResponse)
+        frames = send(gw, m.ServeRequest(session_id=sid, gen_tokens=4))
+        assert frames[-1].completed
+
+        # unload refused while the committed session is still bound
+        refused = send(gw, m.UnloadAdapterRequest(adapter_id="acme",
+                                                  site_id="edge-a"))
+        assert isinstance(refused, m.ErrorResponse)
+        assert refused.code == "E_BAD_REQUEST"
+        assert "still bound" in refused.detail
+        assert gw.orch.catalog.adapters.loaded_sites("acme") == ("edge-a",)
+
+        send(gw, m.ReleaseRequest(session_id=sid))
+        unload = send(gw, m.UnloadAdapterRequest(adapter_id="acme",
+                                                 site_id="edge-a"))
+        assert isinstance(unload, m.UnloadAdapterResponse) and unload.unloaded
+        assert gw.orch.catalog.adapters.loaded_sites("acme") == ()
+
+    def test_register_errors_are_bad_requests(self, gw):
+        err = send(gw, m.RegisterAdapterRequest(
+            adapter_id="x", base_model_id="no-such-model"))
+        assert isinstance(err, m.ErrorResponse)
+        assert err.code == "E_BAD_REQUEST"
+        send(gw, m.RegisterAdapterRequest(adapter_id="x",
+                                          base_model_id="edge-tiny"))
+        dup = send(gw, m.RegisterAdapterRequest(adapter_id="x",
+                                                base_model_id="edge-tiny"))
+        assert isinstance(dup, m.ErrorResponse)
+        assert dup.code == "E_BAD_REQUEST"
+
+    def test_load_unknown_adapter_or_site_refused(self, gw):
+        err = send(gw, m.LoadAdapterRequest(adapter_id="ghost",
+                                            site_id="edge-a"))
+        assert isinstance(err, m.ErrorResponse)
+        assert err.cause == FailureCause.MODEL_UNAVAILABLE.value
+        send(gw, m.RegisterAdapterRequest(adapter_id="x",
+                                          base_model_id="edge-tiny"))
+        err = send(gw, m.LoadAdapterRequest(adapter_id="x",
+                                            site_id="no-such-site"))
+        assert isinstance(err, m.ErrorResponse)
+        assert err.code == "E_BAD_REQUEST"
+
+    def test_load_respects_adapter_sovereignty(self, gw):
+        send(gw, m.RegisterAdapterRequest(adapter_id="us-only",
+                                          base_model_id="edge-tiny",
+                                          regions=["us"]))
+        err = send(gw, m.LoadAdapterRequest(adapter_id="us-only",
+                                            site_id="edge-a"))   # eu site
+        assert isinstance(err, m.ErrorResponse)
+        assert err.cause == FailureCause.SOVEREIGNTY_VIOLATION.value
+        ok = send(gw, m.LoadAdapterRequest(adapter_id="us-only",
+                                           site_id="central-1"))
+        assert isinstance(ok, m.LoadAdapterResponse) and ok.loaded
+
+    def test_unknown_adapter_establish_fails_with_no_feasible_binding(
+            self, gw):
+        """DISCOVER annotates every candidate as adapter-excluded; the
+        establish then fails with NO_FEASIBLE_BINDING, never an opaque
+        serve failure."""
+        disc = send(gw, m.DiscoverRequest(
+            invoker="t1", zone="zone-a", asp=asp_with_adapter("ghost")))
+        assert isinstance(disc, m.DiscoverResponse)
+        assert not any(c["admissible"] for c in disc.candidates)
+        assert any(c["exclusion_reason"] == "adapter-unknown"
+                   for c in disc.candidates)
+        err = send(gw, m.PageRequest(session_id=disc.session_id))
+        assert isinstance(err, m.ErrorResponse)
+        assert err.cause == FailureCause.NO_FEASIBLE_BINDING.value
+
+
+# ----------------------------------------------------------------------
+# coverage: every registered config resolves end-to-end
+# ----------------------------------------------------------------------
+REP_ASPS = {
+    mod: ASP(modality=mod, interaction=InteractionMode.STREAMING,
+             objectives=Objectives(ttfb_ms=300.0, p95_ms=600.0,
+                                   p99_ms=900.0, rho_min=0.99,
+                                   t_max_ms=2000.0, nu_min=20.0),
+             tier=QualityTier.BASIC, mobility=MobilityClass.STATIC)
+    for mod in MODALITY_FAMILIES
+}
+
+
+class TestConfigCatalogCoverage:
+    CAT = default_catalog()
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_every_config_resolves_through_default_catalog(self, arch):
+        entry = self.CAT.get(arch)
+        assert entry.model_id == arch and entry.version == "1.0"
+        assert entry.cfg.d_model == get_config(arch).d_model
+        assert get_smoke_config(arch).d_model > 0
+        # every entry is reachable by at least one representative ASP
+        matching = [mod for mod, asp in REP_ASPS.items()
+                    if entry.matches(asp)]
+        assert matching, f"{arch} matches no representative ASP"
+        assert set(matching) == set(entry.modalities) & set(REP_ASPS)
+
+    @pytest.mark.parametrize("mod", sorted(MODALITY_FAMILIES,
+                                           key=lambda x: x.value))
+    def test_every_advertised_modality_has_an_admissible_model(self, mod):
+        advertised = {mo for e in self.CAT.entries() for mo in e.modalities}
+        adm = self.CAT.admissible(REP_ASPS[mod])
+        if mod in advertised:
+            assert adm, f"no model admits {mod.value}"
+        else:
+            assert not adm          # honest: nothing claims this modality
+        fams = MODALITY_FAMILIES[mod]
+        assert all(e.cfg.family in fams for e in adm)
+
+
+# ----------------------------------------------------------------------
+# federation: digest advertises the adapter fleet
+# ----------------------------------------------------------------------
+class TestFederationAdapterDigest:
+    def test_digest_carries_adapter_keys_and_round_trips(self):
+        from repro.core.sites import default_sites
+        from repro.federation.registry import CapabilityDigest, digest_of
+        clock = VirtualClock()
+        cat = default_catalog()
+        cat.register_adapter(spec_for("acme"))
+        cat.register_adapter(spec_for("acme", version="2.0", seed=1))
+        sites = default_sites(clock, cat.keys())
+        dig = digest_of("dom-a", cat, sites, clock, epoch=1)
+        assert dig.adapter_keys == ("acme@1.0", "acme@2.0")
+        again = CapabilityDigest.from_wire(dig.to_wire())
+        assert again == dig
+        # pre-adapter peers: absent key decodes to the empty fleet
+        wire = dig.to_wire()
+        wire.pop("adapter_keys")
+        assert CapabilityDigest.from_wire(wire).adapter_keys == ()

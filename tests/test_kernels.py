@@ -20,6 +20,7 @@ from repro.kernels.rglru_scan.ref import rglru_scan_ref
 from repro.kernels.ssd_chunk.ssd_chunk import ssd_chunk
 from repro.kernels.ssd_chunk.ref import ssd_ref
 from repro.kernels.moe_gemm.moe_gemm import moe_gemm, moe_ffn_fused
+from repro.kernels.moe_gemm.ops import grouped_gemm
 from repro.kernels.moe_gemm.ref import moe_gemm_ref, moe_ffn_fused_ref
 
 KEY = jax.random.key(7)
@@ -187,3 +188,25 @@ class TestMoEGemm:
             moe_ffn_fused(x, wg, wu, interpret=True).astype(jnp.float32)
             - moe_ffn_fused_ref(x, wg, wu).astype(jnp.float32))))
         assert e1 < tol(dt) and e2 < tol(dt), (e1, e2)
+
+    @settings(max_examples=8, deadline=None)
+    @given(E=st.integers(1, 5), D=st.sampled_from([32, 64]),
+           F=st.sampled_from([64, 128]), seed=st.integers(0, 10_000))
+    def test_ragged_and_empty_groups_property(self, E, D, F, seed):
+        """Adapter-multiplexing dispatch shape: per-group row counts are
+        ragged and may be ZERO, and rows past each group's count hold
+        garbage. The kernel's result for the valid rows must match the
+        oracle exactly — padding garbage must never leak into them."""
+        rng = np.random.default_rng(seed)
+        sizes = rng.integers(0, 7, size=E)          # empty groups allowed
+        C = max(int(sizes.max()), 1)
+        x = np.full((E, C, D), 1e6, np.float32)     # garbage padding
+        for e, s in enumerate(sizes):
+            x[e, :s] = rng.standard_normal((s, D)).astype(np.float32) / 8
+        w = rng.standard_normal((E, D, F)).astype(np.float32) / 8
+        out = np.asarray(grouped_gemm(jnp.asarray(x), jnp.asarray(w),
+                                      block_c=64, block_f=64))
+        ref = np.asarray(moe_gemm_ref(jnp.asarray(x), jnp.asarray(w)))
+        for e, s in enumerate(sizes):
+            np.testing.assert_allclose(out[e, :s], ref[e, :s],
+                                       atol=5e-5, rtol=1e-4)

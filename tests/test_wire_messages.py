@@ -84,6 +84,24 @@ EXAMPLES = {
     "error": m.ErrorResponse(code="E_DEADLINE", cause="deadline expiry",
                              detail="PREPARE exceeded τ",
                              session_id="ais-000001"),
+    "register_adapter_request": m.RegisterAdapterRequest(
+        adapter_id="acme-support", base_model_id="edge-tiny",
+        version="1.2", base_model_version="1.0", rank=8,
+        regions=["eu", "us"], scale=2.0, seed=11),
+    "register_adapter_response": m.RegisterAdapterResponse(
+        adapter_id="acme-support", version="1.2",
+        base_model_id="edge-tiny", weight_fingerprint="deadbeefcafe0123",
+        at_s=1.0),
+    "load_adapter_request": m.LoadAdapterRequest(
+        adapter_id="acme-support", site_id="edge-a", version="1.2"),
+    "load_adapter_response": m.LoadAdapterResponse(
+        adapter_id="acme-support", site_id="edge-a", loaded=True,
+        engine_loaded=True, at_s=2.0),
+    "unload_adapter_request": m.UnloadAdapterRequest(
+        adapter_id="acme-support", site_id="edge-a"),
+    "unload_adapter_response": m.UnloadAdapterResponse(
+        adapter_id="acme-support", site_id="edge-a", unloaded=True,
+        at_s=3.0),
 }
 
 
