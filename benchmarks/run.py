@@ -42,12 +42,15 @@ def main() -> None:
 
     from benchmarks import (adapter_bench, engine_bench,  # noqa: E402
                             federation_bench, gateway_bench,
-                            migration_bench, plane_bench)
+                            migration_bench, plane_bench,
+                            splitserve_bench)
     benches = [
         ("engine",
          lambda: engine_bench.figure_rows(quick=args.fast)),
         ("adapters",
          lambda: adapter_bench.figure_rows(quick=args.fast)),
+        ("splitserve",
+         lambda: splitserve_bench.figure_rows(quick=args.fast)),
         ("fig2_p99_vs_load",
          lambda: figures.fig2_p99_vs_load(n_requests=n_req)),
         ("fig3_violation_vs_load",

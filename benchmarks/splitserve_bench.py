@@ -1,0 +1,344 @@
+"""Split-serving benchmark — speculative decode vs target-only streaming.
+
+The claim under test: for an interactive stream whose verify-quality
+anchor sits behind backhaul RTT, a split session (edge draft + one fused
+verify round per γ-token window) delivers BOTH of:
+
+* **token identity** — the committed stream is bitwise the target-only
+  greedy stream (the subsystem's hard invariant, checked per arm), and
+* **higher effective tok/s** — per streamed token the invoker pays the
+  2 ms access RTT instead of the 55 ms backhaul RTT; the backhaul is paid
+  once per ROUND and amortized over E[n+1] = (1−α^{γ+1})/(1−α) committed
+  tokens.
+
+Arms:
+
+* ``target_only`` — the verify engine alone; every token pays one
+  backhaul RTT plus measured decode compute. This also fixes the known
+  greedy continuation the oracle arms sweep against.
+* ``spec(α)`` for α ∈ {0.5, 0.7, 0.9, 0.95} — a real two-engine
+  SpecDecoder with ORACLE proposals: the known continuation corrupted at
+  per-token rate 1−α. The edge engine still runs (and rolls back) a real
+  draft round per window, so the draft-side compute is honestly charged
+  (conservatively ~2x, since the oracle path drafts AND re-grades).
+* ``edge_only`` — degraded/airplane mode: draft-engine rounds with no
+  verifier; the latency floor of the quality rung a verify-anchor loss
+  falls back to (stream stays live, tokens are draft-tier).
+* ``real_pair`` — engine-drafted (no oracle) rounds for the smoke
+  pairing, reporting the genuine acceptance rate (reference only: smoke
+  weights are random, so acceptance carries no signal worth guarding).
+
+Latency model: measured compute wall-clock + a virtual network term
+(55 ms backhaul / 2 ms access, the default_sites central-1 / edge-a
+figures). The CI guard enforces the RATIO of effective tok/s at α = 0.7
+(≥ 1.3× floor) plus the identity bits — both hardware-independent: the
+compute terms appear in numerator and denominator, measured in the same
+process on the same machine.
+
+    PYTHONPATH=src python -m benchmarks.splitserve_bench [--quick]
+        [--check-baseline] [--write-baseline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import numpy as np  # noqa: E402
+
+from benchmarks import _baseline  # noqa: E402
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.serving.engine import InferenceEngine  # noqa: E402
+from repro.splitserve import SpecDecoder, spec_speedup  # noqa: E402
+
+BASELINE_NAME = "splitserve"
+
+#: default_sites figures: central-1 backhaul vs edge-a access (zone-a)
+RTT_VERIFY_MS = 55.0
+RTT_EDGE_MS = 2.0
+ALPHAS = (0.5, 0.7, 0.9, 0.95)
+GAMMA = 4
+VERIFY_ARCH = "recurrentgemma-2b"   # hybrid: exercises stacked rollback
+DRAFT_ARCH = "edge-tiny"
+MAX_LEN = 160
+
+
+def _prompt(n=12, vocab=512, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, vocab, size=n).astype(np.int32)
+
+
+def _mk_engine(arch, seed):
+    return InferenceEngine(get_smoke_config(arch), slots=2,
+                           max_len=MAX_LEN, seed=seed)
+
+
+def _warm_spec(eng, prompt, *, grade_lens):
+    """Compile every jit variant a measured run will hit (prefill, the
+    γ-window autoregressive round, each teacher-forced grade length) on a
+    scratch slot, then free it — measured walls are steady-state."""
+    eng.prefill_session("warm", prompt)
+    eng.spec_round("warm", GAMMA)
+    eng.spec_abort("warm")
+    for n in grade_lens:
+        eng.spec_grade("warm", [0] * n)
+        eng.spec_abort("warm")
+    eng.release_slot("warm")
+
+
+def bench_target_only(n_tokens: int) -> dict:
+    """Verify model alone: the quality bar and the latency baseline."""
+    eng = _mk_engine(VERIFY_ARCH, seed=0)
+    prompt = _prompt()
+    eng.prefill_session("warm", prompt)
+    eng.decode_round()
+    eng.release_slot("warm")
+
+    t0 = time.perf_counter()
+    pre = eng.prefill_session("s", prompt)
+    prefill_ms = (time.perf_counter() - t0) * 1e3
+    toks = [pre["first_token"]]
+    t0 = time.perf_counter()
+    while len(toks) < n_tokens:
+        toks.append(eng.decode_round()["s"])
+    compute_ms = (time.perf_counter() - t0) * 1e3
+    total_ms = compute_ms + n_tokens * RTT_VERIFY_MS
+    return {
+        "tokens": toks,
+        "ttft_ms": prefill_ms + RTT_VERIFY_MS,
+        "compute_ms": compute_ms,
+        "network_ms": n_tokens * RTT_VERIFY_MS,
+        "tok_s_effective": n_tokens / total_ms * 1e3,
+    }
+
+
+def _spec_pair(prompt):
+    dra = _mk_engine(DRAFT_ARCH, seed=7)
+    ver = _mk_engine(VERIFY_ARCH, seed=0)
+    _warm_spec(dra, prompt, grade_lens=range(1, GAMMA + 2))
+    _warm_spec(ver, prompt, grade_lens=(GAMMA,))
+    return dra, ver
+
+
+def bench_spec(baseline: list, alpha: float, n_tokens: int,
+               seed: int = 0) -> dict:
+    """Oracle-draft arm: proposals are the known greedy continuation
+    corrupted at per-token rate 1−α, so acceptance is swept exactly while
+    every committed token must stay on the baseline path."""
+    prompt = _prompt()
+    dra, ver = _spec_pair(prompt)
+    rng = np.random.default_rng(seed)
+    vocab = get_smoke_config(VERIFY_ARCH).vocab_size
+    proposals = [t if rng.random() < alpha else int((t + 1) % vocab)
+                 for t in baseline[1:]]
+    dec = SpecDecoder(dra, ver, gamma=GAMMA)
+    t0 = time.perf_counter()
+    first = dec.start(prompt)
+    prefill_ms = (time.perf_counter() - t0) * 1e3
+    assert first == baseline[0]
+    dec.decode(n_tokens - 1, proposals=proposals)
+    st = dec.stats
+    n = len(dec.tokens)
+    compute_ms = st.draft_ms + st.verify_ms
+    network_ms = n * RTT_EDGE_MS + st.rounds * RTT_VERIFY_MS
+    total_ms = compute_ms + network_ms
+    out = {
+        "alpha": alpha,
+        "identical": dec.tokens[:n_tokens] == baseline[:n_tokens],
+        "acceptance": st.acceptance,
+        "tokens_per_round": st.tokens_per_round,
+        "rounds": st.rounds,
+        "ttft_ms": prefill_ms + RTT_VERIFY_MS,
+        "compute_ms": compute_ms,
+        "network_ms": network_ms,
+        "tok_s_effective": n / total_ms * 1e3,
+        "predicted_speedup": spec_speedup(
+            alpha, GAMMA, rtt_verify_ms=RTT_VERIFY_MS,
+            rtt_edge_ms=RTT_EDGE_MS),
+    }
+    dec.close()
+    return out
+
+
+def bench_edge_only(n_tokens: int) -> dict:
+    """Degraded-mode floor: what the stream costs per token after a
+    verify-anchor loss (edge rounds only, access RTT only)."""
+    prompt = _prompt()
+    dra, ver = _spec_pair(prompt)
+    dec = SpecDecoder(dra, ver, gamma=GAMMA)
+    dec.start(prompt)
+    dec.degrade()
+    t0 = time.perf_counter()
+    dec.decode(n_tokens - 1)
+    compute_ms = (time.perf_counter() - t0) * 1e3
+    n = len(dec.tokens)
+    total_ms = compute_ms + n * RTT_EDGE_MS
+    out = {
+        "degraded_rounds": dec.stats.degraded_rounds,
+        "compute_ms": compute_ms,
+        "network_ms": n * RTT_EDGE_MS,
+        "tok_s_effective": n / total_ms * 1e3,
+    }
+    dec.close()
+    return out
+
+
+def bench_real_pair(n_tokens: int) -> dict:
+    """Engine-drafted rounds (no oracle): the smoke pairing's true
+    acceptance, identity still enforced."""
+    prompt = _prompt()
+    dra, ver = _spec_pair(prompt)
+    base_eng = _mk_engine(VERIFY_ARCH, seed=0)
+    pre = base_eng.prefill_session("s", prompt)
+    base = [pre["first_token"]]
+    while len(base) < n_tokens:
+        base.append(base_eng.decode_round()["s"])
+    dec = SpecDecoder(dra, ver, gamma=GAMMA)
+    dec.start(prompt)
+    dec.decode(n_tokens - 1)
+    out = {
+        "identical": dec.tokens[:n_tokens] == base[:n_tokens],
+        "acceptance": dec.stats.acceptance,
+        "tokens_per_round": dec.stats.tokens_per_round,
+    }
+    dec.close()
+    return out
+
+
+def run(*, quick: bool = False) -> dict:
+    n = 48 if quick else 96
+    # the baseline overshoots the decode target so oracle proposals never
+    # run short: a shrunken final window would hit uncompiled shapes and
+    # charge jit time to the measured run
+    target = bench_target_only(n + GAMMA + 2)
+    baseline_tokens = target.pop("tokens")
+    spec = [bench_spec(baseline_tokens, a, n) for a in ALPHAS]
+    for arm in spec:
+        arm["speedup_vs_target"] = (arm["tok_s_effective"]
+                                    / target["tok_s_effective"])
+    edge = bench_edge_only(n)
+    real = bench_real_pair(min(n, 32))
+    at07 = next(a for a in spec if a["alpha"] == 0.7)
+    out = {
+        "gamma": GAMMA,
+        "n_tokens": n,
+        "rtt_verify_ms": RTT_VERIFY_MS,
+        "rtt_edge_ms": RTT_EDGE_MS,
+        "target_only": target,
+        "spec": spec,
+        "edge_only": edge,
+        "real_pair": real,
+        "speedup_at_0p7": at07["speedup_vs_target"],
+    }
+    # at alpha=0.7, gamma=4 the predictor gives E[n+1] ~= 2.77 committed
+    # tokens/round; 2.0 is the floor below which the sweep isn't sweeping
+    out["holds"] = (all(a["identical"] for a in spec)
+                    and real["identical"]
+                    and at07["tokens_per_round"] >= 2.0
+                    and at07["speedup_vs_target"] >= 1.3)
+    return out
+
+
+def check_baseline(result: dict) -> list:
+    """CI guard: hardware-independent ratios and correctness bits only.
+    Both tok/s arms run in the same process on the same machine, so the
+    runner's speed cancels in the ratio; identity is a bit."""
+    base = _baseline.load_baseline(BASELINE_NAME)
+    inv = base["invariants"]
+    failures = []
+    for arm in result["spec"]:
+        if not arm["identical"]:
+            failures.append(
+                f"spec(alpha={arm['alpha']}): committed stream diverged "
+                f"from target-only greedy — the identity invariant is "
+                f"BROKEN")
+    if not result["real_pair"]["identical"]:
+        failures.append("real_pair: committed stream diverged from "
+                        "target-only greedy")
+    if result["speedup_at_0p7"] < inv["speedup_at_0p7_min"]:
+        failures.append(
+            f"spec(alpha=0.7): effective tok/s ratio "
+            f"{result['speedup_at_0p7']:.2f} < floor "
+            f"{inv['speedup_at_0p7_min']:.2f} (the split stopped paying "
+            f"for its second anchor)")
+    at07 = next(a for a in result["spec"] if a["alpha"] == 0.7)
+    if at07["tokens_per_round"] < inv["round_tokens_at_0p7_min"]:
+        failures.append(
+            f"spec(alpha=0.7): {at07['tokens_per_round']:.2f} committed "
+            f"tokens/round < {inv['round_tokens_at_0p7_min']:.2f} — the "
+            f"oracle sweep is no longer sweeping what it claims "
+            f"(predictor says ~2.77)")
+    return failures
+
+
+def figure_rows(*, quick: bool = False):
+    """run.py adapter: per-arm rows + the derived guard bits."""
+    out = run(quick=quick)
+    target_tok_s = out["target_only"]["tok_s_effective"]
+    rows = [{"arm": "target_only", "alpha": 1.0,
+             "tok_s_effective": target_tok_s,
+             "ttft_ms": out["target_only"]["ttft_ms"], "identical": True,
+             "acceptance": 1.0, "speedup_vs_target": 1.0}]
+    rows += [{"arm": "spec", "alpha": a["alpha"],
+              "tok_s_effective": a["tok_s_effective"],
+              "ttft_ms": a["ttft_ms"], "identical": a["identical"],
+              "acceptance": a["acceptance"],
+              "speedup_vs_target": a["speedup_vs_target"]}
+             for a in out["spec"]]
+    edge_tok_s = out["edge_only"]["tok_s_effective"]
+    rows.append({"arm": "edge_only", "alpha": 0.0,
+                 "tok_s_effective": edge_tok_s,
+                 "ttft_ms": 0.0, "identical": False, "acceptance": 1.0,
+                 "speedup_vs_target": edge_tok_s / target_tok_s})
+    return rows, {"holds": out["holds"],
+                  "speedup_at_0p7": out["speedup_at_0p7"],
+                  "real_pair_acceptance":
+                      out["real_pair"]["acceptance"]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer tokens")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="enforce benchmarks/baselines/splitserve.json "
+                         "ratio invariants (CI guard)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="overwrite the checked-in baseline with this run")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    print(json.dumps(out, indent=1))
+    os.makedirs("artifacts/bench", exist_ok=True)
+    with open("artifacts/bench/splitserve.json", "w") as f:
+        json.dump(out, f, indent=1)
+    if args.write_baseline:
+        _baseline.write_baseline(
+            {"_comment": "regression-guard invariants for split serving "
+                         "+ edge-draft speculative decode. check_baseline "
+                         "enforces HARDWARE-INDEPENDENT metrics only: "
+                         "bitwise token identity of every spec arm with "
+                         "target-only greedy decode, the effective-tok/s "
+                         "ratio at alpha=0.7 under the 55ms-backhaul/"
+                         "2ms-access virtual network model (floor 1.3x "
+                         "sits well under the observed ~2.5-3x; both arms "
+                         "measured in the same process, so runner speed "
+                         "cancels), and the oracle sweep's measured "
+                         "acceptance staying near its target. Absolute "
+                         "ms / tok-s figures are reference only.",
+             "invariants": {"speedup_at_0p7_min": 1.3,
+                            "round_tokens_at_0p7_min": 2.0},
+             "reference": out}, BASELINE_NAME)
+    if args.check_baseline:
+        _baseline.enforce(check_baseline(out))
+    if not out["holds"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

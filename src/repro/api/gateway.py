@@ -67,6 +67,7 @@ class NorthboundGateway:
             orch = orch.core
         self.orch = orch if orch is not None else Orchestrator(clock=clock)
         self.orch.result_sinks.append(self._on_result)
+        self.orch.split_event_sinks.append(self._on_split_event)
         self._pending: Dict[str, _Pending] = {}
         self._prepared_refs: Dict[str, str] = {}     # ref -> session_id
         #: bounded retry window: oldest keys age out so a long-lived
@@ -155,6 +156,18 @@ class NorthboundGateway:
             session_id=session.session_id, event=event,
             state=state if state is not None else session.state.value,
             detail=detail or {}, at_s=self.orch.clock.now()))
+
+    def _on_split_event(self, session_id: str, event: str,
+                        detail: dict) -> None:
+        """SplitManager sink: split quality-tier transitions (degrade to
+        edge-only, verify recovery, collapse, verify migration) surface to
+        the invoker as explicit tier-change SessionEvents — an airplane
+        -mode session is DEGRADED, never silently worse and never failed."""
+        session = self.orch.sessions.get(session_id)
+        if session is None:
+            return
+        self._emit(session, "tier-change",
+                   detail={"event": event, **(detail or {})})
 
     def subscribe(self, invoker: str) -> None:
         """Open (or reset) the invoker's event subscription."""

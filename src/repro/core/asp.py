@@ -24,7 +24,12 @@ from typing import Tuple
 #: parties hashing the same intent under different field sets can never
 #: collide silently; the northbound gateway refuses mismatched majors.
 #: 1.1: adds ``adapter_id`` (tenant LoRA adapter binding; "" = base).
-ASP_SCHEMA_VERSION = "1.1"
+#: 1.2: adds ``split_policy`` (tiered split-serving consent; "never" =
+#: single-anchor, the pre-1.2 behaviour).
+ASP_SCHEMA_VERSION = "1.2"
+
+#: admissible values of :attr:`ASP.split_policy`
+SPLIT_POLICIES = ("never", "auto", "require")
 
 
 class SchemaVersionError(ValueError):
@@ -108,6 +113,12 @@ class ASP:
     #     that is the "base+adapter at edge" vs. "full model in region"
     #     degradation choice.
     adapter_id: str = ""
+    # (h) split-serving consent: whether execution may be split across
+    #     tiers (edge draft + anchored verify, token-identical greedy
+    #     spec-decode). "never" = single anchor only (pre-1.2 default);
+    #     "auto" = split when DISCOVER finds a feasible tier budget;
+    #     "require" = refuse establishment unless a split is feasible.
+    split_policy: str = "never"
 
     def validate(self) -> None:
         self.objectives.validate()
@@ -126,6 +137,10 @@ class ASP:
                 raise ValueError(
                     f"fallback ladder entry ({model_id!r}, {tier!r}) names "
                     f"no valid QualityTier") from None
+        if self.split_policy not in SPLIT_POLICIES:
+            raise ValueError(
+                f"split_policy must be one of {SPLIT_POLICIES}, "
+                f"got {self.split_policy!r}")
 
     # ------------------------------------------------------------------
     # wire codec (northbound exposure) + versioned digest
@@ -148,6 +163,7 @@ class ASP:
             "max_session_cost": self.max_session_cost,
             "fallback_ladder": [[m, int(t)] for m, t in self.fallback_ladder],
             "adapter_id": self.adapter_id,
+            "split_policy": self.split_policy,
         }
 
     @classmethod
@@ -170,8 +186,9 @@ class ASP:
             max_session_cost=float(d["max_session_cost"]),
             fallback_ladder=tuple((m, int(t))
                                   for m, t in d["fallback_ladder"]),
-            # minor-version tolerance: pre-1.1 peers omit the field
+            # minor-version tolerance: pre-1.1/1.2 peers omit the fields
             adapter_id=str(d.get("adapter_id", "")),
+            split_policy=str(d.get("split_policy", "never")),
         )
         asp.validate()
         return asp

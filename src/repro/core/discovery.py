@@ -62,10 +62,18 @@ class Candidate:
 
 def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
              zone: str, *, lam: float = 0.05, prompt_tokens: int = 512,
-             gen_tokens: int = 256, analytics=None) -> List[Candidate]:
-    """Materialise the annotated candidate set 𝒦 (Eq. 7)."""
+             gen_tokens: int = 256, analytics=None,
+             models=None) -> List[Candidate]:
+    """Materialise the annotated candidate set 𝒦 (Eq. 7).
+
+    ``models`` overrides the catalog's ASP-admissible entries with an
+    explicit candidate list — the split-placement path scores DRAFT
+    models this way, because a draft runs below the ASP's quality tier
+    by construction (the verifier carries the tier; the draft only has
+    to be latency/cost-feasible on its leg's budget share)."""
     asp.validate()
-    models = catalog.admissible(asp)
+    if models is None:
+        models = catalog.admissible(asp)
     if not models:
         raise SessionError(FailureCause.MODEL_UNAVAILABLE,
                            f"no catalog entry admits modality="

@@ -95,6 +95,15 @@ class Orchestrator:
         #: (home-first) and PREPARE/COMMIT route cross-domain for remote
         #: candidates. None ⇒ single-domain behaviour, unchanged.
         self.federation = None
+        #: set by a splitserve SplitManager: establishment may realize an
+        #: ASP as a TWO-anchor split (edge draft + verify) when the ASP's
+        #: split_policy allows it. None ⇒ single-anchor only, unchanged.
+        self.splits = None
+        #: callables ``(session_id, event, detail)`` notified on split
+        #: quality-tier transitions (established/degraded/recovered/
+        #: collapsed/verify-migrated) — the gateway subscribes here so
+        #: tier changes reach the invoker as SessionEvents
+        self.split_event_sinks: list = []
 
     # ------------------------------------------------------------------
     # stepwise lifecycle procedures — each northbound-drivable on its own;
@@ -201,6 +210,13 @@ class Orchestrator:
         """DISCOVER → PAGING → PREPARE/COMMIT under Eq. (11) deadlines."""
         session = self.begin_session(asp, invoker, zone)
         try:
+            # split establishment first when the ASP consents: "require"
+            # propagates any refusal; "auto" falls through to the normal
+            # single-anchor path when no feasible split exists
+            if self.splits is not None \
+                    and asp.split_policy != "never" \
+                    and self.splits.try_establish(session):
+                return session
             cands = self.discover_for(session)
             chosen = self.page_for(session, cands)
             prepared = self.prepare_for(session, chosen)
@@ -396,6 +412,11 @@ class Orchestrator:
         # same northbound surface that renews the leases; revoked grants
         # and sessions that stop heartbeating lapse (Eq. 6)
         self.policy.renew_consent(session.authz_ref)
+        # a split session's SECOND (verify) anchor renews through the same
+        # beat: lease lapse degrades to edge-only, collapsed acceptance
+        # un-splits (both emit quality-tier events, never failures)
+        if self.splits is not None:
+            self.splits.heartbeat(session)
         site = self.sites[session.binding.site_id]
         # live congestion from the site's serving plane (NWDAF loop): queue
         # depth per slot and arrival rate are MEASURED, not assumed — this is
@@ -526,4 +547,7 @@ class Orchestrator:
             plane = site.plane if site is not None else None
             if plane is not None and hasattr(plane.backend, "release_slot"):
                 plane.backend.release_slot(session.session_id)
+        # a split session also holds a verify half: free its leases too
+        if self.splits is not None:
+            self.splits.on_release(session)
         session.release()

@@ -36,11 +36,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import ClassVar, Dict, List, Optional
 
 from repro.api.messages import cause_for_code, code_for_cause
-from repro.core.asp import ASP
 from repro.core.failures import FailureCause, SessionError
 
 #: wire-schema version of the east-west protocol; majors must match between
@@ -110,67 +109,12 @@ def message_types() -> Dict[str, type]:
 
 
 # ----------------------------------------------------------------------
-# SLA budget decomposition
+# SLA budget decomposition — shared with split placement; the canonical
+# implementation lives in repro.core.budget and is re-exported here so
+# the east-west wire surface is unchanged.
 # ----------------------------------------------------------------------
-@dataclass(frozen=True)
-class SLABudget:
-    """Per-domain split of one ASP's objectives (all ms except cost)."""
-    ttfb_ms: float              # visited execution share of ℓ_TTFB
-    p95_ms: float
-    p99_ms: float               # visited execution share of ℓ_0.99
-    t_max_ms: float
-    max_cost_per_1k: float      # visited execution share of γ
-    home_transport_ms: float    # the share the home domain keeps (audit)
-    home_cost_per_1k: float     # home transit/retail share (audit)
-
-    def to_wire(self) -> dict:
-        return dataclasses.asdict(self)
-
-    @classmethod
-    def from_wire(cls, d: dict) -> "SLABudget":
-        names = {f.name for f in dataclasses.fields(cls)}
-        return cls(**{k: float(v) for k, v in d.items() if k in names})
-
-
-def decompose_budget(asp: ASP, home_transport_ms: float, *,
-                     home_cost_share: float = 0.15) -> SLABudget:
-    """Split the ASP objectives between home transport and visited
-    execution. Raises ``NO_FEASIBLE_BINDING`` when the transit share alone
-    exhausts any bound — the infeasibility is attributable *before* any
-    east-west traffic is generated."""
-    o = asp.objectives
-    visited = {
-        "ttfb_ms": o.ttfb_ms - home_transport_ms,
-        "p95_ms": o.p95_ms - home_transport_ms,
-        "p99_ms": o.p99_ms - home_transport_ms,
-        "t_max_ms": o.t_max_ms - home_transport_ms,
-    }
-    if min(visited.values()) <= 0.0:
-        raise SessionError(
-            FailureCause.NO_FEASIBLE_BINDING,
-            f"SLA budget infeasible after decomposition: home transport "
-            f"share {home_transport_ms:.1f}ms exhausts "
-            f"{min(visited, key=visited.get)}")
-    if not (0.0 <= home_cost_share < 1.0):
-        raise ValueError("home_cost_share must be in [0, 1)")
-    home_cost = asp.max_cost_per_1k_tokens * home_cost_share
-    return SLABudget(
-        ttfb_ms=visited["ttfb_ms"], p95_ms=visited["p95_ms"],
-        p99_ms=visited["p99_ms"], t_max_ms=visited["t_max_ms"],
-        max_cost_per_1k=asp.max_cost_per_1k_tokens - home_cost,
-        home_transport_ms=home_transport_ms, home_cost_per_1k=home_cost)
-
-
-def apply_budget(asp: ASP, budget: SLABudget) -> ASP:
-    """The visited-domain view of the contract: the same constraint part
-    (modality, sovereignty, mobility, ladder) under the visited execution
-    share of the objectives and cost envelope."""
-    return replace(
-        asp,
-        objectives=replace(asp.objectives, ttfb_ms=budget.ttfb_ms,
-                           p95_ms=budget.p95_ms, p99_ms=budget.p99_ms,
-                           t_max_ms=budget.t_max_ms),
-        max_cost_per_1k_tokens=budget.max_cost_per_1k)
+from repro.core.budget import (SLABudget, apply_budget,  # noqa: E402,F401
+                               decompose_budget, decompose_tiers)
 
 
 # ----------------------------------------------------------------------

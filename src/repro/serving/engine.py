@@ -189,6 +189,15 @@ class InferenceEngine:
         self._slot_write = jax.jit(self._slot_write_impl, donate_argnums=(0,))
         self._slot_read = jax.jit(self._slot_read_impl)
         self._slot_read_canon = jax.jit(self._slot_read_canon_impl)
+        # speculative decode: which cache leaves must be snapshotted per
+        # scan step to make a round rollback-able (empty = pos-only)
+        self._spec_paths = self._spec_stack_paths()
+        self._spec_pending: Dict[str, dict] = {}
+        self._spec_autoreg = jax.jit(self._spec_autoreg_impl,
+                                     static_argnums=(4,),
+                                     donate_argnums=(1,))
+        self._spec_forced = jax.jit(self._spec_forced_impl,
+                                    donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     def free_slots(self) -> int:
@@ -680,6 +689,219 @@ class InferenceEngine:
         (cache, _), toks = jax.lax.scan(step, (cache, last), None,
                                         length=steps)
         return cache, jnp.moveaxis(toks, 0, 1)          # [slots, K]
+
+    # ------------------------------------------------------------------
+    # Speculative decode: rollback-able scan rounds.
+    #
+    # Both the draft and verify role run the SAME shape of round: a
+    # (γ+1)-step fused scan consuming [ℓ, t_1..t_γ] (ℓ = the slot's
+    # unconsumed last token), whose post-step state at index n is exactly
+    # the engine state after committing n of the γ candidate tokens. The
+    # draft consumes its own outputs (autoregressive, producing the
+    # proposals), the verifier consumes the proposals teacher-forced
+    # (producing the target-greedy continuation y_0..y_γ in ONE fused
+    # forward). ``spec_accept(n, y_n)`` then restores the index-n
+    # snapshot: committed stream = d_1..d_n, y_n — bitwise what
+    # target-only greedy decode would have produced.
+    #
+    # Rollback cost depends on the cache family: full-attention caches
+    # written at absolute positions need NO snapshots (rows >= pos are
+    # never attended and later overwritten — pos-only rollback, including
+    # paged); recurrent/ring-buffer leaves (ssm conv/ssm, hybrid conv/h
+    # and windowed k/v, sliding-window k/v) are destructive per step and
+    # are stacked by the scan.
+    # ------------------------------------------------------------------
+    def _spec_stack_paths(self) -> List[tuple]:
+        """Cache-leaf paths that must be snapshotted per scan step."""
+        if self.cfg.family in ("dense", "moe", "encdec") \
+                and not self.cfg.sliding_window:
+            return []                       # pos-only rollback
+        paths: List[tuple] = []
+        layers = self.cache["layers"]
+        if isinstance(layers, tuple):       # hybrid: per-layer dicts
+            for i, layer in enumerate(layers):
+                for key in sorted(layer.keys()):
+                    paths.append(("layers", i, key))
+        else:                               # stacked-layer dict carry
+            for key in sorted(layers.keys()):
+                if key in ("cross_k", "cross_v"):
+                    continue                # static after prefill
+                paths.append(("layers", key))
+        return paths
+
+    @staticmethod
+    def _leaf_get(tree, path):
+        for p in path:
+            tree = tree[p]
+        return tree
+
+    @classmethod
+    def _leaf_set(cls, tree, path, value):
+        if not path:
+            return value
+        head = path[0]
+        if isinstance(tree, tuple):
+            return tuple(cls._leaf_set(t, path[1:], value) if i == head
+                         else t for i, t in enumerate(tree))
+        out = dict(tree)
+        out[head] = cls._leaf_set(tree[head], path[1:], value)
+        return out
+
+    def _spec_autoreg_impl(self, params, cache, last, active, steps: int):
+        """γ+1 autoregressive steps, snapshotting rollback leaves.
+        Returns (cache, tokens [slots, steps], stacks [steps, ...])."""
+        def step(carry, _):
+            c, fed = carry
+            logits, c = self.lm.decode_step(params, c, fed[:, None],
+                                            active=active)
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            fed = jnp.where(active, nxt, fed)
+            snap = [self._leaf_get(c, p) for p in self._spec_paths]
+            return (c, fed), (fed, snap)
+
+        (cache, _), (toks, stacks) = jax.lax.scan(
+            step, (cache, last), None, length=steps)
+        return cache, jnp.moveaxis(toks, 0, 1), stacks
+
+    def _spec_forced_impl(self, params, cache, active, forced):
+        """Teacher-forced scan over ``forced`` [slots, steps]: step t
+        consumes forced[:, t] and emits the greedy next token — the one
+        fused verify forward. Same snapshot discipline as the
+        autoregressive round."""
+        def step(c, tok):
+            logits, c = self.lm.decode_step(params, c, tok[:, None],
+                                            active=active)
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            snap = [self._leaf_get(c, p) for p in self._spec_paths]
+            return c, (nxt, snap)
+
+        cache, (ys, stacks) = jax.lax.scan(
+            step, cache, jnp.moveaxis(forced, 0, 1))
+        return cache, jnp.moveaxis(ys, 0, 1), stacks
+
+    def _spec_prologue(self, session_id: str, gamma: int):
+        """Shared admission for a spec round: slot lookup, bounds, page
+        growth, device pos/block resync from host truth (a spec round
+        always ends with host-side position authority)."""
+        idx = self._slot_map[session_id]
+        meta = self._slots[idx]
+        if meta.adapter_id:
+            raise ValueError(
+                f"speculative decode does not support adapter-bound "
+                f"sessions ({session_id} binds {meta.adapter_id!r})")
+        if gamma < 1:
+            raise ValueError("spec round needs gamma >= 1")
+        if meta.position + gamma + 1 > self.max_len:
+            raise ValueError(
+                f"spec round of gamma={gamma} overruns max_len "
+                f"{self.max_len} from position {meta.position}")
+        if session_id in self._spec_pending:
+            raise RuntimeError(
+                f"spec round already pending for {session_id}; "
+                f"spec_accept it first")
+        last = np.zeros(self.slots, np.int32)
+        active = np.zeros(self.slots, bool)
+        last[idx] = meta.last_token
+        active[idx] = True
+        if self.paged:
+            self._ensure_pages(idx, meta.position + gamma + 2)
+        pos_host = np.zeros(self.slots, np.int32)
+        for i, s in enumerate(self._slots):
+            if s is not None:
+                pos_host[i] = s.position
+        cache = dict(self.cache)
+        cache["pos"] = jnp.asarray(pos_host)
+        if self.paged:
+            cache["block"] = jnp.asarray(self._block_host)
+        self.cache = cache
+        return idx, meta, last, active
+
+    def spec_round(self, session_id: str, gamma: int) -> List[int]:
+        """Draft role: propose γ tokens autoregressively from the current
+        state. The slot's host state does NOT advance — the round is
+        pending until ``spec_accept`` commits a prefix of it. Only one
+        slot runs; co-resident slots ride with active=False (frozen), so
+        the snapshots are restorable wholesale."""
+        gamma = int(gamma)
+        idx, meta, last, active = self._spec_prologue(session_id, gamma)
+        pre = [self._leaf_get(self.cache, p).copy()
+               for p in self._spec_paths]
+        self.cache, toks, stacks = self._spec_autoreg(
+            self.params, self.cache, jnp.asarray(last),
+            jnp.asarray(active), gamma + 1)
+        toks = np.asarray(toks)
+        self._spec_pending[session_id] = {"stacks": stacks, "pre": pre,
+                                          "base_pos": meta.position,
+                                          "gamma": gamma}
+        self._pos_dirty = True      # device pos ran ahead of host truth
+        return [int(t) for t in toks[idx, :gamma]]      # d_1..d_γ
+
+    def spec_grade(self, session_id: str, tokens: List[int]) -> List[int]:
+        """Verify role: consume ``tokens`` = [d_1..d_γ] teacher-forced in
+        one fused forward and return the target-greedy continuation
+        y_0..y_γ (y_t = greedy next after [.., ℓ, d_1..d_t]). Pending
+        until ``spec_accept``."""
+        gamma = len(tokens)
+        idx, meta, last, active = self._spec_prologue(session_id, gamma)
+        pre = [self._leaf_get(self.cache, p).copy()
+               for p in self._spec_paths]
+        forced = np.zeros((self.slots, gamma + 1), np.int32)
+        forced[idx, 0] = meta.last_token
+        forced[idx, 1:] = tokens
+        self.cache, ys, stacks = self._spec_forced(
+            self.params, self.cache, jnp.asarray(active),
+            jnp.asarray(forced))
+        ys = np.asarray(ys)
+        self._spec_pending[session_id] = {"stacks": stacks, "pre": pre,
+                                          "base_pos": meta.position,
+                                          "gamma": gamma}
+        self._pos_dirty = True
+        return [int(t) for t in ys[idx]]                # y_0..y_γ
+
+    def spec_accept(self, session_id: str, n_accept: int,
+                    last_token: int) -> None:
+        """Commit the longest agreeing prefix: restore the index-n
+        snapshot (state after consuming ℓ, d_1..d_n), advance the host
+        position by n+1 committed tokens, and make ``last_token`` (= y_n,
+        the verifier's correction/extension) the new unconsumed token.
+        n ∈ [0, γ]; n = γ accepts the whole round."""
+        pend = self._spec_pending.pop(session_id)
+        n = int(n_accept)
+        if not (0 <= n <= pend["gamma"]):
+            raise ValueError(
+                f"n_accept {n} outside [0, {pend['gamma']}]")
+        cache = self.cache
+        for path, stacked in zip(self._spec_paths, pend["stacks"]):
+            cache = self._leaf_set(cache, path, stacked[n])
+        self.cache = cache
+        idx = self._slot_map[session_id]
+        meta = self._slots[idx]
+        meta.position = pend["base_pos"] + n + 1
+        meta.last_token = int(last_token)
+        meta.tokens_generated += n + 1
+        meta.last_used = next(self._use_clock)
+        self._pos_dirty = True      # next round resyncs device pos
+
+    def spec_abort(self, session_id: str) -> None:
+        """Drop a pending round without committing anything: restore the
+        pre-round snapshot of every destructive leaf (host position never
+        advanced; device pos resyncs on the next round)."""
+        pend = self._spec_pending.pop(session_id, None)
+        if pend is not None:
+            cache = self.cache
+            for path, leaf in zip(self._spec_paths, pend["pre"]):
+                cache = self._leaf_set(cache, path, leaf)
+            self.cache = cache
+        self._pos_dirty = True
+
+    def override_last_token(self, session_id: str, token: int) -> None:
+        """Re-point the slot's unconsumed token at an externally committed
+        one. The draft half of a split session decodes the VERIFIER's
+        token stream, not its own: after the draft-side prefill (and
+        after every accepted round) the next token it must consume is
+        whatever the verifier committed."""
+        meta = self._slots[self._slot_map[session_id]]
+        meta.last_token = int(token)
 
     def decode_round(self, steps: Optional[int] = None
                      ) -> Dict[str, Union[int, List[int]]]:

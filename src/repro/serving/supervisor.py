@@ -227,6 +227,14 @@ class SiteSupervisor:
         then AI-PAGING re-anchoring for every orphan — per-session recovery
         wall time is what the recovery bench reports as p50/p99."""
         plane = self.site.plane
+        # split sessions first, while the lease table is still intact: a
+        # dead VERIFY anchor degrades its splits to edge-only (they keep
+        # their edge binding and never appear in the orphan census below);
+        # a dead EDGE anchor dissolves the split and falls through to the
+        # normal re-anchoring path
+        splits = getattr(self.orch, "splits", None)
+        if splits is not None:
+            splits.on_site_dead(self.site_id)
         # the census must run BEFORE leases are voided: these sessions stop
         # being distinguishable once the lease table clears
         orphans = self._anchored_sessions()

@@ -1147,3 +1147,146 @@ def simulate_registry_staleness_storm(*, n_domains: int = 6,
         n_domains=n_domains, established_pre=pre, stale_notes=stale_notes,
         storm_failures=failures, storm_causes=causes,
         established_post_recovery=post)
+
+
+# ----------------------------------------------------------------------
+# split serving: verify-anchor crash degrades to edge-only, then recovers
+# ----------------------------------------------------------------------
+def _split_topology(clock: VirtualClock, n_sessions: int):
+    """Two edge sites hosting the draft model plus TWO verify-capable
+    regional sites (so recovery after a verify crash has somewhere to
+    land). regional-2 is RTT-worse than regional-1, making the initial
+    verify paging deterministic."""
+    from repro.core.catalog import Catalog, default_catalog
+
+    full = default_catalog()
+    cat = Catalog()
+    cat.register(full.get("recurrentgemma-2b"))   # edge draft (vocab 256k)
+    cat.register(full.get("minitron-8b"))         # verify (vocab 256k)
+
+    from repro.core.sites import ExecutionSite, SiteSpec
+    v5e_flops, v5e_bw, hbm = 197e12, 819e9, 16e9
+
+    def mk(sid, kind, rtt, slots, hosted):
+        return ExecutionSite(SiteSpec(
+            sid, kind, "eu", chips=16, hbm_bytes_total=16 * hbm,
+            peak_flops=16 * v5e_flops, hbm_bw=16 * v5e_bw,
+            decode_slots=slots, rtt_ms=dict(rtt), hosted_models=hosted,
+            price_per_chip_s=2.0e-4), clock)
+
+    edge_slots = max(64, n_sessions)
+    verify_slots = max(128, n_sessions)
+    draft_host = ("recurrentgemma-2b@1.0",)
+    verify_host = ("minitron-8b@1.0",)
+    return cat, {
+        "edge-a": mk("edge-a", "edge",
+                     {"zone-a": 2.0, "zone-b": 9.0}, edge_slots, draft_host),
+        "edge-b": mk("edge-b", "edge",
+                     {"zone-a": 9.0, "zone-b": 2.0}, edge_slots, draft_host),
+        "regional-1": mk("regional-1", "regional",
+                         {"zone-a": 12.0, "zone-b": 12.0}, verify_slots,
+                         verify_host),
+        "regional-2": mk("regional-2", "regional",
+                         {"zone-a": 30.0, "zone-b": 30.0}, verify_slots,
+                         verify_host),
+    }
+
+
+@dataclass
+class VerifyCrashResult:
+    n_sessions: int
+    split_established: int         # sessions that committed as splits
+    verify_site: str               # where the verify anchors landed
+    failed_inflight: int           # MUST be 0: in-flight rides the edge
+    orphaned: int                  # MUST be 0: edge bindings survive
+    degraded: int                  # splits degraded to edge-only
+    still_committed: int           # sessions still COMMITTED post-crash
+    serve_ok_degraded: int         # sampled serves while degraded
+    recovered: int                 # verify anchors re-attached
+    recovered_sites: Dict[str, int]  # where recovery landed
+    serve_ok_after: int            # sampled serves at full quality
+    events: Dict[str, int]         # tier-change event histogram
+
+
+def simulate_verify_crash_degrade(*, n_sessions: int = 48,
+                                  inflight: int = 64,
+                                  serve_sample: int = 16,
+                                  seed: int = 0) -> VerifyCrashResult:
+    """Chaos for split serving: every AIS establishes as a TWO-anchor
+    split (edge draft + regional verify, ``split_policy="require"``), live
+    work is queued on the EDGE data plane, then the verify site crashes.
+    The acceptance bar is the airplane-mode contract: ZERO failed
+    in-flight requests and ZERO orphans (the interactive path never
+    touched the dead site), every split emits an explicit quality-tier
+    degrade event, and after re-attachment every session is back at full
+    quality on a surviving verify site."""
+    from dataclasses import replace as _dc_replace
+
+    from repro.core import Orchestrator, default_asp
+    from repro.core.asp import QualityTier
+    from repro.serving.supervisor import FleetSupervisor
+    from repro.splitserve import SplitManager
+
+    rng = np.random.default_rng(seed)
+    clock = VirtualClock()
+    cat, sites = _split_topology(clock, n_sessions)
+    orch = Orchestrator(clock=clock, catalog=cat, sites=sites)
+    mgr = SplitManager(orch)
+    events: Dict[str, int] = {}
+    orch.split_event_sinks.append(
+        lambda sid, ev, d: events.update({ev: events.get(ev, 0) + 1}))
+
+    # the split's cost envelope covers BOTH anchors (each leg gets a
+    # share), so the profile pays for two reservations explicitly
+    asp = _dc_replace(default_asp(tier=QualityTier.STANDARD),
+                      split_policy="require", max_cost_per_1k_tokens=4.0)
+    zones = ("zone-a", "zone-b")
+    sessions = []
+    for i in range(n_sessions):
+        sessions.append(orch.establish(asp, invoker=f"ue-{i}",
+                                       zone=zones[i % 2]))
+    split_states = [mgr.states[s.session_id] for s in sessions]
+    verify_site = split_states[0].verify_binding.site_id
+    established = sum(1 for st in split_states
+                      if st.verify_binding is not None)
+
+    # live work rides the EDGE data plane — the crash must not touch it
+    targets = [sessions[int(j)] for j in
+               rng.integers(0, n_sessions, size=inflight)]
+    for s in targets:
+        orch.submit(s, prompt_tokens=64, gen_tokens=16)
+
+    sup = FleetSupervisor(orch)
+    report = sup.crash(verify_site, detail="chaos: verify anchor crash")
+
+    degraded = sum(1 for st in split_states if st.degraded)
+    still = sum(1 for s in sessions if s.committed())
+    # degraded sessions keep serving (edge-only quality rung)
+    serve_deg = 0
+    for s in sessions[:serve_sample]:
+        clock.advance(0.001)
+        serve_deg += int(orch.serve(s, prompt_tokens=64,
+                                    gen_tokens=16).completed)
+
+    # recovery: re-attach a verify anchor on a surviving regional site
+    recovered, landed = 0, {}
+    for s in sessions:
+        clock.advance(0.001)
+        mgr.recover(s)
+        st = mgr.states[s.session_id]
+        if st.verify_binding is not None and not st.degraded:
+            recovered += 1
+            landed[st.verify_binding.site_id] = \
+                landed.get(st.verify_binding.site_id, 0) + 1
+    serve_ok = 0
+    for s in sessions[:serve_sample]:
+        clock.advance(0.001)
+        serve_ok += int(orch.serve(s, prompt_tokens=64,
+                                   gen_tokens=16).completed)
+    return VerifyCrashResult(
+        n_sessions=n_sessions, split_established=established,
+        verify_site=verify_site, failed_inflight=report.failed_inflight,
+        orphaned=report.orphaned, degraded=degraded,
+        still_committed=still, serve_ok_degraded=serve_deg,
+        recovered=recovered, recovered_sites=landed,
+        serve_ok_after=serve_ok, events=dict(events))

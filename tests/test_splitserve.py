@@ -1,0 +1,503 @@
+"""Split serving: tier budgets, draft pairings, spec-decode identity,
+dual-anchor 2PC atomicity, degrade/recover/collapse, northbound events.
+
+The identity property is the whole point of the subsystem: every token a
+split session commits must be EXACTLY the token target-only greedy decode
+would have produced — speculative decode buys latency, never quality.
+"""
+
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.registry import (ARCH_TIERS, DRAFT_PAIRINGS, arch_tier,
+                                    draft_compatible, draft_targets,
+                                    get_config, get_smoke_config)
+from repro.core import Orchestrator, default_asp
+from repro.core.asp import ASP, SPLIT_POLICIES, QualityTier
+from repro.core.budget import (SLABudget, apply_budget, decompose_budget,
+                               decompose_tiers)
+from repro.core.catalog import Catalog, default_catalog
+from repro.core.clock import VirtualClock
+from repro.core.failures import FailureCause, SessionError
+from repro.core.sites import ExecutionSite, SiteSpec
+from repro.serving.engine import InferenceEngine
+from repro.splitserve import (SpecDecoder, SplitManager, propose_split,
+                              expected_round_tokens, spec_speedup)
+
+SPEC_ARCHS = ("edge-tiny", "recurrentgemma-2b", "mamba2-1.3b")
+PROMPT = (np.arange(1, 13, dtype=np.int32) * 7) % 500
+
+
+# ======================================================================
+# tier-budget helper (shared by east-west federation and split placement)
+# ======================================================================
+class TestTierBudget:
+    def test_zero_transit_passthrough(self):
+        asp = default_asp()
+        b = decompose_budget(asp, 0.0)
+        o = asp.objectives
+        assert (b.ttfb_ms, b.p95_ms, b.p99_ms, b.t_max_ms) == \
+            (o.ttfb_ms, o.p95_ms, o.p99_ms, o.t_max_ms)
+
+    def test_infeasibility_boundary(self):
+        """home transport ≥ the tightest bound ⇒ attributable refusal, not
+        a negative budget."""
+        asp = default_asp()
+        with pytest.raises(SessionError) as ei:
+            decompose_budget(asp, asp.objectives.ttfb_ms)
+        assert ei.value.cause is FailureCause.NO_FEASIBLE_BINDING
+        assert "exhausts" in str(ei.value)
+        # one epsilon inside the boundary is feasible
+        b = decompose_budget(asp, asp.objectives.ttfb_ms - 0.5)
+        assert b.ttfb_ms == pytest.approx(0.5)
+
+    def test_home_cost_share_validated_after_feasibility(self):
+        asp = default_asp()
+        with pytest.raises(ValueError):
+            decompose_budget(asp, 1.0, home_cost_share=1.0)
+        # infeasible transport wins over a bad share: the SessionError is
+        # the attributable failure the invoker can act on
+        with pytest.raises(SessionError):
+            decompose_budget(asp, asp.objectives.ttfb_ms + 1,
+                             home_cost_share=1.0)
+
+    def test_decompose_tiers_names_offending_tier(self):
+        asp = default_asp()
+        with pytest.raises(SessionError) as ei:
+            decompose_tiers(asp, {"edge": 2.0,
+                                  "verify": asp.objectives.ttfb_ms})
+        assert "tier 'verify'" in str(ei.value)
+
+    def test_decompose_tiers_share_validation(self):
+        asp = default_asp()
+        with pytest.raises(ValueError):
+            decompose_tiers(asp, {})
+        with pytest.raises(ValueError):
+            decompose_tiers(asp, {"a": 1.0, "b": 1.0},
+                            cost_shares={"a": 0.8, "b": 0.8})
+
+    def test_decompose_tiers_splits_cost_envelope(self):
+        asp = default_asp()
+        b = decompose_tiers(asp, {"edge": 2.0, "verify": 12.0})
+        total = sum(x.max_cost_per_1k for x in b.values())
+        assert total == pytest.approx(asp.max_cost_per_1k_tokens)
+
+    def test_eastwest_reexports_canonical_impl(self):
+        from repro.federation import eastwest
+        assert eastwest.decompose_budget is decompose_budget
+        assert eastwest.SLABudget is SLABudget
+        assert eastwest.apply_budget is apply_budget
+
+    def test_budget_wire_roundtrip(self):
+        b = decompose_budget(default_asp(), 7.0)
+        assert SLABudget.from_wire(b.to_wire()) == b
+
+    def test_apply_budget_rewrites_objectives(self):
+        asp = default_asp()
+        b = decompose_budget(asp, 10.0)
+        tight = apply_budget(asp, b)
+        assert tight.objectives.p99_ms == asp.objectives.p99_ms - 10.0
+        assert tight.max_cost_per_1k_tokens == b.max_cost_per_1k
+
+
+# ======================================================================
+# registry: draft pairings + tier metadata
+# ======================================================================
+class TestDraftPairings:
+    def test_every_pairing_shares_vocab(self):
+        """The coverage guarantee: a declared pairing can NEVER be
+        rejected mid-stream for token-space mismatch — identical vocab is
+        checked here against the full configs."""
+        for draft, targets in DRAFT_PAIRINGS.items():
+            dcfg = get_config(draft)
+            for target in targets:
+                assert draft_compatible(dcfg, get_config(target)), \
+                    f"{draft} -> {target}"
+
+    def test_pairing_drafts_are_edge_tier(self):
+        for draft in DRAFT_PAIRINGS:
+            assert arch_tier(draft) == "edge"
+
+    def test_tiers_cover_all_archs(self):
+        from repro.configs.registry import ARCH_IDS
+        assert set(ARCH_TIERS) == set(ARCH_IDS)
+        assert set(ARCH_TIERS.values()) == {"edge", "region", "central"}
+        assert arch_tier("no-such-model") == "central"
+
+    def test_vocab_mismatch_detected(self):
+        assert not draft_compatible(get_config("edge-tiny"),
+                                    get_config("minitron-8b"))
+        assert draft_targets("edge-tiny") == ()
+
+    def test_spec_decoder_rejects_mismatch_before_streaming(self):
+        a = types.SimpleNamespace(cfg=get_config("edge-tiny"))
+        b = types.SimpleNamespace(cfg=get_config("minitron-8b"))
+        with pytest.raises(ValueError, match="pairing rejected"):
+            SpecDecoder(a, b)
+
+
+# ======================================================================
+# spec-decode identity (the tentpole's acceptance bar)
+# ======================================================================
+def _target_only(cfg, seed, prompt, n):
+    eng = InferenceEngine(cfg, slots=2, max_len=128, seed=seed)
+    pre = eng.prefill_session("s", prompt)
+    toks = [pre["first_token"]]
+    while len(toks) < n:
+        toks.append(eng.decode_round()["s"])
+    return toks[:n]
+
+
+def _decoder(verify_arch, draft_arch, *, seed_v=0, seed_d=7, gamma=4,
+             paged=False):
+    ver = InferenceEngine(get_smoke_config(verify_arch), slots=2,
+                          max_len=128, seed=seed_v, paged=paged)
+    dra = InferenceEngine(get_smoke_config(draft_arch), slots=2,
+                          max_len=128, seed=seed_d)
+    return SpecDecoder(dra, ver, gamma=gamma, session_id="s")
+
+
+class TestSpecIdentity:
+    @settings(max_examples=6, deadline=None)
+    @given(st.sampled_from(SPEC_ARCHS), st.sampled_from((1, 2, 4)))
+    def test_bitwise_identity_with_target_only(self, arch, gamma):
+        """Dense/hybrid/ssm verify, γ ∈ {1,2,4}, a genuinely disagreeing
+        draft (different arch/seed): the committed stream is bitwise the
+        target-only greedy stream."""
+        base = _target_only(get_smoke_config(arch), 0, PROMPT, 20)
+        dec = _decoder(arch, "edge-tiny", gamma=gamma)
+        dec.start(PROMPT)
+        dec.decode(19)
+        assert dec.tokens[:20] == base
+
+    def test_twin_draft_accepts_full_window(self):
+        """A draft identical to the target accepts γ per round — the
+        accept rule's upper bound is reachable, not just safe."""
+        arch = "edge-tiny"
+        base = _target_only(get_smoke_config(arch), 0, PROMPT, 20)
+        dec = _decoder(arch, arch, seed_v=0, seed_d=0, gamma=4)
+        dec.start(PROMPT)
+        dec.decode(19)
+        assert dec.tokens[:20] == base
+        assert dec.stats.acceptance == 1.0
+        assert dec.stats.tokens_per_round == pytest.approx(5.0)
+
+    def test_identity_through_verify_migration(self):
+        """Mid-stream make-before-break re-anchor of the verify tier:
+        export/import the slot into a fresh engine, keep decoding — still
+        bitwise identical."""
+        arch = "recurrentgemma-2b"
+        base = _target_only(get_smoke_config(arch), 0, PROMPT, 24)
+        dec = _decoder(arch, "edge-tiny", gamma=2)
+        dec.start(PROMPT)
+        dec.decode(9)
+        fresh = InferenceEngine(get_smoke_config(arch), slots=2,
+                                max_len=128, seed=0)
+        dec.migrate_verify(fresh)
+        dec.decode(24 - len(dec.tokens))
+        assert dec.tokens[:24] == base
+
+    def test_identity_with_oracle_proposals(self):
+        """External proposals (the bench's acceptance-sweep arm): feeding
+        the known greedy continuation with corruptions still commits the
+        exact target stream."""
+        arch = "mamba2-1.3b"
+        base = _target_only(get_smoke_config(arch), 0, PROMPT, 20)
+        rng = np.random.default_rng(3)
+        corrupted = [t if rng.random() < 0.6 else (t + 1) % 512
+                     for t in base[1:]]
+        dec = _decoder(arch, "edge-tiny", gamma=4)
+        first = dec.start(PROMPT)
+        assert first == base[0]
+        dec.decode(19, proposals=corrupted)
+        assert dec.tokens[:20] == base
+        assert 0.0 < dec.stats.acceptance < 1.0
+
+    def test_degraded_mode_and_reattach(self):
+        """Airplane mode: losing the verifier keeps the stream alive at
+        draft quality; re-attaching a verifier makes every SUBSEQUENT
+        token target-greedy given the mixed prefix."""
+        dec = _decoder("edge-tiny", "mamba2-1.3b", seed_d=5, gamma=2)
+        dec.start(PROMPT)
+        dec.decode(4)
+        dec.degrade()
+        assert dec.degraded
+        dec.decode(4)                      # edge-only rounds still stream
+        assert dec.stats.degraded_rounds > 0
+        n_before = len(dec.tokens)
+        fresh = InferenceEngine(get_smoke_config("edge-tiny"), slots=2,
+                                max_len=128, seed=0)
+        dec.reattach_verify(fresh)
+        assert not dec.degraded
+        dec.decode(6)
+        # oracle: target-only continuation of the full committed prefix
+        oracle = InferenceEngine(get_smoke_config("edge-tiny"), slots=2,
+                                 max_len=128, seed=0)
+        stream = np.concatenate(
+            [PROMPT, np.asarray(dec.tokens[:n_before - 1], np.int32)])
+        oracle.prefill_session("s", stream)
+        oracle.override_last_token("s", dec.tokens[n_before - 1])
+        want = []
+        while len(want) < len(dec.tokens) - n_before:
+            want.append(oracle.decode_round()["s"])
+        assert dec.tokens[n_before:] == want
+
+    def test_predictor_formulas(self):
+        assert expected_round_tokens(0.0, 4) == pytest.approx(1.0)
+        assert expected_round_tokens(1.0, 4) == pytest.approx(5.0)
+        assert expected_round_tokens(0.5, 1) == pytest.approx(1.5)
+        # network-dominated regime: backhaul RTT ≫ access RTT makes the
+        # split win grow with acceptance
+        lo = spec_speedup(0.3, 4, rtt_verify_ms=55.0, rtt_edge_ms=2.0)
+        hi = spec_speedup(0.9, 4, rtt_verify_ms=55.0, rtt_edge_ms=2.0)
+        assert hi > lo > 0.5
+        assert hi > 2.0
+
+
+# ======================================================================
+# control plane: dual-anchor 2PC, degrade/recover/collapse, events
+# ======================================================================
+def _mk_site(clock, sid, kind, rtt, slots, hosted):
+    v5e_flops, v5e_bw, hbm = 197e12, 819e9, 16e9
+    return ExecutionSite(SiteSpec(
+        sid, kind, "eu", chips=16, hbm_bytes_total=16 * hbm,
+        peak_flops=16 * v5e_flops, hbm_bw=16 * v5e_bw, decode_slots=slots,
+        rtt_ms=dict(rtt), hosted_models=hosted,
+        price_per_chip_s=2.0e-4), clock)
+
+
+def _split_orch(*, with_edge=True):
+    clock = VirtualClock()
+    full = default_catalog()
+    cat = Catalog()
+    cat.register(full.get("recurrentgemma-2b"))
+    cat.register(full.get("minitron-8b"))
+    sites = {
+        "regional-1": _mk_site(clock, "regional-1", "regional",
+                               {"zone-a": 12.0}, 64, ("minitron-8b@1.0",)),
+        "regional-2": _mk_site(clock, "regional-2", "regional",
+                               {"zone-a": 30.0}, 64, ("minitron-8b@1.0",)),
+    }
+    if with_edge:
+        sites["edge-a"] = _mk_site(
+            clock, "edge-a", "edge", {"zone-a": 2.0}, 32,
+            ("recurrentgemma-2b@1.0",))
+        # the regional tier also hosts the edge-class model so an
+        # auto-policy fallback single anchor is resolvable
+        sites["regional-1"].spec.hosted_models += ("recurrentgemma-2b@1.0",)
+    orch = Orchestrator(clock=clock, catalog=cat, sites=sites)
+    mgr = SplitManager(orch)
+    events = []
+    orch.split_event_sinks.append(
+        lambda sid, ev, d: events.append((sid, ev, d)))
+    return orch, mgr, events, clock
+
+
+def _split_asp(policy="require"):
+    return dataclasses.replace(
+        default_asp(tier=QualityTier.STANDARD), split_policy=policy,
+        max_cost_per_1k_tokens=4.0)
+
+
+class TestSplitControl:
+    def test_establish_dual_anchor(self):
+        orch, mgr, events, _ = _split_orch()
+        s = orch.establish(_split_asp(), invoker="u", zone="zone-a")
+        st = mgr.states[s.session_id]
+        # data plane = edge draft anchor; verify half held separately
+        assert s.binding.site_id == "edge-a"
+        assert s.binding.model_id == "recurrentgemma-2b"
+        assert st.verify_binding.site_id == "regional-1"
+        assert st.verify_binding.model_id == "minitron-8b"
+        # both legs carry a decomposed (strictly tighter) budget
+        assert st.placement.draft_budget.p99_ms < \
+            s.asp.objectives.p99_ms
+        assert st.placement.verify_budget.p99_ms < \
+            s.asp.objectives.p99_ms
+        assert [e[1] for e in events] == ["split-established"]
+        # one slot held on each anchor
+        assert orch.sites["edge-a"].slots_in_use() == 1
+        assert orch.sites["regional-1"].slots_in_use() == 1
+
+    def test_auto_policy_falls_back_without_edge_tier(self):
+        orch, mgr, events, _ = _split_orch(with_edge=False)
+        s = orch.establish(_split_asp("auto"), invoker="u", zone="zone-a")
+        assert s.committed() and not mgr.is_split(s.session_id)
+        assert events == []
+
+    def test_require_policy_propagates_refusal(self):
+        orch, _, _, _ = _split_orch(with_edge=False)
+        with pytest.raises(SessionError) as ei:
+            orch.establish(_split_asp("require"), invoker="u",
+                           zone="zone-a")
+        assert "edge-tier" in str(ei.value)
+
+    def test_never_policy_ignores_split_manager(self):
+        orch, mgr, _, _ = _split_orch()
+        asp = dataclasses.replace(_split_asp(), split_policy="never")
+        s = orch.establish(asp, invoker="u", zone="zone-a")
+        assert s.committed() and not mgr.is_split(s.session_id)
+
+    def test_2pc_atomicity_on_verify_prepare_failure(self):
+        """PREPARE(verify) failing must roll back the already-prepared
+        edge half — no half-split leaks a lease."""
+        orch, mgr, _, _ = _split_orch()
+        real = orch.coordinator.prepare
+
+        def boom(model, site_id, *a, **kw):
+            if site_id.startswith("regional"):
+                raise SessionError(FailureCause.COMPUTE_SCARCITY,
+                                   "injected: verify PREPARE refused")
+            return real(model, site_id, *a, **kw)
+
+        orch.coordinator.prepare = boom
+        with pytest.raises(SessionError):
+            orch.establish(_split_asp(), invoker="u", zone="zone-a")
+        assert all(site.slots_in_use() == 0
+                   for site in orch.sites.values())
+        assert mgr.states == {}
+
+    def test_2pc_atomicity_on_verify_commit_failure(self):
+        orch, mgr, _, _ = _split_orch()
+        real = orch.coordinator.commit
+
+        def boom(prepared, model):
+            if prepared.site_id.startswith("regional"):
+                raise SessionError(FailureCause.COMPUTE_SCARCITY,
+                                   "injected: verify COMMIT refused")
+            return real(prepared, model)
+
+        orch.coordinator.commit = boom
+        with pytest.raises(SessionError):
+            orch.establish(_split_asp(), invoker="u", zone="zone-a")
+        assert all(site.slots_in_use() == 0
+                   for site in orch.sites.values())
+        assert mgr.states == {}
+
+    def test_prepare_time_vocab_rejection(self):
+        """A hand-forged placement pairing mismatched vocabs is refused
+        at PREPARE with zero leases taken."""
+        orch, mgr, _, _ = _split_orch()
+        orch.catalog.register(default_catalog().get("edge-tiny"))
+        asp = _split_asp()
+        s = orch.begin_session(asp, "u", "zone-a")
+        placement = propose_split(asp, orch.catalog, orch.sites,
+                                  orch.predictors, "zone-a")
+        bad = dataclasses.replace(
+            placement,
+            draft=dataclasses.replace(
+                placement.draft,
+                model=orch.catalog.get("edge-tiny")))
+        with pytest.raises(SessionError, match="vocab"):
+            mgr.establish_split(s, bad)
+        assert all(site.slots_in_use() == 0
+                   for site in orch.sites.values())
+
+    def test_heartbeat_renews_verify_and_lapse_degrades(self):
+        orch, mgr, events, clock = _split_orch()
+        s = orch.establish(_split_asp(), invoker="u", zone="zone-a")
+        st = mgr.states[s.session_id]
+        clock.advance(orch.timers.lease_s * 0.9)
+        orch.heartbeat(s)
+        assert not st.degraded          # renewed through the beat
+        # void the verify compute lease out-of-band: next beat degrades
+        orch.sites[st.verify_binding.site_id].release(
+            st.verify_binding.compute_lease_id)
+        orch.heartbeat(s)
+        assert st.degraded and st.verify_binding is None
+        assert [e[1] for e in events][-1] == "split-degraded"
+        assert s.committed()            # never a failure
+
+    def test_low_acceptance_collapses_to_verify_anchor(self):
+        orch, mgr, events, _ = _split_orch()
+        s = orch.establish(_split_asp(), invoker="u", zone="zone-a")
+        st = mgr.states[s.session_id]
+        verify_site = st.verify_binding.site_id
+        for _ in range(12):
+            mgr.note_round(s.session_id, 4, 0)
+        orch.heartbeat(s)
+        orch.heartbeat(s)
+        assert not mgr.is_split(s.session_id)
+        assert s.committed() and s.binding.site_id == verify_site
+        assert [e[1] for e in events][-1] == "split-collapsed"
+        # MBB: the edge half released on collapse
+        assert orch.sites["edge-a"].slots_in_use() == 0
+
+    def test_verify_migration_is_make_before_break(self):
+        orch, mgr, events, _ = _split_orch()
+        s = orch.establish(_split_asp(), invoker="u", zone="zone-a")
+        st = mgr.states[s.session_id]
+        old = st.verify_binding.site_id
+        new = mgr.migrate_verify(s)
+        assert new != old
+        assert st.verify_binding.site_id == new
+        assert s.binding.site_id == "edge-a"      # edge never moved
+        assert orch.sites[old].slots_in_use() == 0
+        assert orch.sites[new].slots_in_use() == 1
+        assert [e[1] for e in events][-1] == "verify-migrated"
+
+    def test_recover_excludes_nothing_but_dead_sites(self):
+        orch, mgr, events, _ = _split_orch()
+        s = orch.establish(_split_asp(), invoker="u", zone="zone-a")
+        st = mgr.states[s.session_id]
+        dead = st.verify_binding.site_id
+        orch.sites[dead].mark_dead("test")
+        mgr.degrade(s, reason="test")
+        mgr.recover(s)
+        assert not st.degraded
+        assert st.verify_binding.site_id != dead
+        assert [e[1] for e in events][-1] == "split-recovered"
+
+    def test_release_frees_both_anchors(self):
+        orch, mgr, _, _ = _split_orch()
+        s = orch.establish(_split_asp(), invoker="u", zone="zone-a")
+        orch.release(s)
+        assert mgr.states == {}
+        assert all(site.slots_in_use() == 0
+                   for site in orch.sites.values())
+
+    def test_gateway_surfaces_tier_change_events(self):
+        from repro.api.gateway import NorthboundGateway
+        orch, mgr, _, _ = _split_orch()
+        gw = NorthboundGateway(orch)
+        gw.subscribe("u")
+        s = orch.establish(_split_asp(), invoker="u", zone="zone-a")
+        mgr.degrade(s, reason="test-degrade")
+        evs = [e for e in gw.poll_events("u") if e.event == "tier-change"]
+        kinds = [e.detail.get("event") for e in evs]
+        assert "split-established" in kinds
+        assert "split-degraded" in kinds
+        deg = evs[kinds.index("split-degraded")]
+        assert deg.detail["mode"] == "edge-only"
+        assert deg.session_id == s.session_id
+
+
+# ======================================================================
+# ASP schema 1.2: split_policy on the wire
+# ======================================================================
+class TestASPSplitPolicy:
+    def test_wire_roundtrip(self):
+        asp = dataclasses.replace(default_asp(), split_policy="auto")
+        back = ASP.from_wire(asp.to_wire())
+        assert back.split_policy == "auto"
+
+    def test_pre_12_peers_default_to_never(self):
+        w = default_asp().to_wire()
+        del w["split_policy"]
+        assert ASP.from_wire(w).split_policy == "never"
+
+    def test_validate_rejects_unknown_policy(self):
+        asp = dataclasses.replace(default_asp(), split_policy="sometimes")
+        with pytest.raises(ValueError, match="split_policy"):
+            asp.validate()
+        assert "sometimes" not in SPLIT_POLICIES
+
+    def test_digest_binds_split_policy(self):
+        a = default_asp()
+        b = dataclasses.replace(a, split_policy="auto")
+        assert a.digest() != b.digest()

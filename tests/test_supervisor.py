@@ -413,3 +413,25 @@ class TestChaosScenarios:
         assert r.stale_notes == 3
         assert r.storm_failures == 3
         assert r.established_post_recovery > 0
+
+    def test_verify_crash_degrades_to_edge_only(self):
+        """Airplane-mode contract: losing the VERIFY anchor of a split
+        session is a quality-tier event, not a failure. In-flight work
+        rides the edge data plane (zero failed), the session stays
+        COMMITTED at its edge binding (zero orphans), and recovery
+        re-attaches a verify anchor on a surviving site."""
+        from repro.sim.scenarios import simulate_verify_crash_degrade
+
+        r = simulate_verify_crash_degrade(n_sessions=24, inflight=32,
+                                          serve_sample=8)
+        assert r.split_established == 24
+        # the crash touched nothing on the interactive path
+        assert r.failed_inflight == 0 and r.orphaned == 0
+        assert r.still_committed == 24
+        # every split degraded explicitly and kept serving
+        assert r.degraded == 24 and r.serve_ok_degraded == 8
+        assert r.events.get("split-degraded") == 24
+        # full-quality recovery lands away from the dead site
+        assert r.recovered == 24 and r.serve_ok_after == 8
+        assert r.verify_site not in r.recovered_sites
+        assert r.events.get("split-recovered") == 24
