@@ -1,0 +1,165 @@
+"""Unreliable-control-plane benchmark — establishment under a lossy wire.
+
+The claim under test: the control plane is safe and live under message
+loss. A two-domain federation (home deliberately undersized so most
+establishes spill east-west) is driven through seeded fault schedules —
+drop/delay/duplicate/reorder/corrupt on BOTH the northbound and the
+east-west paths — at loss rates 0/1/5/10% per fault class. For each rate
+the bench reports establishment goodput, p50/p99 establish latency (the
+retry/backoff cost the invoker actually pays), and the two safety
+counters that must stay at ZERO regardless of the schedule:
+
+* ``orphaned_after_sweep`` — provisional leases (home 2PC, visited guest
+  reservations) still alive after every reaper has run, plus any slot
+  not accounted to an established session. A lost COMMIT must never
+  strand capacity.
+* ``charging_open`` — failed establishments with a charging record still
+  open. Fail-stop must also be fail-free.
+
+    PYTHONPATH=src python -m benchmarks.netfault_bench [--quick]
+        [--check-baseline] [--write-baseline]
+
+``--check-baseline`` enforces ``benchmarks/baselines/netfault.json``:
+hardware-independent invariants only (zero orphans/open charging at every
+loss rate, full goodput on the clean wire, a goodput floor at 10% loss).
+Latency absolutes are reference, not enforced — all time here is
+VirtualClock time, so they are runner-independent anyway but stay
+advisory to keep the guard about safety, not tuning.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import _baseline  # noqa: E402
+
+BASELINE_NAME = "netfault"
+
+LOSS_RATES = (0.0, 0.01, 0.05, 0.10)
+
+
+def bench_loss_sweep(*, n_sessions: int, seed: int = 0) -> list:
+    from repro.sim.scenarios import simulate_lossy_control_plane
+
+    rows = []
+    for loss in LOSS_RATES:
+        r = simulate_lossy_control_plane(
+            n_sessions=n_sessions, loss=loss, seed=seed)
+        rows.append({
+            "loss": loss, "n_offered": r.n_offered,
+            "established": r.established,
+            "established_visited": r.established_visited,
+            "failed": r.failed, "goodput": round(r.goodput, 4),
+            "p50_establish_ms": round(r.p50_establish_ms, 3),
+            "p99_establish_ms": round(r.p99_establish_ms, 3),
+            "serve_ok": r.serve_ok, "causes": r.causes,
+            "orphaned_after_sweep": r.orphaned_after_sweep,
+            "charging_open": r.charging_open,
+            "wire_sent": r.wire.get("sent", 0),
+            "wire_delivered": r.wire.get("delivered", 0),
+        })
+    return rows
+
+
+def figure_rows(*, quick: bool = False):
+    rows = bench_loss_sweep(n_sessions=24 if quick else 64)
+    by_loss = {r["loss"]: r for r in rows}
+    derived = {
+        "goodput_clean": by_loss[0.0]["goodput"],
+        "goodput_10pct": by_loss[0.10]["goodput"],
+        "p99_establish_ms_10pct": by_loss[0.10]["p99_establish_ms"],
+        "orphaned_total": sum(r["orphaned_after_sweep"] for r in rows),
+        "charging_open_total": sum(r["charging_open"] for r in rows),
+        "retry_amplification_10pct": round(
+            by_loss[0.10]["wire_sent"]
+            / max(by_loss[0.0]["wire_sent"], 1), 3),
+        # the claims: a clean wire loses nothing, a 10%-per-fault-class
+        # wire still establishes >= 90% inside the deadline budget, and
+        # NO schedule strands a lease or leaves charging open
+        "holds": bool(
+            by_loss[0.0]["goodput"] == 1.0
+            and by_loss[0.10]["goodput"] >= 0.90
+            and sum(r["orphaned_after_sweep"] for r in rows) == 0
+            and sum(r["charging_open"] for r in rows) == 0),
+    }
+    return rows, derived
+
+
+def check_baseline(rows: list, derived: dict) -> list:
+    """Regression guard, hardware-independent by construction: goodput
+    and the safety counters are counting invariants on VirtualClock time.
+    Returns failure messages."""
+    base = _baseline.load_baseline(BASELINE_NAME)
+    inv = base["invariants"]
+    failures = []
+    if derived["goodput_clean"] < inv["goodput_clean_min"]:
+        failures.append(
+            f"clean wire: goodput {derived['goodput_clean']:.4f} < "
+            f"{inv['goodput_clean_min']:.2f} (retry layer now fails "
+            f"establishments with no faults injected)")
+    if derived["goodput_10pct"] < inv["goodput_10pct_min"]:
+        failures.append(
+            f"10% loss: goodput {derived['goodput_10pct']:.4f} < floor "
+            f"{inv['goodput_10pct_min']:.2f} (deadline-budgeted retries "
+            f"no longer converge under loss)")
+    for r in rows:
+        if r["orphaned_after_sweep"] > inv["orphaned_max"]:
+            failures.append(
+                f"loss={r['loss']}: {r['orphaned_after_sweep']} orphaned "
+                f"leases survived the sweeps (must be {inv['orphaned_max']})")
+        if r["charging_open"] > inv["charging_open_max"]:
+            failures.append(
+                f"loss={r['loss']}: {r['charging_open']} failed sessions "
+                f"left charging open (must be {inv['charging_open_max']})")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 24-session sweep instead of 64")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="enforce benchmarks/baselines/netfault.json "
+                         "invariants (CI guard)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="overwrite the checked-in baseline with this run")
+    args = ap.parse_args()
+    rows, derived = figure_rows(quick=args.quick)
+    for r in rows:
+        print(json.dumps(r))
+    print(json.dumps(derived, indent=1))
+    os.makedirs("artifacts/bench", exist_ok=True)
+    with open("artifacts/bench/netfault.json", "w") as f:
+        json.dump({"rows": rows, "derived": derived}, f, indent=1)
+    if args.write_baseline:
+        _baseline.write_baseline(
+            {"_comment": "regression-guard invariants for the unreliable "
+                         "control plane. check_baseline enforces the "
+                         "safety counters (zero orphaned leases and zero "
+                         "open charging after the sweeps, at EVERY loss "
+                         "rate) and the goodput floors (1.0 clean, 0.90 "
+                         "at 10% per-fault-class loss). All time is "
+                         "VirtualClock time, so the latency reference "
+                         "rows are runner-independent but NOT enforced.",
+             "invariants": {
+                 "goodput_clean_min": 1.0,
+                 "goodput_10pct_min": 0.90,
+                 "orphaned_max": 0,
+                 "charging_open_max": 0,
+             },
+             "reference": {"rows": rows, "derived": derived}},
+            BASELINE_NAME)
+    if args.check_baseline:
+        _baseline.enforce(check_baseline(rows, derived))
+    if not derived["holds"]:
+        raise SystemExit("netfault: paper claim does NOT hold")
+
+
+if __name__ == "__main__":
+    main()

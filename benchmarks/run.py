@@ -42,7 +42,7 @@ def main() -> None:
 
     from benchmarks import (adapter_bench, engine_bench,  # noqa: E402
                             federation_bench, gateway_bench,
-                            migration_bench, plane_bench,
+                            migration_bench, netfault_bench, plane_bench,
                             splitserve_bench)
     benches = [
         ("engine",
@@ -69,6 +69,8 @@ def main() -> None:
         ("federation",
          lambda: federation_bench.figure_rows(
              60 if args.fast else 200)),
+        ("netfault",
+         lambda: netfault_bench.figure_rows(quick=args.fast)),
     ]
 
     os.makedirs("artifacts/bench", exist_ok=True)

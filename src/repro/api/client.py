@@ -8,7 +8,14 @@ ASP would put on the wire. It provides
   (``with SessionClient(gw, asp=...) as c: ...``),
 * a streaming token iterator over ``ServeChunk`` frames,
 * automatic lease renewal — a heartbeat fires whenever the server clock
-  (read from response timestamps) passes the renewal margin,
+  (read from response timestamps) passes the renewal margin, early by a
+  configurable skew allowance so client/server clock drift cannot let a
+  lease lapse between "should have renewed" and "renewed",
+* at-least-once delivery over an unreliable wire: ``transport=`` accepts
+  any ``json-str → json-str`` callable (e.g. a ``netfault.LossyChannel``
+  around ``gateway.handle_json``); lost or garbled messages are retried
+  with capped exponential backoff + full jitter under the optional
+  end-to-end ``deadline_ms`` establishment budget,
 * typed exceptions, one per error-code family, so callers can branch on
   remediation (Eq. 12) without string matching.
 """
@@ -17,11 +24,14 @@ from __future__ import annotations
 
 import itertools
 import uuid
-from typing import Iterator, List, Optional
+from typing import Callable, Iterator, List, Optional
 
 from repro.api import messages as m
 from repro.core.asp import ASP
+from repro.core.clock import Clock
 from repro.core.failures import FailureCause
+from repro.netfault.retry import RetryPolicy
+from repro.netfault.wire import TransportError
 
 
 # ----------------------------------------------------------------------
@@ -58,6 +68,20 @@ class DeadlineExpired(NorthboundError):
     """Eq. (11) phase deadline or state-transfer failure."""
 
 
+class TransportFailure(NorthboundError):
+    """Control message lost/garbled in flight (E_TRANSPORT) — retryable."""
+
+
+class DeadlineExceeded(NorthboundError):
+    """End-to-end budget exhausted (E_DEADLINE_EXCEEDED): stop retrying,
+    re-issue with a larger ``deadline_ms``."""
+
+
+class LeaseLapsed(NorthboundError):
+    """Auto-renewal ultimately failed (after retries): the session's leases
+    may have expired server-side; re-establish rather than keep serving."""
+
+
 _ERROR_FAMILY = {
     "E_SCHEMA_VERSION": SchemaMismatch,
     "E_CONSENT": ConsentRevoked,
@@ -70,6 +94,9 @@ _ERROR_FAMILY = {
     "E_QOS_SCARCITY": ScarcityError,
     "E_STATE_TRANSFER": DeadlineExpired,
     "E_DEADLINE": DeadlineExpired,
+    "E_TRANSPORT": TransportFailure,
+    "E_DEADLINE_EXCEEDED": DeadlineExceeded,
+    "E_IDEMPOTENCY_EVICTED": PolicyDenied,
 }
 
 
@@ -116,13 +143,31 @@ class SessionClient:
 
     def __init__(self, gateway, asp: ASP, *, invoker: str = "ue-0",
                  zone: str = "zone-a", subscribe_events: bool = True,
-                 auto_renew: bool = True, renew_margin: float = 0.5):
+                 auto_renew: bool = True, renew_margin: float = 0.5,
+                 transport: Optional[Callable[[str], object]] = None,
+                 clock: Optional[Clock] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 deadline_ms: Optional[float] = None,
+                 renew_skew_s: float = 0.5):
         self._gw = gateway
+        #: the wire: any json-str → json-str(s) callable. Defaults to the
+        #: gateway's own handler; tests/simulations wrap it in a
+        #: ``netfault.LossyChannel`` to inject drops/delays/duplicates.
+        self._transport = transport if transport is not None \
+            else gateway.handle_json
+        self._clock = clock if clock is not None else \
+            getattr(getattr(gateway, "orch", None), "clock", None) or Clock()
+        self._retry = retry if retry is not None else RetryPolicy()
+        self.deadline_ms = deadline_ms
+        self._deadline_at: Optional[float] = None  # live establish budget
         self.asp = asp
         self.invoker = invoker
         self.zone = zone
         self.auto_renew = auto_renew
         self.renew_margin = renew_margin
+        #: renew this many seconds EARLY: tolerated client/server clock skew
+        #: plus one retry storm must fit before the lease actually expires
+        self.renew_skew_s = renew_skew_s
         self.session_id: Optional[str] = None
         self.record: dict = {}
         self.candidates: List[dict] = []
@@ -135,14 +180,43 @@ class SessionClient:
             gateway.subscribe(invoker)
 
     # -- wire plumbing ---------------------------------------------------
+    def _remaining_s(self) -> Optional[float]:
+        if self._deadline_at is None:
+            return None
+        return max(self._deadline_at - self._clock.now(), 0.0)
+
     def _rpc(self, msg: m.Message) -> m.Message:
-        out = self._gw.handle_json(msg.to_json())
-        reply = m.from_json(out) if isinstance(out, str) \
-            else [m.from_json(o) for o in out]
-        if isinstance(reply, m.ErrorResponse):
-            raise_for(reply)
-        self._observe_time(reply)
-        return reply
+        """At-least-once send: transport losses are retried with jittered
+        backoff; each (re)send re-stamps the shrinking ``deadline_ms`` so
+        every hop downstream sees the budget that is actually left.
+        Idempotency keys on the message make the retries safe."""
+        attempt = 0
+        while True:
+            attempt += 1
+            remaining = self._remaining_s()
+            if remaining is not None:
+                if remaining <= 0.0:
+                    raise DeadlineExceeded(m.ErrorResponse(
+                        code="E_DEADLINE_EXCEEDED",
+                        detail=f"[client] {msg.TYPE}: establishment budget "
+                               f"exhausted before send",
+                        session_id=self.session_id))
+                if hasattr(msg, "deadline_ms"):
+                    msg.deadline_ms = remaining * 1e3
+            try:
+                out = self._transport(msg.to_json())
+            except TransportError as err:
+                if not self._retry.should_retry(err, attempt,
+                                                remaining_s=remaining):
+                    raise
+                self._clock.sleep(self._retry.backoff_s(attempt, key=msg.TYPE))
+                continue
+            reply = m.from_json(out) if isinstance(out, str) \
+                else [m.from_json(o) for o in out]
+            if isinstance(reply, m.ErrorResponse):
+                raise_for(reply)
+            self._observe_time(reply)
+            return reply
 
     def _observe_time(self, reply) -> None:
         frames = reply if isinstance(reply, list) else [reply]
@@ -152,7 +226,7 @@ class SessionClient:
                 self._now = max(self._now, at)
 
     # -- establishment ---------------------------------------------------
-    def establish(self) -> "SessionClient":
+    def _establish_once(self) -> "SessionClient":
         """DISCOVER → PAGE → PREPARE → COMMIT, each its own wire message;
         PREPARE/COMMIT carry idempotency keys so retries are safe."""
         disc = self._rpc(m.DiscoverRequest(
@@ -172,6 +246,36 @@ class SessionClient:
         self._renewed_at = com.at_s
         return self
 
+    def establish(self) -> "SessionClient":
+        """Establish under the (optional) end-to-end ``deadline_ms`` budget.
+
+        Transport losses retry in ``_rpc`` (same message, same idempotency
+        key); *session-level* retryable failures — scarcity, a tripped
+        phase timer — re-run the whole establishment from a fresh DISCOVER,
+        because the failed session object is terminal server-side. Each
+        retry backs off with full jitter and fits inside whatever budget
+        remains; a non-retryable cause (or an exhausted budget) surfaces
+        as the typed family exception."""
+        if self.deadline_ms is not None:
+            self._deadline_at = self._clock.now() + self.deadline_ms / 1e3
+        try:
+            attempt = 0
+            while True:
+                attempt += 1
+                try:
+                    return self._establish_once()
+                except NorthboundError as err:
+                    if err.cause is None or not self._retry.should_retry(
+                            err.cause, attempt,
+                            remaining_s=self._remaining_s()):
+                        raise
+                    self._clock.sleep(
+                        self._retry.backoff_s(attempt, key="establish"))
+        finally:
+            # the budget bounds establishment only — serving and renewal
+            # run on the lease clock, not the establish deadline
+            self._deadline_at = None
+
     def __enter__(self) -> "SessionClient":
         return self.establish()
 
@@ -185,8 +289,24 @@ class SessionClient:
     def _maybe_renew(self) -> None:
         if not self.auto_renew or not self._lease_s:
             return
-        if self._now - self._renewed_at >= self.renew_margin * self._lease_s:
-            self.heartbeat()
+        # renew early by renew_skew_s: the client only sees the server clock
+        # through response timestamps, so its view lags by up to one RTT plus
+        # any drift — the skew allowance keeps "late renewal because our
+        # clock ran slow" from becoming a lapsed lease
+        due = max(self.renew_margin * self._lease_s - self.renew_skew_s, 0.0)
+        if self._now - self._renewed_at >= due:
+            try:
+                self.heartbeat()
+            except (TransportError, DeadlineExpired) as err:
+                # _rpc already retried with jittered backoff; an ultimate
+                # loss here means the lease may expire before the next
+                # serve — surface that as its own typed condition instead
+                # of a generic transport error mid-generate()
+                raise LeaseLapsed(m.ErrorResponse(
+                    code="E_DEADLINE",
+                    detail=f"[client] lease renewal failed after retries "
+                           f"({err}); session may have lapsed server-side",
+                    session_id=self.session_id)) from err
 
     def generate(self, *, prompt_tokens: int = 512, gen_tokens: int = 64,
                  prompt: Optional[List[int]] = None) -> TokenStream:

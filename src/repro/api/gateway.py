@@ -19,7 +19,20 @@ Gateway guarantees on top of the orchestrator:
   ``E_IDEMPOTENCY_CONFLICT``;
 * **structured failure semantics** — every ``SessionError`` maps onto its
   distinct Eq. (12) error code (:data:`~repro.api.messages.ERROR_CODE_TABLE`);
-  gateway-layer refusals use disjoint codes.
+  gateway-layer refusals use disjoint codes;
+* **deadline budgets** — a request carrying ``deadline_ms`` (the shrinking
+  remaining budget, relative so clock skew cannot corrupt it) is refused
+  with ``E_DEADLINE_EXCEEDED`` when the budget cannot cover the phase's
+  Eq. (11) floor — the gateway never queues doomed work. The refusal does
+  NOT fail the session: the invoker may re-issue with a larger budget;
+* **orphan reaping** — ``reap_orphans()`` (run on every pump/drain cycle)
+  aborts prepared-but-never-committed establishments once
+  τ_prep + τ_com + hold has passed, so a COMMIT lost in flight can never
+  strand provisional leases;
+* **idempotency-window eviction** is attributable: a retry whose key aged
+  out of the bounded window gets ``E_IDEMPOTENCY_EVICTED`` (we can no
+  longer prove what the original outcome was) instead of silently
+  re-reserving or tripping the state machine.
 """
 
 from __future__ import annotations
@@ -27,6 +40,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import json
 from typing import Callable, Deque, Dict, Iterator, List, Optional, Tuple, Union
 
 from repro.api import messages as m
@@ -51,6 +65,9 @@ class _Pending:
     prepared: object = None
     page_response: Optional[m.PageResponse] = None
     prepare_response: Optional[m.PrepareResponse] = None
+    #: gateway-clock timestamp of the successful PREPARE — the orphan
+    #: reaper's horizon base (works for local and federated prepares alike)
+    prepared_at: Optional[float] = None
 
 
 class NorthboundGateway:
@@ -75,6 +92,11 @@ class NorthboundGateway:
         self._idem: "collections.OrderedDict[str, Tuple[str, Reply]]" = \
             collections.OrderedDict()
         self._idempotency_window = idempotency_window
+        #: keys aged out of the window — a retry under one of these gets a
+        #: clean E_IDEMPOTENCY_EVICTED (the original outcome is gone, so
+        #: replay safety can no longer be proven). Bounded like the window.
+        self._idem_evicted: "collections.OrderedDict[str, bool]" = \
+            collections.OrderedDict()
         #: abandoned-handshake bound: oldest in-flight establishments are
         #: evicted past the window (their provisional 2PC leases expire by
         #: TTL on the resource planes regardless)
@@ -182,28 +204,85 @@ class NorthboundGateway:
         q.clear()
         return out
 
+    @staticmethod
+    def _fingerprint(req: m.Message) -> str:
+        """Payload identity for idempotency conflict detection. The
+        shrinking ``deadline_ms`` budget is excluded: an at-least-once
+        re-send legitimately carries less remaining budget than the
+        original, and that must read as the SAME request."""
+        wire = req.to_wire()
+        wire.pop("deadline_ms", None)
+        return json.dumps(wire, sort_keys=True)
+
     def _idempotent(self, key: Optional[str], req: m.Message,
                     fn: Callable[[], Reply]) -> Reply:
         if key is not None and key in self._idem:
             fingerprint, reply = self._idem[key]
-            if fingerprint != req.to_json():
+            if fingerprint != self._fingerprint(req):
                 return m.ErrorResponse(
                     "E_IDEMPOTENCY_CONFLICT",
                     detail=f"key {key!r} was used for a different request",
                     session_id=getattr(req, "session_id", None))
             return reply
+        if key is not None and key in self._idem_evicted:
+            # the original outcome aged out of the bounded window: running
+            # fn() again could double-reserve, so refuse attributably —
+            # the invoker must start a fresh procedure (fresh key)
+            return m.ErrorResponse(
+                "E_IDEMPOTENCY_EVICTED",
+                detail=f"[gateway] key {key!r} aged out of the idempotency "
+                       f"window ({self._idempotency_window}); the original "
+                       f"outcome is no longer known",
+                session_id=getattr(req, "session_id", None))
         reply = fn()
         if key is not None:
-            self._idem[key] = (req.to_json(), reply)
+            self._idem[key] = (self._fingerprint(req), reply)
             while len(self._idem) > self._idempotency_window:
-                self._idem.popitem(last=False)
+                evicted_key, _ = self._idem.popitem(last=False)
+                self._idem_evicted[evicted_key] = True
+                while len(self._idem_evicted) > self._idempotency_window:
+                    self._idem_evicted.popitem(last=False)
         return reply
+
+    def _check_deadline(self, deadline_ms: Optional[float], floor_s: float,
+                        phase: str,
+                        session: Optional[AISession] = None) -> None:
+        """Refuse work the remaining budget cannot cover (Eq. 11 floor for
+        the phase). Attribution is per hop — this one is ``[gateway]``; a
+        visited domain rejecting the forwarded remainder says
+        ``[visited:<domain>]``. The budget is relative ms on the wire
+        (gRPC-style), so client/server clock skew cannot corrupt it."""
+        if deadline_ms is None:
+            return
+        floor_ms = max(floor_s, 0.0) * 1e3
+        if deadline_ms <= floor_ms:
+            raise SessionError(
+                FailureCause.DEADLINE_EXCEEDED,
+                f"[gateway] {phase}: {deadline_ms:.1f}ms remaining cannot "
+                f"cover the {floor_ms:.0f}ms phase floor")
+        if session is not None:
+            session.deadline_at = self.orch.clock.now() + deadline_ms / 1e3
 
     def _drop_establishment_state(self, session_id: str) -> None:
         self._pending.pop(session_id, None)
         for ref in [r for r, sid in self._prepared_refs.items()
                     if sid == session_id]:
             del self._prepared_refs[ref]
+
+    def _refailed(self, session: AISession) -> Optional[Reply]:
+        """A lost-response retry against an already-failed session must
+        re-report the ORIGINAL failure cause, not a bogus out-of-order
+        ``E_BAD_REQUEST`` — the pending establishment state was dropped
+        when the session failed, but the cause (and its retryability
+        class) survives on the session itself."""
+        if session.failure is None:
+            return None
+        return m.ErrorResponse.from_session_error(
+            SessionError(session.failure,
+                         f"establishment already failed "
+                         f"({session.failure.value}); this retry re-reports "
+                         f"the original outcome"),
+            session_id=session.session_id)
 
     def _establishment_step(self, session: AISession,
                             fn: Callable[[], Reply]) -> Reply:
@@ -223,6 +302,8 @@ class NorthboundGateway:
     # lifecycle procedures
     # ------------------------------------------------------------------
     def discover(self, msg: m.DiscoverRequest) -> Reply:
+        self._check_deadline(msg.deadline_ms, self.orch.timers.tau_disc,
+                             "DISCOVER")
         try:
             session = self.orch.begin_session(msg.asp, msg.invoker,
                                               msg.zone)
@@ -247,9 +328,11 @@ class NorthboundGateway:
 
     def page(self, msg: m.PageRequest) -> Reply:
         session = self._session(msg.session_id)
+        self._check_deadline(msg.deadline_ms, self.orch.timers.tau_page,
+                             "AI-PAGING", session)
         pending = self._pending.get(msg.session_id)
         if pending is None or pending.candidates is None:
-            return m.ErrorResponse(
+            return self._refailed(session) or m.ErrorResponse(
                 "E_BAD_REQUEST", detail="PAGE before DISCOVER",
                 session_id=msg.session_id)
         if pending.page_response is not None:
@@ -272,9 +355,11 @@ class NorthboundGateway:
 
     def prepare(self, msg: m.PrepareRequest) -> Reply:
         session = self._session(msg.session_id)
+        self._check_deadline(msg.deadline_ms, self.orch.timers.tau_prep,
+                             "PREPARE", session)
         pending = self._pending.get(msg.session_id)
         if pending is None or pending.chosen is None:
-            return m.ErrorResponse(
+            return self._refailed(session) or m.ErrorResponse(
                 "E_BAD_REQUEST", detail="PREPARE before PAGE",
                 session_id=msg.session_id)
         if pending.prepare_response is not None:
@@ -284,6 +369,7 @@ class NorthboundGateway:
             def do():
                 prepared = self.orch.prepare_for(session, pending.chosen)
                 pending.prepared = prepared
+                pending.prepared_at = self.orch.clock.now()
                 ref = f"prep-{next(self._refs):06d}"
                 self._prepared_refs[ref] = session.session_id
                 self._emit(session, "state-transition")
@@ -296,12 +382,14 @@ class NorthboundGateway:
 
     def commit(self, msg: m.CommitRequest) -> Reply:
         session = self._session(msg.session_id)
+        self._check_deadline(msg.deadline_ms, self.orch.timers.tau_com,
+                             "COMMIT", session)
 
         def run():
             pending = self._pending.get(msg.session_id)
             if self._prepared_refs.get(msg.prepared_ref) != msg.session_id \
                     or pending is None or pending.prepared is None:
-                return m.ErrorResponse(
+                return self._refailed(session) or m.ErrorResponse(
                     "E_BAD_REQUEST",
                     detail=f"no commitable PREPARE under ref "
                            f"{msg.prepared_ref!r}",
@@ -324,6 +412,7 @@ class NorthboundGateway:
     # serving
     # ------------------------------------------------------------------
     def _handle_serve(self, msg: m.ServeRequest) -> Reply:
+        self._check_deadline(msg.deadline_ms, 0.0, "SERVE")
         if msg.stream:
             return list(self.serve_stream(msg))
         return self.submit(msg)
@@ -340,7 +429,7 @@ class NorthboundGateway:
             res = self.orch.serve(
                 session, prompt_tokens=msg.prompt_tokens,
                 gen_tokens=msg.gen_tokens, prompt=prompt,
-                request_id=msg.request_id)
+                request_id=msg.request_id, deadline_ms=msg.deadline_ms)
         except SessionError as e:
             yield m.ErrorResponse.from_session_error(
                 e, session_id=msg.session_id)
@@ -369,7 +458,7 @@ class NorthboundGateway:
         req = self.orch.submit(
             session, prompt_tokens=msg.prompt_tokens,
             gen_tokens=msg.gen_tokens, prompt=prompt,
-            request_id=msg.request_id)
+            request_id=msg.request_id, deadline_ms=msg.deadline_ms)
         if req is not None:
             self._async_pending.add(req.request_id)
         return m.SubmitAck(
@@ -394,6 +483,49 @@ class NorthboundGateway:
             error_code=m.code_for_cause(res.failed) if res.failed else None,
             token_ids=res.token_ids, at_s=self.orch.clock.now()))
 
+    def reap_orphans(self, now: Optional[float] = None) -> int:
+        """Abort every prepared-but-never-committed establishment whose
+        decision window (τ_prep + τ_com + hold) has passed — the COMMIT
+        (or the client) was lost in flight, and nothing will re-drive it.
+
+        Rollback is idempotent with the coordinator's own
+        :meth:`~repro.core.twophase.TwoPhaseCoordinator.reap` (whichever
+        sweep runs first wins; the other is a no-op); federated prepares
+        abort east-west, where EWAbort degenerates to release if the
+        visited COMMIT had actually landed. Runs on every pump/drain
+        cycle, i.e. the plane-heartbeat cadence."""
+        orch = self.orch
+        now = orch.clock.now() if now is None else now
+        horizon = orch.timers.tau_prep + orch.timers.tau_com
+        reaped = 0
+        for sid in list(self._pending):
+            p = self._pending.get(sid)
+            if p is None or p.prepared is None or p.prepared_at is None:
+                continue
+            hold = getattr(p.prepared, "hold_s", 0.0)
+            if now - p.prepared_at <= horizon + hold:
+                continue
+            try:
+                if getattr(p.prepared, "is_federated", False):
+                    orch.federation.abort_remote(p.prepared,
+                                                 reason="orphan-reap")
+                else:
+                    orch.coordinator.abort(p.prepared)
+            except Exception:                        # noqa: BLE001
+                pass         # provisional leases expire by TTL regardless
+            session = p.session
+            self._drop_establishment_state(sid)
+            if session.state is SessionState.PREPARED:
+                session.fail(FailureCause.DEADLINE_EXPIRY,
+                             "orphaned PREPARE reaped "
+                             "(COMMIT lost in flight)")
+                self._emit(session, "state-transition", state="failed",
+                           detail={"cause":
+                                   FailureCause.DEADLINE_EXPIRY.value,
+                                   "detail": "orphan-reap"})
+            reaped += 1
+        return reaped
+
     def pump(self, until_s: float) -> None:
         """Advance every site plane to absolute time ``until_s`` (virtual
         clocks) and record the completions that fell due."""
@@ -401,6 +533,7 @@ class NorthboundGateway:
             if site.plane is not None:
                 site.plane.run_until(until_s)
                 self.orch.record_results(site)
+        self.reap_orphans()
 
     def drain(self) -> List[m.ServeComplete]:
         """Run every plane to completion and return ALL completions
@@ -409,6 +542,7 @@ class NorthboundGateway:
             if site.plane is not None:
                 site.plane.drain()
                 self.orch.record_results(site)
+        self.reap_orphans()
         out = list(self._completions)
         self._completions.clear()
         return out
@@ -533,6 +667,7 @@ class NorthboundGateway:
     # ------------------------------------------------------------------
     def heartbeat(self, msg: m.HeartbeatReport) -> Reply:
         session = self._session(msg.session_id)
+        self._check_deadline(msg.deadline_ms, 0.0, "HEARTBEAT", session)
         trig = None
         if msg.trigger_l99 is not None or msg.trigger_ttfb is not None:
             base = MigrationTriggers()

@@ -33,7 +33,12 @@ from repro.core.failures import FailureCause, SessionError
 #: ``domain`` (and candidate ``region``); "" means the home domain.
 #: 1.2: tenant adapters — RegisterAdapter/LoadAdapter/UnloadAdapter
 #: lifecycle messages; ``ASP.adapter_id`` rides the existing ASP codec.
-SCHEMA_VERSION = "1.2"
+#: 1.3: unreliable control plane — optional ``deadline_ms`` budget on
+#: lifecycle/serve/heartbeat requests (relative milliseconds remaining,
+#: gRPC-style, shrinking per hop); new causes TRANSPORT_FAILURE /
+#: DEADLINE_EXCEEDED (E_TRANSPORT / E_DEADLINE_EXCEEDED) and gateway code
+#: E_IDEMPOTENCY_EVICTED for retries arriving after window eviction.
+SCHEMA_VERSION = "1.3"
 
 _REGISTRY: Dict[str, type] = {}
 
@@ -100,6 +105,9 @@ class DiscoverRequest(Message):
     invoker: str
     zone: str
     asp: ASP
+    #: remaining deadline budget in ms (relative, gRPC-style — skew-safe);
+    #: None = no enforcement (pre-1.3 peers)
+    deadline_ms: Optional[float] = None
     schema_version: str = SCHEMA_VERSION
 
     @classmethod
@@ -129,6 +137,7 @@ class PageRequest(Message):
     TYPE: ClassVar[str] = "page_request"
     session_id: str
     exclude_sites: List[str] = field(default_factory=list)
+    deadline_ms: Optional[float] = None
     schema_version: str = SCHEMA_VERSION
 
 
@@ -156,6 +165,7 @@ class PrepareRequest(Message):
     #: retry-safety: a repeated PREPARE with the same key returns the
     #: original outcome instead of reserving twice
     idempotency_key: Optional[str] = None
+    deadline_ms: Optional[float] = None
     schema_version: str = SCHEMA_VERSION
 
 
@@ -177,6 +187,7 @@ class CommitRequest(Message):
     session_id: str
     prepared_ref: str
     idempotency_key: Optional[str] = None
+    deadline_ms: Optional[float] = None
     schema_version: str = SCHEMA_VERSION
 
 
@@ -208,6 +219,7 @@ class ServeRequest(Message):
     #: stream=False → async enqueue acknowledged by SubmitAck
     stream: bool = True
     request_id: Optional[str] = None
+    deadline_ms: Optional[float] = None
     schema_version: str = SCHEMA_VERSION
 
 
@@ -265,6 +277,7 @@ class HeartbeatReport(Message):
     #: tightening to 0.0 forces a migration check to fire (ops/testing)
     trigger_l99: Optional[float] = None
     trigger_ttfb: Optional[float] = None
+    deadline_ms: Optional[float] = None
     schema_version: str = SCHEMA_VERSION
 
 
@@ -439,8 +452,9 @@ class UnloadAdapterResponse(Message):
 # ----------------------------------------------------------------------
 # structured errors: exhaustive Eq. (12) cause ↔ code mapping
 # ----------------------------------------------------------------------
-#: the nine-element cause partition, each with a distinct documented code —
-#: remediation per cause lives in repro.core.failures.REMEDIATION
+#: the cause partition (paper's nine + the unreliable-transport pair), each
+#: with a distinct documented code — remediation per cause lives in
+#: repro.core.failures.REMEDIATION, retryability in failures.RETRYABLE
 ERROR_CODE_TABLE: Dict[FailureCause, str] = {
     FailureCause.CONSENT_VIOLATION: "E_CONSENT",
     FailureCause.POLICY_DENIAL: "E_POLICY",
@@ -451,12 +465,15 @@ ERROR_CODE_TABLE: Dict[FailureCause, str] = {
     FailureCause.QOS_SCARCITY: "E_QOS_SCARCITY",
     FailureCause.STATE_TRANSFER_FAILURE: "E_STATE_TRANSFER",
     FailureCause.DEADLINE_EXPIRY: "E_DEADLINE",
+    FailureCause.TRANSPORT_FAILURE: "E_TRANSPORT",
+    FailureCause.DEADLINE_EXCEEDED: "E_DEADLINE_EXCEEDED",
 }
 
 #: gateway-layer failures with no Eq. (12) counterpart (the request never
 #: reached the lifecycle machinery)
 GATEWAY_CODES = ("E_SCHEMA_VERSION", "E_BAD_REQUEST", "E_UNKNOWN_SESSION",
-                 "E_IDEMPOTENCY_CONFLICT", "E_INTERNAL")
+                 "E_IDEMPOTENCY_CONFLICT", "E_IDEMPOTENCY_EVICTED",
+                 "E_INTERNAL")
 
 _CODE_TO_CAUSE = {v: k for k, v in ERROR_CODE_TABLE.items()}
 

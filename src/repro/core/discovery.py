@@ -63,7 +63,7 @@ class Candidate:
 def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
              zone: str, *, lam: float = 0.05, prompt_tokens: int = 512,
              gen_tokens: int = 256, analytics=None,
-             models=None) -> List[Candidate]:
+             models=None, breakers=None) -> List[Candidate]:
     """Materialise the annotated candidate set 𝒦 (Eq. 7).
 
     ``models`` overrides the catalog's ASP-admissible entries with an
@@ -91,6 +91,10 @@ def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
         adapter_known = adapter is not None
     ladder_models = {m for m, _ in asp.fallback_ladder}
     klass = PREMIUM if asp.tier >= 2 else BEST_EFFORT
+    # breaker verdicts are memoised per discover() call: allow() mutates
+    # the open → half-open probe state, and one DISCOVER must not burn
+    # several probe admissions (or give the same site both answers)
+    breaker_ok: dict = {}
     out: List[Candidate] = []
     for model in models:
         key = f"{model.model_id}@{model.version}"
@@ -152,6 +156,16 @@ def discover(asp: ASP, catalog: Catalog, sites, predictors: Predictors,
                 if not ctx.healthy:
                     out.append(_excl("a1-denied"))
                     continue
+            if breakers is not None:
+                ok = breaker_ok.get(site_id)
+                if ok is None:
+                    ok = breaker_ok[site_id] = breakers.allow(site_id)
+                if not ok:
+                    # circuit open after consecutive control-plane failures:
+                    # the site may be fine — we are backing off the *path*
+                    # until the half-open probe readmits it
+                    out.append(_excl("circuit-open"))
+                    continue
             # ---- annotate with predicted boundary quantities ----------
             pred = predictors.predict(asp, model, site, zone, klass,
                                       prompt_tokens=prompt_tokens,
@@ -177,9 +191,11 @@ def admissible_set(candidates: List[Candidate]) -> List[Candidate]:
         # strip federation domain prefixes for the cause decision — the
         # full (domain-qualified) reasons stay in the detail string
         bare = {r.split(":", 1)[-1] for r in reasons}
-        if bare and bare <= {"compute-saturated", "site-dead"}:
+        if bare and bare <= {"compute-saturated", "site-dead", "circuit-open",
+                             "offer-timeout", "domain-dead"}:
             # every candidate exists and would bind — the anchors are just
-            # full (or crashed) right now. Eq. (12) keeps this distinct
+            # full (crashed, breaker-isolated, or unreachable over a lossy
+            # east-west wire) right now. Eq. (12) keeps this distinct
             # from "no feasible binding": the remediation is retry/backoff
             # on an alternate anchor (or east-west spillover), not
             # relaxing the objectives.

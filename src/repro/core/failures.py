@@ -1,7 +1,12 @@
 """Failure semantics: Eq. (12) cause partition + Eq. (11) deadline ordering.
 
-The cause set is exactly the paper's nine-element partition — each element
-implies a distinct remediation path and must not be conflated with others.
+The cause set extends the paper's nine-element partition with the two causes
+an *unreliable control plane* forces into the contract: at-least-once
+transports fail (TRANSPORT_FAILURE) and budgets shrink hop by hop until work
+becomes infeasible (DEADLINE_EXCEEDED).  Each element implies a distinct
+remediation path and must not be conflated with others; RETRYABLE partitions
+the set into the causes a caller may retry against the same contract versus
+those that require a changed request.
 """
 
 from __future__ import annotations
@@ -11,7 +16,12 @@ from dataclasses import dataclass
 
 
 class FailureCause(enum.Enum):
-    """Eq. (12): the compact semantic partition sufficient for diagnosis."""
+    """Eq. (12): the compact semantic partition sufficient for diagnosis.
+
+    The first nine members are the paper's partition verbatim; the last two
+    are the unreliable-transport extension (lost/failed delivery, and a
+    propagated deadline budget that no hop could meet).
+    """
     CONSENT_VIOLATION = "consent violation"
     POLICY_DENIAL = "policy denial"
     SOVEREIGNTY_VIOLATION = "sovereignty violation"
@@ -21,6 +31,8 @@ class FailureCause(enum.Enum):
     QOS_SCARCITY = "QoS scarcity"
     STATE_TRANSFER_FAILURE = "state transfer failure"
     DEADLINE_EXPIRY = "deadline expiry"
+    TRANSPORT_FAILURE = "transport failure"
+    DEADLINE_EXCEEDED = "deadline exceeded"
 
 
 #: remediation class per cause — used by the orchestrator's retry logic and
@@ -35,7 +47,29 @@ REMEDIATION = {
     FailureCause.QOS_SCARCITY: "retry with best-effort consent or new path",
     FailureCause.STATE_TRANSFER_FAILURE: "abort migration, keep source anchor",
     FailureCause.DEADLINE_EXPIRY: "abort phase, roll back provisional leases",
+    FailureCause.TRANSPORT_FAILURE:
+        "retry same target with backoff (at-least-once delivery)",
+    FailureCause.DEADLINE_EXCEEDED:
+        "stop retrying; re-issue with a larger deadline budget",
 }
+
+
+#: Causes a caller may retry without changing the request: the contract is
+#: intact, only the attempt failed.  Everything else is terminal for the
+#: request as issued — retrying verbatim would deterministically fail again
+#: (policy/consent/sovereignty) or waste the remaining budget
+#: (DEADLINE_EXCEEDED means the budget itself is what ran out).
+RETRYABLE = frozenset({
+    FailureCause.COMPUTE_SCARCITY,
+    FailureCause.QOS_SCARCITY,
+    FailureCause.DEADLINE_EXPIRY,
+    FailureCause.TRANSPORT_FAILURE,
+})
+
+
+def is_retryable(cause: FailureCause) -> bool:
+    """True when a fresh attempt at the same request can still succeed."""
+    return cause in RETRYABLE
 
 
 class SessionError(Exception):

@@ -32,6 +32,7 @@ from repro.core.session import AISession, SessionState
 from repro.core.sites import ExecutionSite, default_sites
 from repro.core.telemetry import BoundaryTelemetry, RequestRecord
 from repro.core.twophase import TwoPhaseCoordinator
+from repro.netfault.breaker import BreakerBoard
 
 
 @dataclass
@@ -75,6 +76,11 @@ class Orchestrator:
         self.timers = timers or Timers()
         self.coordinator = TwoPhaseCoordinator(self.clock, self.sites,
                                                self.qos, self.timers)
+        #: per-site circuit breakers (closed → open → half-open): fed by
+        #: the site supervisors' probe outcomes; DISCOVER excludes open
+        #: targets with the attributable reason ``circuit-open`` and the
+        #: half-open transition probes them back in
+        self.breakers = BreakerBoard(self.clock)
         self.migrations = MigrationController(
             self.clock, self.coordinator, self.catalog, self.sites,
             self.predictors, self.timers, analytics=self.analytics)
@@ -129,7 +135,7 @@ class Orchestrator:
         t0 = self.clock.now()
         cands = discover(session.asp, self.catalog, self.sites,
                          self.predictors, session.zone,
-                         analytics=self.analytics)
+                         analytics=self.analytics, breakers=self.breakers)
         if self.federation is not None:
             cands = self.federation.augment(session, cands)
         if self.clock.now() - t0 > self.timers.tau_disc:
@@ -351,9 +357,21 @@ class Orchestrator:
                 self.qos_class(session))
 
     # ------------------------------------------------------------------
+    def _effective_t_max(self, session: AISession,
+                         deadline_ms: Optional[float]) -> float:
+        """Per-request deadline for the plane's fast-fail admission: the
+        ASP bound, shrunk to the caller's remaining ``deadline_ms`` budget
+        when one was propagated — a hop never queues work it cannot
+        finish in the budget that is actually left."""
+        t_max = session.asp.objectives.t_max_ms
+        if deadline_ms is not None:
+            t_max = min(t_max, deadline_ms)
+        return t_max
+
     def submit(self, session: AISession, *, prompt_tokens: int = 512,
                gen_tokens: int = 64, prompt=None,
-               request_id: Optional[str] = None):
+               request_id: Optional[str] = None,
+               deadline_ms: Optional[float] = None):
         """Async path: enqueue one request on the anchor plane without
         driving it (batched serving / open-loop simulation); returns the
         scheduler Request, or None when admission control rejects it.
@@ -364,7 +382,7 @@ class Orchestrator:
         return plane.submit(
             session_id=session.session_id, klass=klass.name,
             prompt_tokens=prompt_tokens, gen_tokens=gen_tokens,
-            t_max_ms=session.asp.objectives.t_max_ms,
+            t_max_ms=self._effective_t_max(session, deadline_ms),
             hint_ttfb_ms=hint_ttfb, hint_total_ms=hint_total,
             request_id=request_id, prompt=prompt,
             adapter_id=session.asp.adapter_id)
@@ -372,7 +390,8 @@ class Orchestrator:
     # ------------------------------------------------------------------
     def serve(self, session: AISession, *, prompt_tokens: int = 512,
               gen_tokens: int = 64, prompt=None,
-              request_id: Optional[str] = None) -> ServeResult:
+              request_id: Optional[str] = None,
+              deadline_ms: Optional[float] = None) -> ServeResult:
         """One request through the anchor site's ServingPlane.
 
         The QoS class comes from the binding's QFI; admission is
@@ -389,7 +408,8 @@ class Orchestrator:
         res = plane.serve(
             session_id=session.session_id, klass=klass.name,
             prompt_tokens=prompt_tokens, gen_tokens=gen_tokens,
-            t_max_ms=session.asp.objectives.t_max_ms, request_id=request_id,
+            t_max_ms=self._effective_t_max(session, deadline_ms),
+            request_id=request_id,
             hint_ttfb_ms=hint_ttfb, hint_total_ms=hint_total, prompt=prompt,
             adapter_id=session.asp.adapter_id)
         self.record_results(site)
@@ -403,6 +423,10 @@ class Orchestrator:
                   triggers: Optional[MigrationTriggers] = None
                   ) -> Optional[MigrationOutcome]:
         """Renew leases; fire Eq. (14) migration when risk crosses δ."""
+        # heartbeat cadence doubles as the orphan sweep: provisional 2PC
+        # leases whose COMMIT/ABORT was lost in flight are aborted once
+        # their τ_prep + τ_com + hold window passes (timers are enforced)
+        self.coordinator.reap()
         if session.state not in (SessionState.COMMITTED,
                                  SessionState.MIGRATING):
             return None
@@ -479,7 +503,8 @@ class Orchestrator:
             else:
                 cands = discover(session.asp, self.catalog, self.sites,
                                  self.predictors, session.zone,
-                                 analytics=self.analytics)
+                                 analytics=self.analytics,
+                                 breakers=self.breakers)
             target = page(session.asp, cands, exclude_sites=excl)
             region = target.region or self.sites[target.site_id].spec.region
             self.policy.check_region(session.authz_ref, region)

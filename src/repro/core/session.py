@@ -101,6 +101,10 @@ class AISession:
         #: served context length (prompt + generated tokens across requests);
         #: sizes the migration payload and PREPARE cache reservation
         self.context_tokens: int = 0
+        #: absolute (clock.now()-domain) establishment deadline, set when a
+        #: request carried a shrinking ``deadline_ms`` budget; None = no
+        #: enforcement. Later hops reject work they cannot finish by this.
+        self.deadline_at: Optional[float] = None
 
     # ------------------------------------------------------------------
     # state machine

@@ -10,12 +10,16 @@ Correctness requirements implemented here (Section IV-B):
   QOS_SCARCITY — never conflated (Eq. 12).
 * **Idempotent rollback**: release on both planes tolerates repeats, so a
   crashed coordinator can always be re-driven to a clean state.
+* **Orphan reaping**: every PREPARE is tracked until its COMMIT/ABORT
+  arrives; :meth:`TwoPhaseCoordinator.reap` aborts the ones whose decision
+  was lost in flight once τ_prep + τ_com + hold has passed — the timers
+  are enforced, not advisory.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Dict, List, Optional
 
 from repro.core.catalog import ModelEntry
 from repro.core.clock import Clock
@@ -46,6 +50,9 @@ class TwoPhaseCoordinator:
         self.qos = qos
         self.timers = timers
         self.log: list = []    # coordinator write-ahead log (audit + tests)
+        #: PREPAREs whose COMMIT/ABORT has not arrived, by compute lease id
+        #: — the reaper's work queue when a decision is lost in flight
+        self.outstanding: Dict[str, Prepared] = {}
 
     def _deadline_guard(self, t0: float, tau: float, phase: str) -> None:
         if self.clock.now() - t0 > tau:
@@ -83,10 +90,12 @@ class TwoPhaseCoordinator:
             self.log.append(("prepare.rollback", self.clock.now(), site_id))
             raise
         self.log.append(("prepare.ok", self.clock.now(), site_id))
-        return Prepared(compute_lease_id=cmp_lease.lease_id,
-                        qos_lease_id=qos_lease.lease_id,
-                        site_id=site_id, qfi=qos_lease.qfi,
-                        prepared_at=self.clock.now(), hold_s=hold_s)
+        prepared = Prepared(compute_lease_id=cmp_lease.lease_id,
+                            qos_lease_id=qos_lease.lease_id,
+                            site_id=site_id, qfi=qos_lease.qfi,
+                            prepared_at=self.clock.now(), hold_s=hold_s)
+        self.outstanding[prepared.compute_lease_id] = prepared
+        return prepared
 
     # ------------------------------------------------------------------
     def prepare_transport(self, path, klass: TransportClass, *,
@@ -107,6 +116,7 @@ class TwoPhaseCoordinator:
         """Stage 2: confirm both leases; on ANY failure release both."""
         t0 = self.clock.now()
         site = self.sites[prepared.site_id]
+        self.outstanding.pop(prepared.compute_lease_id, None)
         try:
             self._deadline_guard(prepared.prepared_at,
                                  self.timers.tau_com + prepared.hold_s,
@@ -131,6 +141,22 @@ class TwoPhaseCoordinator:
     # ------------------------------------------------------------------
     def abort(self, prepared: Prepared) -> None:
         """Idempotent rollback of both provisional leases."""
+        self.outstanding.pop(prepared.compute_lease_id, None)
         self.sites[prepared.site_id].release(prepared.compute_lease_id)
         self.qos.release(prepared.qos_lease_id)
         self.log.append(("abort", self.clock.now(), prepared.site_id))
+
+    # ------------------------------------------------------------------
+    def reap(self, now: Optional[float] = None) -> List[Prepared]:
+        """Abort every outstanding PREPARE whose decision window has
+        passed (τ_prep + τ_com + hold) — the COMMIT/ABORT was lost in
+        flight and no caller will ever re-drive it. Idempotent; called on
+        the plane-heartbeat cadence."""
+        now = self.clock.now() if now is None else now
+        horizon = self.timers.tau_prep + self.timers.tau_com
+        orphans = [p for p in self.outstanding.values()
+                   if now - p.prepared_at > horizon + p.hold_s]
+        for p in orphans:
+            self.log.append(("reap", now, p.site_id))
+            self.abort(p)
+        return orphans

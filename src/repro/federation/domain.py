@@ -31,6 +31,7 @@ the control plane only set up.
 from __future__ import annotations
 
 import itertools
+from collections import OrderedDict
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -44,8 +45,17 @@ from repro.core.session import Binding
 from repro.federation import eastwest as ew
 from repro.federation.registry import (CapabilityDigest, FederationRegistry,
                                        digest_of)
+from repro.netfault.breaker import BreakerBoard
+from repro.netfault.retry import RetryPolicy
+from repro.netfault.wire import TransportError
 
 _KLASS = {c.name: c for c in (PREMIUM, ASSURED, BEST_EFFORT)}
+
+#: east-west verbs that are safe to re-send verbatim: COMMIT/ABORT/RENEW/
+#: RELEASE are idempotent by protocol contract, PREPARE only when it
+#: carries its ``prepare_key`` (checked at send time)
+_IDEMPOTENT_EW = (ew.EWPrepare, ew.EWCommit, ew.EWAbort, ew.EWRenew,
+                  ew.EWRelease)
 
 
 # ----------------------------------------------------------------------
@@ -212,12 +222,24 @@ class DomainController:
         #: user-plane references (GuestSiteView construction, result
         #: forwarding) — in-process federation only
         self._peer_objects: Dict[str, "DomainController"] = {}
+        #: per-peer circuit breakers over the east-west control path:
+        #: repeated solicitation timeouts open the circuit and DISCOVER
+        #: skips the peer with the attributable note ``circuit-open``
+        #: until the half-open probe succeeds
+        self.peer_breakers = BreakerBoard(self.core.clock)
+        #: at-least-once retry policy for the idempotent east-west verbs
+        self.retry = RetryPolicy()
         # home side
         self._views: Dict[str, GuestSiteView] = {}
         self._remote_bindings: Dict[str, _RemoteRef] = {}
         # visited side
         self._guest_by_ref: Dict[str, _GuestLease] = {}
         self._guest_sessions: Dict[str, _GuestLease] = {}
+        #: EWPrepare replay cache (prepare_key → original EWPrepared):
+        #: a re-sent PREPARE whose reply was lost must not double-reserve
+        self._prepare_replays: "OrderedDict[str, ew.EWPrepared]" = \
+            OrderedDict()
+        self._prepare_replay_window = 256
         #: supervisor/chaos verdict: domains declared dead are skipped in
         #: solicitation (note ``domain-dead``) and their providers dropped —
         #: a partitioned peer must not stall every DISCOVER on timeouts
@@ -277,8 +299,12 @@ class DomainController:
 
     def mark_domain_alive(self, domain: str) -> None:
         """Partition healed: solicit again; the peer re-registers its
-        provider on the next ``connect``/``advertise``."""
+        provider on the next ``connect``/``advertise``. The heal verdict
+        also closes the peer's circuit breaker — waiting out the cooldown
+        would leave the first post-heal establishes excluded as
+        ``circuit-open`` despite an explicit operator decision."""
         self._dead_domains.discard(domain)
+        self.peer_breakers.reset(domain)
 
     # ==================================================================
     # HOME SIDE
@@ -287,16 +313,32 @@ class DomainController:
         return bool(getattr(candidate, "domain", ""))
 
     def _send(self, domain: str, msg: ew.EWMessage) -> ew.EWMessage:
+        """One east-west exchange, with at-least-once re-send of the
+        idempotent verbs under jittered backoff. The ultimate loss still
+        maps to DEADLINE_EXPIRY — the exchange window expired and the
+        provisional state (if any) is the reaper's/TTL's to clean up."""
         endpoint = self.peers.get(domain)
         if endpoint is None:
             raise SessionError(FailureCause.NO_FEASIBLE_BINDING,
                                f"no east-west peering with {domain!r}")
-        try:
-            return ew.from_json(endpoint(msg.to_json()))
-        except ew.EWTimeout as e:
-            raise SessionError(
-                FailureCause.DEADLINE_EXPIRY,
-                f"east-west {msg.TYPE} to {domain} timed out: {e}")
+        attempts = 1
+        if isinstance(msg, _IDEMPOTENT_EW) and not (
+                isinstance(msg, ew.EWPrepare) and not msg.prepare_key):
+            attempts = self.retry.max_attempts
+        for attempt in range(1, attempts + 1):
+            try:
+                reply = ew.from_json(endpoint(msg.to_json()))
+            except (ew.EWTimeout, TransportError) as e:
+                if attempt < attempts:
+                    self.core.clock.sleep(self.retry.backoff_s(
+                        attempt, key=f"{domain}:{msg.TYPE}"))
+                    continue
+                self.peer_breakers.record(domain, False)
+                raise SessionError(
+                    FailureCause.DEADLINE_EXPIRY,
+                    f"east-west {msg.TYPE} to {domain} timed out: {e}")
+            self.peer_breakers.record(domain, True)
+            return reply
 
     # -- DISCOVER solicitation ------------------------------------------
     def augment(self, session, cands: List[Candidate], *,
@@ -316,7 +358,9 @@ class DomainController:
         merged = [replace(c, exclusion_reason=
                           f"{self.domain_id}:{c.exclusion_reason}")
                   if c.exclusion_reason else c for c in cands]
-        offers, notes = self.solicit_offers(session.asp, session.zone)
+        offers, notes = self.solicit_offers(
+            session.asp, session.zone,
+            deadline_at=getattr(session, "deadline_at", None))
         merged.extend(offers)
         for dom, why in notes:
             merged.append(Candidate(
@@ -337,11 +381,13 @@ class DomainController:
         return self.augment(session, cands, exclude_sites=exclude_sites)
 
     def solicit_offers(self, asp, zone: str, *,
-                       exclude: Tuple[str, ...] = ()
+                       exclude: Tuple[str, ...] = (),
+                       deadline_at: Optional[float] = None
                        ) -> Tuple[List[Candidate], List[Tuple[str, str]]]:
         """Query every fresh, digest-compatible peer; returns the offered
         candidates plus per-domain exclusion notes for peers that could
-        not offer (stale digest, infeasible budget, timeout, refusal)."""
+        not offer (stale digest, infeasible budget, timeout, circuit open,
+        exhausted deadline, refusal)."""
         offers: List[Candidate] = []
         notes: List[Tuple[str, str]] = []
         for dom in self.registry.domains(
@@ -352,9 +398,24 @@ class DomainController:
             if dom in self._dead_domains:
                 notes.append((dom, "domain-dead"))
                 continue
+            if not self.peer_breakers.allow(dom):
+                # consecutive exchange failures opened this peer's circuit:
+                # skip it attributably instead of stalling every DISCOVER
+                # on its timeout window until the half-open probe re-admits
+                notes.append((dom, "circuit-open"))
+                continue
             if not self.registry.ensure_fresh(dom):
                 notes.append((dom, "registry-stale"))
                 continue
+            deadline_ms = None
+            if deadline_at is not None:
+                deadline_ms = (deadline_at - self.core.clock.now()) * 1e3 \
+                    - self.transit_ms_for(dom)
+                if deadline_ms <= 0.0:
+                    # the remaining budget cannot even cover the transit
+                    # leg — don't ask the peer to promise the impossible
+                    notes.append((dom, "deadline-exceeded"))
+                    continue
             digest = self.registry.get(dom)
             if asp.modality.value not in digest.modalities:
                 notes.append((dom, "modality-not-advertised"))
@@ -376,16 +437,19 @@ class DomainController:
                 home_domain=self.domain_id,
                 query_id=f"{self.domain_id}/q-{next(self._refs):06d}",
                 zone=zone, asp=ew.apply_budget(asp, budget).to_wire(),
-                budget=budget.to_wire())
+                budget=budget.to_wire(), deadline_ms=deadline_ms)
             try:
                 reply = ew.from_json(endpoint(query.to_json()))
             except ew.EWTimeout:
+                self.peer_breakers.record(dom, False)
                 notes.append((dom, "offer-timeout"))
                 continue
             except Exception:
                 # an unreachable peer is indistinguishable from a timeout
+                self.peer_breakers.record(dom, False)
                 notes.append((dom, "offer-timeout"))
                 continue
+            self.peer_breakers.record(dom, True)
             if isinstance(reply, ew.EWError):
                 notes.append((dom, reply.cause or reply.code))
                 continue
@@ -418,6 +482,16 @@ class DomainController:
             exclusion_reason=f"{dom}:{reason}" if reason else "",
             domain=dom, region=e.get("region", ""))
 
+    def _remaining_ms(self, session, dom: str) -> Optional[float]:
+        """Shrinking end-to-end budget as seen at the visited ingress:
+        what is left of the session's establishment deadline minus the
+        inter-domain transit this exchange will spend."""
+        deadline_at = getattr(session, "deadline_at", None)
+        if deadline_at is None:
+            return None
+        return (deadline_at - self.core.clock.now()) * 1e3 \
+            - self.transit_ms_for(dom)
+
     # -- cross-domain 2PC (home half) -----------------------------------
     def prepare_remote(self, session, chosen, *, hold_s: float = 0.0,
                        context_tokens: int = 2048) -> FederatedPrepared:
@@ -428,6 +502,15 @@ class DomainController:
         budget = ew.decompose_budget(session.asp, self.transit_ms_for(dom),
                                      home_cost_share=self.home_cost_share)
         timers = self.core.timers
+        deadline_ms = self._remaining_ms(session, dom)
+        if deadline_ms is not None and deadline_ms <= timers.tau_prep * 1e3:
+            # reject BEFORE reserving anything: the budget cannot cover
+            # transit + the visited PREPARE floor, and this hop says so
+            raise SessionError(
+                FailureCause.DEADLINE_EXCEEDED,
+                f"[home:{self.domain_id}] cross-domain PREPARE to {dom}: "
+                f"{deadline_ms:.1f}ms remaining cannot cover the "
+                f"{timers.tau_prep * 1e3:.0f}ms phase floor")
         ttl_s = timers.tau_prep + timers.tau_com + hold_s
         qos_lease = self.core.coordinator.prepare_transport(
             (session.zone, f"ew:{dom}"), chosen.klass, ttl_s=ttl_s)
@@ -438,7 +521,9 @@ class DomainController:
             model_version=chosen.model.version,
             site_id=site_local, klass=chosen.klass.name, zone=session.zone,
             slots=1, context_tokens=int(context_tokens), hold_s=hold_s,
-            budget=budget.to_wire())
+            budget=budget.to_wire(), deadline_ms=deadline_ms,
+            prepare_key=f"{self.domain_id}/{session.session_id}"
+                        f"/pk-{next(self._refs):06d}")
         try:
             reply = self._send(dom, req)
         except BaseException:
@@ -472,7 +557,8 @@ class DomainController:
             reply = self._send(prepared.domain, ew.EWCommit(
                 home_domain=self.domain_id,
                 session_ref=prepared.session_ref,
-                prepared_ref=prepared.prepared_ref))
+                prepared_ref=prepared.prepared_ref,
+                deadline_ms=self._remaining_ms(session, prepared.domain)))
         except BaseException:
             # the COMMIT may have landed with the reply lost — EWAbort
             # degenerates to release on the visited side, re-driving it to
@@ -619,6 +705,13 @@ class DomainController:
                 visited_domain=self.domain_id, code="E_EW_BAD_REQUEST",
                 detail="solicited contract exceeds its declared "
                        "visited budget share")
+        if q.deadline_ms is not None and \
+                q.deadline_ms <= self.core.timers.tau_disc * 1e3:
+            raise SessionError(
+                FailureCause.DEADLINE_EXCEEDED,
+                f"[visited:{self.domain_id}] DISCOVER: {q.deadline_ms:.1f}ms "
+                f"remaining cannot cover the "
+                f"{self.core.timers.tau_disc * 1e3:.0f}ms phase floor")
         cands = discover(vasp, self.core.catalog, self.core.sites,
                          self.core.predictors, q.zone,
                          analytics=self.core.analytics)
@@ -632,6 +725,18 @@ class DomainController:
 
     def _ew_prepare(self, req: ew.EWPrepare) -> ew.EWMessage:
         self._gc_guests()
+        if req.prepare_key and req.prepare_key in self._prepare_replays:
+            # at-least-once delivery: the home re-sent a PREPARE whose
+            # reply was lost — return the original instead of reserving a
+            # second set of provisional leases for the same establishment
+            return self._prepare_replays[req.prepare_key]
+        if req.deadline_ms is not None and \
+                req.deadline_ms <= self.core.timers.tau_prep * 1e3:
+            raise SessionError(
+                FailureCause.DEADLINE_EXCEEDED,
+                f"[visited:{self.domain_id}] PREPARE: "
+                f"{req.deadline_ms:.1f}ms remaining cannot cover the "
+                f"{self.core.timers.tau_prep * 1e3:.0f}ms phase floor")
         # session_ref namespace guard: ids are only unique per home
         # domain, so a ref that names a NATIVE session here — or another
         # home's guest — must be refused, never clobbered
@@ -671,12 +776,17 @@ class DomainController:
             session_ref=req.session_ref, home_domain=req.home_domain,
             model=model, prepared=prepared, site_id=req.site_id)
         timers = self.core.timers
-        return ew.EWPrepared(
+        reply = ew.EWPrepared(
             visited_domain=self.domain_id, session_ref=req.session_ref,
             prepared_ref=ref, site_id=req.site_id, qfi=prepared.qfi,
             cache_bytes=cache_bytes,
             expires_at=prepared.prepared_at + timers.tau_prep
             + timers.tau_com + req.hold_s)
+        if req.prepare_key:
+            self._prepare_replays[req.prepare_key] = reply
+            while len(self._prepare_replays) > self._prepare_replay_window:
+                self._prepare_replays.popitem(last=False)
+        return reply
 
     def _ew_commit(self, req: ew.EWCommit) -> ew.EWMessage:
         g = self._guest_by_ref.get(req.prepared_ref)
@@ -687,6 +797,16 @@ class DomainController:
                                      f"{req.prepared_ref!r}")
         if g.committed:
             return g.response            # duplicate COMMIT: idempotent
+        if req.deadline_ms is not None and \
+                req.deadline_ms <= self.core.timers.tau_com * 1e3:
+            # refuse (rather than half-run) a COMMIT the budget cannot
+            # cover; the home rolls the provisional PREPARE back on this
+            # error, and the reaper/TTL covers a home that vanished
+            raise SessionError(
+                FailureCause.DEADLINE_EXCEEDED,
+                f"[visited:{self.domain_id}] COMMIT: "
+                f"{req.deadline_ms:.1f}ms remaining cannot cover the "
+                f"{self.core.timers.tau_com * 1e3:.0f}ms phase floor")
         try:
             binding = self.core.coordinator.commit(g.prepared, g.model)
         except SessionError:
@@ -746,6 +866,16 @@ class DomainController:
         return ew.EWReleaseAck(visited_domain=self.domain_id,
                                prepared_ref=req.prepared_ref,
                                released=True, tokens=tokens, cost=cost)
+
+    def tick(self) -> int:
+        """Visited-side orphan sweep, on the plane-heartbeat cadence: reap
+        outstanding coordinator PREPAREs past their decision window, then
+        collect guest leases whose underlying leases both TTL-expired (a
+        lost COMMIT, a vanished home). Returns guest records reaped."""
+        before = len(self._guest_by_ref)
+        self.core.coordinator.reap()
+        self._gc_guests()
+        return before - len(self._guest_by_ref)
 
     def _gc_guests(self) -> None:
         """Reap guest leases whose home domain vanished: once BOTH

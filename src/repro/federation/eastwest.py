@@ -44,7 +44,9 @@ from repro.core.failures import FailureCause, SessionError
 
 #: wire-schema version of the east-west protocol; majors must match between
 #: peered domains (minor additions are backward-compatible)
-EW_SCHEMA_VERSION = "1.0"
+#: 1.1: + deadline_ms budgets (DiscoverQuery/EWPrepare/EWCommit) and
+#:      EWPrepare.prepare_key at-least-once idempotency
+EW_SCHEMA_VERSION = "1.1"
 
 #: protocol-layer codes with no Eq. (12) counterpart (the request never
 #: reached the visited domain's lifecycle machinery)
@@ -132,6 +134,9 @@ class DiscoverQuery(EWMessage):
     zone: str
     asp: dict                    # ASP.to_wire()
     budget: dict                 # SLABudget.to_wire()
+    #: remaining end-to-end establishment budget at the visited ingress
+    #: (the home already subtracted its transit estimate); None = unbounded
+    deadline_ms: Optional[float] = None
     schema_version: str = EW_SCHEMA_VERSION
 
 
@@ -174,6 +179,10 @@ class EWPrepare(EWMessage):
     context_tokens: int = 2048   # sizes the visited cache reservation
     hold_s: float = 0.0
     budget: dict = field(default_factory=dict)
+    #: at-least-once idempotency: a re-sent PREPARE with the same key
+    #: returns the original EWPrepared instead of double-reserving
+    prepare_key: Optional[str] = None
+    deadline_ms: Optional[float] = None
     schema_version: str = EW_SCHEMA_VERSION
 
 
@@ -201,6 +210,7 @@ class EWCommit(EWMessage):
     home_domain: str
     session_ref: str
     prepared_ref: str
+    deadline_ms: Optional[float] = None
     schema_version: str = EW_SCHEMA_VERSION
 
 

@@ -133,10 +133,13 @@ class SiteSupervisor:
             # live by definition; readiness tracks supervisor state
             return ProbeResult(self.site_id, True,
                                self.state is SiteHealth.HEALTHY, self.state)
+        breakers = getattr(self.orch, "breakers", None)
         try:
             load = plane.load()
         except Exception as e:                      # noqa: BLE001
             self._misses += 1
+            if breakers is not None:
+                breakers.record(self.site_id, False)
             if self._misses >= self.miss_threshold:
                 self.crash(detail=f"probe: {type(e).__name__}: {e}")
             elif self.state is SiteHealth.HEALTHY:
@@ -145,6 +148,10 @@ class SiteSupervisor:
                                error=f"{type(e).__name__}: {e}",
                                misses=self._misses)
         self._misses = 0
+        if breakers is not None:
+            # a completed heartbeat tick is the half-open probe success that
+            # re-closes this site's circuit for DISCOVER
+            breakers.record(self.site_id, True)
         if self.state is SiteHealth.SUSPECT:
             self.state = SiteHealth.HEALTHY
         # supervisor cadence feeds the ξ loop: site health is observed even

@@ -1290,3 +1290,142 @@ def simulate_verify_crash_degrade(*, n_sessions: int = 48,
         still_committed=still, serve_ok_degraded=serve_deg,
         recovered=recovered, recovered_sites=landed,
         serve_ok_after=serve_ok, events=dict(events))
+
+
+# ----------------------------------------------------------------------
+# unreliable control plane: lossy wire + retries + reaping, end to end
+# ----------------------------------------------------------------------
+@dataclass
+class LossyControlPlaneResult:
+    loss: float                     # per-fault rate on every control link
+    n_offered: int
+    established: int
+    established_visited: int        # spilled east-west under loss
+    failed: int
+    causes: Dict[str, int]          # error code → count, for the failures
+    goodput: float                  # established / offered
+    p50_establish_ms: float         # virtual wall time, retries included
+    p99_establish_ms: float
+    serve_ok: int                   # sampled post-establish serves
+    orphaned_after_sweep: int       # MUST be 0 (lease invariant)
+    charging_open: int              # MUST be 0 (no billing without commit)
+    wire: Dict[str, int]            # aggregated channel fault counters
+
+
+def simulate_lossy_control_plane(*, n_sessions: int = 64,
+                                 loss: float = 0.05,
+                                 spill: bool = True,
+                                 deadline_ms: float = 30_000.0,
+                                 serve_sample: int = 16,
+                                 seed: int = 0) -> LossyControlPlaneResult:
+    """Full AIS establishment over an unreliable control plane, on BOTH
+    paths: every northbound client rides its own seeded
+    :class:`~repro.netfault.wire.LossyChannel` around the gateway, and the
+    east-west peering between the two domains is lossy too. ``spill``
+    undersizes the home edge so a share of the fleet must establish
+    cross-domain (lossy EWPrepare/EWCommit with at-least-once re-sends).
+
+    The run measures what the retry stack delivers (goodput, p50/p99
+    establish latency including retries and backoff) and then asserts the
+    paper's safety invariant the hard way: after the orphan sweeps, every
+    lease belongs to an established session (no stranded provisional
+    state) and no failed establishment left a charging record open."""
+    from repro.api.client import NorthboundError, SessionClient
+    from repro.api.gateway import NorthboundGateway
+    from repro.core import default_asp
+    from repro.core.asp import QualityTier
+    from repro.netfault import (FaultPlan, LossyChannel, RetryPolicy,
+                                TransportError)
+
+    clock = VirtualClock()
+    home_slots = max(n_sessions // 4, 1) if spill else 2 * n_sessions
+    home, visited = _federation_pair(clock, home_slots=home_slots,
+                                     visited_slots=2 * n_sessions)
+    # the east-west peering is just another unreliable wire
+    home.peers[visited.domain_id] = LossyChannel(
+        visited.handle_eastwest_json, clock,
+        FaultPlan.uniform(loss, seed=seed * 7919 + 1), name="ew:h->v")
+    visited.peers[home.domain_id] = LossyChannel(
+        home.handle_eastwest_json, clock,
+        FaultPlan.uniform(loss, seed=seed * 7919 + 2), name="ew:v->h")
+    gw = NorthboundGateway(home)
+    asp = default_asp(tier=QualityTier.BASIC)
+
+    channels: List[LossyChannel] = []
+    clients, causes = [], {}
+    establish_ms: List[float] = []
+    established = failed = 0
+    for i in range(n_sessions):
+        chan = LossyChannel(
+            gw.handle_json, clock,
+            FaultPlan.uniform(loss, seed=seed * 100_003 + i),
+            name=f"nb:{i}")
+        channels.append(chan)
+        client = SessionClient(
+            gw, asp, invoker=f"ue-{i}", zone="zone-a",
+            subscribe_events=False, transport=chan, clock=clock,
+            retry=RetryPolicy(seed=seed * 31 + i),
+            deadline_ms=deadline_ms)
+        t0 = clock.now()
+        try:
+            client.establish()
+            established += 1
+            clients.append(client)
+        except (NorthboundError, TransportError) as e:
+            failed += 1
+            code = getattr(e, "code", None) or "E_TRANSPORT"
+            causes[code] = causes.get(code, 0) + 1
+        establish_ms.append((clock.now() - t0) * 1e3)
+        # the heartbeat cadence runs between arrivals: planes advance,
+        # sweeps fire (gateway + home coordinator + visited guest GC)
+        gw.pump(clock.now())
+        visited.tick()
+
+    serve_ok = 0
+    for c in clients[:serve_sample]:
+        clock.advance(0.001)
+        stream = c.generate(prompt_tokens=64, gen_tokens=16)
+        stream.tokens()
+        serve_ok += int(stream.complete.completed)
+
+    # let every decision window lapse, then run the sweeps one final time:
+    # whatever provisional state a lost COMMIT stranded must now be reaped
+    timers = home.core.timers
+    clock.advance(timers.tau_prep + timers.tau_com + 1.0)
+    gw.reap_orphans()
+    home.core.coordinator.reap()
+    visited.core.coordinator.reap()
+    visited.tick()
+
+    established_visited = sum(
+        1 for c in clients
+        if c.record.get("anchor", "").startswith(f"{visited.domain_id}/"))
+    slots_in_use = sum(
+        s.slots_in_use() for s in
+        list(home.core.sites.values()) + list(visited.core.sites.values())
+        if not getattr(s, "is_guest_view", False))
+    guest_provisional = sum(1 for g in visited._guest_by_ref.values()
+                            if not g.committed)
+    orphaned = (len(home.core.coordinator.outstanding)
+                + len(visited.core.coordinator.outstanding)
+                + guest_provisional
+                + max(slots_in_use - established, 0))
+    charging_open = sum(
+        1 for s in home.core.sessions.values()
+        if getattr(s, "failure", None) is not None
+        and getattr(s, "charging_ref", None) is not None)
+
+    wire: Dict[str, int] = {}
+    for chan in channels + [home.peers[visited.domain_id],
+                            visited.peers[home.domain_id]]:
+        for k, v in chan.stats.items():
+            wire[k] = wire.get(k, 0) + v
+    ms = np.asarray(sorted(establish_ms)) if establish_ms else np.zeros(1)
+    return LossyControlPlaneResult(
+        loss=loss, n_offered=n_sessions, established=established,
+        established_visited=established_visited, failed=failed,
+        causes=causes, goodput=established / max(n_sessions, 1),
+        p50_establish_ms=float(np.quantile(ms, 0.50)),
+        p99_establish_ms=float(np.quantile(ms, 0.99)),
+        serve_ok=serve_ok, orphaned_after_sweep=orphaned,
+        charging_open=charging_open, wire=wire)

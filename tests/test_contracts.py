@@ -85,19 +85,39 @@ class TestASP:
 
 
 class TestFailureSemantics:
-    def test_exactly_nine_causes(self):
-        """Eq. (12): the partition has exactly these nine elements."""
-        assert len(FailureCause) == 9
+    def test_exact_cause_partition(self):
+        """Eq. (12) partition (nine) + the unreliable-transport pair."""
+        assert len(FailureCause) == 11
         expected = {"consent violation", "policy denial",
                     "sovereignty violation", "model unavailable",
                     "no feasible binding", "compute scarcity",
                     "QoS scarcity", "state transfer failure",
-                    "deadline expiry"}
+                    "deadline expiry", "transport failure",
+                    "deadline exceeded"}
         assert {c.value for c in FailureCause} == expected
 
     def test_distinct_remediations(self):
         """Causes must not be conflated: distinct remediation per cause."""
         assert len(set(REMEDIATION.values())) == len(FailureCause)
+
+    def test_every_cause_classified_and_coded(self):
+        """Exhaustive: each cause has a remediation, a retryable/terminal
+        classification, and a northbound error code."""
+        from repro.api import messages as m
+        from repro.core.failures import RETRYABLE, is_retryable
+        for cause in FailureCause:
+            assert cause in REMEDIATION, cause
+            assert cause in m.ERROR_CODE_TABLE, cause
+            assert is_retryable(cause) == (cause in RETRYABLE)
+        # the retryable set is exactly the causes where a fresh attempt at
+        # the same request can still succeed
+        assert RETRYABLE == {FailureCause.COMPUTE_SCARCITY,
+                             FailureCause.QOS_SCARCITY,
+                             FailureCause.DEADLINE_EXPIRY,
+                             FailureCause.TRANSPORT_FAILURE}
+        # DEADLINE_EXCEEDED is terminal (the budget itself ran out) even
+        # though DEADLINE_EXPIRY (a phase timer tripped) is retryable
+        assert not is_retryable(FailureCause.DEADLINE_EXCEEDED)
 
     def test_session_error_carries_cause(self):
         e = SessionError(FailureCause.QOS_SCARCITY, "no flows")

@@ -1,0 +1,605 @@
+"""Unreliable control plane: the netfault layer and everything wired to it.
+
+Covers the deterministic lossy wire (drop/delay/duplicate/reorder/corrupt/
+partition from one seed), the budget-aware retry engine, the circuit
+breaker state machine, the orphan-lease reaper, the gateway's deadline
+floors and idempotency-window eviction, typed renewal lapse on the client,
+east-west PREPARE replay idempotency — and, as property tests over seeded
+fault schedules, the paper's safety invariant: after ANY fault sequence a
+session is fully established exactly once OR every lease is released and
+no charging record stays open.
+"""
+
+import pytest
+
+from repro.api import messages as m
+from repro.api.client import (DeadlineExceeded, LeaseLapsed, NorthboundError,
+                              SessionClient)
+from repro.api.gateway import NorthboundGateway
+from repro.core.asp import QualityTier, default_asp
+from repro.core.clock import VirtualClock
+from repro.core.failures import RETRYABLE, FailureCause, SessionError
+from repro.netfault import (BOTH, REQUEST, RESPONSE, BreakerBoard,
+                            CircuitBreaker, FaultPlan, LossyChannel,
+                            OrphanReaper, RetryPolicy, TransportError,
+                            TransportTimeout, attach)
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+def send(gw, msg):
+    out = gw.handle_json(msg.to_json())
+    if isinstance(out, list):
+        return [m.from_json(o) for o in out]
+    return m.from_json(out)
+
+
+class _Echo:
+    """Recording endpoint: remembers every delivered payload."""
+
+    def __init__(self):
+        self.seen = []
+
+    def __call__(self, payload):
+        self.seen.append(payload)
+        return f"ack:{payload}"
+
+
+# ----------------------------------------------------------------------
+# the lossy wire
+# ----------------------------------------------------------------------
+class TestFaultPlan:
+    def test_validate_rejects_bad_probability(self):
+        with pytest.raises(ValueError):
+            LossyChannel(_Echo(), VirtualClock(),
+                         FaultPlan(p_drop_request=1.5))
+
+    def test_validate_rejects_bad_partition(self):
+        with pytest.raises(ValueError):
+            FaultPlan(partitions=((2.0, 1.0, BOTH),)).validate()
+        with pytest.raises(ValueError):
+            FaultPlan(partitions=((0.0, 1.0, "sideways"),)).validate()
+
+    def _drive(self, plan, n=200):
+        clock, server = VirtualClock(), _Echo()
+        chan = LossyChannel(server, clock, plan)
+        outcomes = []
+        for i in range(n):
+            try:
+                outcomes.append(("ok", chan(f"msg-{i}")))
+            except TransportError as e:
+                outcomes.append(("err", type(e).__name__))
+        return outcomes, dict(chan.stats), list(server.seen), clock.now()
+
+    def test_same_seed_replays_identical_schedule(self):
+        plan = FaultPlan.uniform(0.12, seed=42)
+        a = self._drive(plan)
+        b = self._drive(plan)
+        assert a == b                     # outcomes, stats, deliveries, time
+
+    def test_different_seed_differs(self):
+        a = self._drive(FaultPlan.uniform(0.12, seed=1))
+        b = self._drive(FaultPlan.uniform(0.12, seed=2))
+        assert a[1] != b[1]
+
+    def test_drop_response_is_a_lost_commit(self):
+        """The defining 2PC ambiguity: the server processed the request,
+        only the reply died — caller times out, state already mutated."""
+        clock, server = VirtualClock(), _Echo()
+        chan = LossyChannel(server, clock,
+                            FaultPlan(p_drop_response=1.0, timeout_s=0.05))
+        with pytest.raises(TransportTimeout):
+            chan("commit")
+        assert server.seen == ["commit"]
+        assert clock.now() == pytest.approx(0.05)
+
+    def test_corrupt_frame_never_reaches_the_server(self):
+        clock, server = VirtualClock(), _Echo()
+        chan = LossyChannel(server, clock, FaultPlan(p_corrupt=1.0))
+        with pytest.raises(TransportTimeout):
+            chan("payload")
+        assert server.seen == []          # link-layer CRC discard
+
+    def test_duplicate_delivers_twice_caller_sees_one_reply(self):
+        clock, server = VirtualClock(), _Echo()
+        chan = LossyChannel(server, clock, FaultPlan(p_duplicate=1.0))
+        assert chan("a") == "ack:a"
+        assert server.seen == ["a", "a"]
+
+    def test_reorder_replays_the_previous_request_first(self):
+        clock, server = VirtualClock(), _Echo()
+        chan = LossyChannel(server, clock, FaultPlan(p_reorder=1.0))
+        chan("first")                     # nothing held yet: clean delivery
+        chan("second")
+        assert server.seen == ["first", "first", "second"]
+
+    def test_partition_window_drops_one_direction(self):
+        clock, server = VirtualClock(), _Echo()
+        chan = LossyChannel(
+            server, clock,
+            FaultPlan(partitions=((0.0, 10.0, REQUEST),), timeout_s=0.5))
+        with pytest.raises(TransportTimeout):
+            chan("in-window")
+        assert server.seen == []
+        clock.advance(10.0)               # window over (0.5 already burned)
+        assert chan("after") == "ack:after"
+        # response-direction partition: request still lands server-side
+        chan2 = LossyChannel(
+            server, clock,
+            FaultPlan(partitions=((0.0, 1e9, RESPONSE),), timeout_s=0.5))
+        with pytest.raises(TransportTimeout):
+            chan2("one-way")
+        assert server.seen[-1] == "one-way"
+
+
+# ----------------------------------------------------------------------
+# retry policy
+# ----------------------------------------------------------------------
+class TestRetryPolicy:
+    def test_backoff_is_deterministic_and_capped(self):
+        p = RetryPolicy(base_s=0.01, cap_s=0.5, seed=7)
+        for attempt in range(1, 9):
+            a = p.backoff_s(attempt, key="COMMIT")
+            assert a == p.backoff_s(attempt, key="COMMIT")
+            assert 0.0 <= a <= min(0.5, 0.01 * 2 ** (attempt - 1))
+        assert p.backoff_s(3, key="COMMIT") != \
+            RetryPolicy(base_s=0.01, cap_s=0.5, seed=8).backoff_s(
+                3, key="COMMIT")
+
+    def test_retryability_follows_the_remediation_classes(self):
+        p = RetryPolicy()
+        assert p.retryable(TransportTimeout("lost"))
+        for cause in FailureCause:
+            assert p.retryable(cause) == (cause in RETRYABLE)
+            assert p.retryable(SessionError(cause, "x")) == \
+                (cause in RETRYABLE)
+        assert not p.retryable(ValueError("not a wire failure"))
+
+    def test_budget_gates_the_next_sleep(self):
+        p = RetryPolicy(max_attempts=10, base_s=0.1, cap_s=0.1, seed=3)
+        err = TransportTimeout("lost")
+        assert p.should_retry(err, 1, remaining_s=None)
+        assert not p.should_retry(err, 1, remaining_s=0.0)
+        # the drawn backoff must FIT in what remains
+        assert not p.should_retry(err, 1,
+                                  remaining_s=p.backoff_s(1) * 0.5)
+        assert p.should_retry(err, 1, remaining_s=p.backoff_s(1) + 1.0)
+
+    def test_attempt_cap_and_terminal_causes(self):
+        p = RetryPolicy(max_attempts=3)
+        err = TransportTimeout("lost")
+        assert p.should_retry(err, 2)
+        assert not p.should_retry(err, 3)
+        assert not p.should_retry(
+            SessionError(FailureCause.DEADLINE_EXCEEDED, "x"), 1)
+        assert not p.should_retry(
+            SessionError(FailureCause.POLICY_DENIAL, "x"), 1)
+
+    def test_rejects_nonsense_configuration(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(base_s=0.5, cap_s=0.1)
+
+
+# ----------------------------------------------------------------------
+# circuit breaker
+# ----------------------------------------------------------------------
+class TestCircuitBreaker:
+    def test_trips_after_consecutive_failures_only(self):
+        clock = VirtualClock()
+        b = CircuitBreaker(clock, failure_threshold=3, cooldown_s=5.0)
+        b.record(False); b.record(False); b.record(True)   # streak broken
+        b.record(False); b.record(False)
+        assert b.state == "closed" and b.allow()
+        b.record(False)
+        assert b.state == "open" and not b.allow()
+
+    def test_half_open_admits_exactly_one_probe(self):
+        clock = VirtualClock()
+        b = CircuitBreaker(clock, failure_threshold=1, cooldown_s=5.0)
+        b.record(False)
+        assert not b.allow()
+        clock.advance(5.001)              # strictly past the cooldown
+        assert b.allow()                  # the single probe
+        assert b.state == "half-open"
+        assert not b.allow()              # everyone else still blocked
+        b.record(True)
+        assert b.state == "closed" and b.allow()
+
+    def test_failed_probe_reopens_with_fresh_cooldown(self):
+        clock = VirtualClock()
+        b = CircuitBreaker(clock, failure_threshold=1, cooldown_s=5.0)
+        b.record(False)
+        clock.advance(5.001)
+        assert b.allow()
+        b.record(False)                   # probe died
+        assert b.state == "open" and not b.allow()
+        clock.advance(5.001)
+        assert b.allow()                  # next window, next probe
+        states = [s for _, s in b.transitions]
+        assert states == ["open", "half-open", "open", "half-open"]
+
+    def test_board_keeps_targets_independent(self):
+        clock = VirtualClock()
+        board = BreakerBoard(clock, failure_threshold=1)
+        board.record("site-a", False)
+        assert not board.allow("site-a")
+        assert board.allow("site-b")
+        assert board.snapshot() == {"site-a": "open", "site-b": "closed"}
+        assert board.state("never-seen") == "closed"
+
+    def test_administrative_reset_closes_without_cooldown(self):
+        """A fleet-ops heal verdict (mark_domain_alive) must not wait out
+        the cooldown: reset() closes the circuit immediately."""
+        clock = VirtualClock()
+        board = BreakerBoard(clock, failure_threshold=1, cooldown_s=5.0)
+        board.record("peer", False)
+        assert not board.allow("peer")
+        board.reset("peer")               # no clock.advance
+        assert board.state("peer") == "closed" and board.allow("peer")
+        board.reset("never-seen")         # unknown target is a no-op
+
+    def test_mark_domain_alive_resets_peer_breaker(self):
+        """End-to-end heal: a partition trips the peer breaker; the
+        operator's mark_domain_alive verdict re-admits the peer at once
+        instead of leaving post-heal establishes 'circuit-open'."""
+        from tests.test_federation import make_federation
+
+        _clock, home, visited = make_federation()
+        for _ in range(3):                # trip (threshold 3)
+            home.peer_breakers.record("visited", False)
+        assert home.peer_breakers.state("visited") == "open"
+        home.mark_domain_dead("visited")
+        home.mark_domain_alive("visited")
+        assert home.peer_breakers.state("visited") == "closed"
+        assert home.peer_breakers.allow("visited")
+
+
+# ----------------------------------------------------------------------
+# orphan reaper
+# ----------------------------------------------------------------------
+class TestOrphanReaper:
+    def test_sweep_aggregates_counts_and_lists(self):
+        r = OrphanReaper()
+        r.register("ints", lambda: 2)
+        r.register("lists", lambda: ["a", "b", "c"])
+        r.register("none", lambda: None)
+        assert r.sweep() == {"ints": 2, "lists": 3, "none": 0}
+        assert r.sweep() == {"ints": 2, "lists": 3, "none": 0}
+        assert r.total_reaped == 10
+
+    def test_attach_wires_every_plane(self):
+        class Gateway:
+            def reap_orphans(self):
+                return ["s1"]
+
+        class Coordinator:
+            def reap(self):
+                return 2
+
+        class Domain:
+            def __init__(self, domain_id):
+                self.domain_id = domain_id
+
+            def tick(self):
+                return 1
+
+        r = attach(gateway=Gateway(), coordinator=Coordinator(),
+                   domains=[Domain("home"), Domain("visited")])
+        assert r.sweep() == {"coordinator": 2, "gateway": 1,
+                             "domain:home": 1, "domain:visited": 1}
+
+
+# ----------------------------------------------------------------------
+# gateway: deadline floors, eviction, failure re-reporting
+# ----------------------------------------------------------------------
+class TestGatewayDeadlines:
+    def test_discover_floor_rejects_before_any_state_exists(self):
+        gw = NorthboundGateway(clock=VirtualClock())
+        err = send(gw, m.DiscoverRequest(invoker="ue", zone="zone-a",
+                                         asp=default_asp(), deadline_ms=1.0))
+        assert err.code == "E_DEADLINE_EXCEEDED"
+        assert "[gateway]" in err.detail          # attributable per hop
+        assert gw.orch.sessions == {}             # nothing to reap later
+
+    def test_mid_establishment_floor_does_not_fail_the_session(self):
+        """A budget too small for the NEXT phase is the CALLER's problem
+        (send more budget, or give up) — the session must survive so a
+        re-send with a sane budget can continue the establishment."""
+        gw = NorthboundGateway(clock=VirtualClock())
+        disc = send(gw, m.DiscoverRequest(invoker="ue", zone="zone-a",
+                                          asp=default_asp()))
+        sid = disc.session_id
+        err = send(gw, m.PageRequest(session_id=sid, deadline_ms=0.5))
+        assert err.code == "E_DEADLINE_EXCEEDED"
+        assert "AI-PAGING" in err.detail
+        paged = send(gw, m.PageRequest(session_id=sid, deadline_ms=5_000.0))
+        assert isinstance(paged, m.PageResponse)  # same session, unharmed
+
+    def test_retry_recarrying_less_budget_is_the_same_request(self):
+        """At-least-once re-sends legitimately shrink deadline_ms; the
+        idempotency fingerprint must NOT read that as a conflict."""
+        gw = NorthboundGateway(clock=VirtualClock())
+        disc = send(gw, m.DiscoverRequest(invoker="ue", zone="zone-a",
+                                          asp=default_asp()))
+        sid = disc.session_id
+        send(gw, m.PageRequest(session_id=sid))
+        prep = send(gw, m.PrepareRequest(session_id=sid,
+                                         idempotency_key="p",
+                                         deadline_ms=10_000.0))
+        assert isinstance(prep, m.PrepareResponse)
+        retry = send(gw, m.PrepareRequest(session_id=sid,
+                                          idempotency_key="p",
+                                          deadline_ms=3_000.0))
+        assert isinstance(retry, m.PrepareResponse)
+        assert retry.prepared_ref == prep.prepared_ref
+
+
+class TestGatewayIdempotencyEviction:
+    def _establish(self, gw, i):
+        disc = send(gw, m.DiscoverRequest(invoker=f"ue-{i}", zone="zone-a",
+                                          asp=default_asp()))
+        sid = disc.session_id
+        send(gw, m.PageRequest(session_id=sid))
+        prep = send(gw, m.PrepareRequest(session_id=sid,
+                                         idempotency_key=f"p-{i}"))
+        com = send(gw, m.CommitRequest(session_id=sid,
+                                       prepared_ref=prep.prepared_ref,
+                                       idempotency_key=f"c-{i}"))
+        assert isinstance(com, m.CommitResponse)
+        return sid
+
+    def test_evicted_key_refuses_attributably_not_by_replaying(self):
+        """A retry whose key aged out of the bounded window must get
+        E_IDEMPOTENCY_EVICTED — re-running the procedure could double
+        -reserve, and E_BAD_REQUEST would lie about what happened."""
+        gw = NorthboundGateway(clock=VirtualClock(), idempotency_window=2)
+        sid0 = self._establish(gw, 0)
+        used_before = sum(s.slots_in_use()
+                          for s in gw.orch.sites.values())
+        self._establish(gw, 1)            # four keyed ops: c-0 ages out
+        retry = send(gw, m.CommitRequest(session_id=sid0,
+                                         prepared_ref="prep-000001",
+                                         idempotency_key="c-0"))
+        assert retry.code == "E_IDEMPOTENCY_EVICTED"
+        assert "aged out" in retry.detail
+        # crucially: nothing re-ran — session 0 still holds exactly its
+        # original reservation
+        used_after = sum(s.slots_in_use() for s in gw.orch.sites.values())
+        assert used_after == used_before + 1      # just session 1's slot
+        assert gw.orch.sessions[sid0].committed()
+
+    def test_fresh_keys_still_work_after_evictions(self):
+        gw = NorthboundGateway(clock=VirtualClock(), idempotency_window=2)
+        for i in range(4):
+            self._establish(gw, i)
+
+
+class TestFailedSessionRetryReporting:
+    def test_retry_after_failed_page_re_reports_the_original_cause(self):
+        """PAGE fails (every site excluded) and the RESPONSE is lost: the
+        re-sent PAGE must re-report the original failure cause — not
+        E_BAD_REQUEST 'PAGE before DISCOVER' just because the pending
+        state was dropped when the session failed."""
+        gw = NorthboundGateway(clock=VirtualClock())
+        disc = send(gw, m.DiscoverRequest(invoker="ue", zone="zone-a",
+                                          asp=default_asp()))
+        sid = disc.session_id
+        all_sites = list(gw.orch.sites.keys())
+        first = send(gw, m.PageRequest(session_id=sid,
+                                       exclude_sites=all_sites))
+        assert isinstance(first, m.ErrorResponse)
+        assert first.code != "E_BAD_REQUEST"
+        retry = send(gw, m.PageRequest(session_id=sid,
+                                       exclude_sites=all_sites))
+        assert retry.code == first.code
+        assert "re-reports the original outcome" in retry.detail
+
+
+# ----------------------------------------------------------------------
+# client: lossy establish, budget exhaustion, typed renewal lapse
+# ----------------------------------------------------------------------
+class _FlakyTransport:
+    """Switchable wrapper: healthy until ``down`` is set."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.down = False
+        self.heartbeats = 0
+
+    def __call__(self, payload):
+        if self.down:
+            raise TransportTimeout("link down")
+        if '"heartbeat_report"' in payload:
+            self.heartbeats += 1
+        return self.inner(payload)
+
+
+class TestClientUnderLoss:
+    def test_establish_retries_through_heavy_loss_exactly_once(self):
+        clock = VirtualClock()
+        gw = NorthboundGateway(clock=clock)
+        chan = LossyChannel(gw.handle_json, clock,
+                            FaultPlan.uniform(0.25, seed=5))
+        client = SessionClient(gw, default_asp(tier=QualityTier.BASIC),
+                               invoker="ue-loss", subscribe_events=False,
+                               transport=chan, clock=clock,
+                               retry=RetryPolicy(seed=5),
+                               deadline_ms=60_000.0)
+        client.establish()
+        committed = [s for s in gw.orch.sessions.values() if s.committed()]
+        assert len(committed) == 1        # exactly once, however many tries
+        assert sum(s.slots_in_use()
+                   for s in gw.orch.sites.values()) == 1
+
+    def test_exhausted_budget_is_typed_and_leaves_nothing_behind(self):
+        clock = VirtualClock()
+        gw = NorthboundGateway(clock=clock)
+        # every attempt times out; the budget drains 50ms at a time
+        chan = LossyChannel(gw.handle_json, clock,
+                            FaultPlan(p_drop_request=1.0, timeout_s=0.05))
+        client = SessionClient(gw, default_asp(), invoker="ue-dead",
+                               subscribe_events=False, transport=chan,
+                               clock=clock, retry=RetryPolicy(seed=1),
+                               deadline_ms=120.0)
+        with pytest.raises((DeadlineExceeded, TransportError)):
+            client.establish()
+        assert all(not s.committed() for s in gw.orch.sessions.values())
+        assert sum(s.slots_in_use() for s in gw.orch.sites.values()) == 0
+
+    def test_sub_floor_budget_refused_by_the_first_hop(self):
+        clock = VirtualClock()
+        gw = NorthboundGateway(clock=clock)
+        client = SessionClient(gw, default_asp(), invoker="ue-tiny",
+                               subscribe_events=False, clock=clock,
+                               deadline_ms=10.0)    # < 50ms DISCOVER floor
+        with pytest.raises(DeadlineExceeded) as ei:
+            client.establish()
+        assert "[gateway]" in str(ei.value)
+        assert gw.orch.sessions == {}
+
+    def test_renewal_failure_after_retries_is_a_typed_lapse(self):
+        clock = VirtualClock()
+        gw = NorthboundGateway(clock=clock)
+        flaky = _FlakyTransport(gw.handle_json)
+        client = SessionClient(gw, default_asp(), invoker="ue-renew",
+                               subscribe_events=False, transport=flaky,
+                               clock=clock, retry=RetryPolicy(seed=2),
+                               renew_margin=0.0, renew_skew_s=0.5)
+        client.establish()
+        flaky.down = True
+        with pytest.raises(LeaseLapsed) as ei:
+            client.generate(prompt_tokens=16, gen_tokens=4)
+        assert "may have lapsed" in str(ei.value)
+
+    def test_skew_allowance_renews_early(self):
+        """renew_skew_s shifts the renewal point EARLIER by the tolerated
+        clock skew — the lease is refreshed before a slow client clock
+        would have let it lapse."""
+        def run(skew):
+            clock = VirtualClock()
+            gw = NorthboundGateway(clock=clock)
+            flaky = _FlakyTransport(gw.handle_json)
+            c = SessionClient(gw, default_asp(), invoker="ue-skew",
+                              subscribe_events=False, transport=flaky,
+                              clock=clock, renew_margin=0.5,
+                              renew_skew_s=skew)
+            c.establish()                 # lease_s = 30 ⇒ due = 15 − skew
+            clock.advance(14.0)
+            c.generate(gen_tokens=2)      # observes server t≈14 afterwards
+            clock.advance(0.5)
+            c.generate(gen_tokens=2)      # _maybe_renew sees age ≈ 14
+            return flaky.heartbeats
+        assert run(7.5) == run(0.0) + 1   # due 7.5 fires, due 15 does not
+
+
+# ----------------------------------------------------------------------
+# east-west: PREPARE replay idempotency under at-least-once delivery
+# ----------------------------------------------------------------------
+class TestEastWestReplay:
+    def _pair(self):
+        from tests.test_federation import make_federation
+        return make_federation()
+
+    def test_prepare_key_replay_returns_original_without_reserving(self):
+        from repro.federation import eastwest as ew
+        clock, home, visited = self._pair()
+        req = ew.EWPrepare(
+            home_domain="home", session_ref="ais-x", model_id="edge-tiny",
+            model_version="1.0", site_id="v-edge", klass="best-effort",
+            zone="zone-a", prepare_key="home/ais-x/pk-000001")
+        first = ew.from_json(visited.handle_eastwest_json(req.to_json()))
+        assert isinstance(first, ew.EWPrepared)
+        used = visited.core.sites["v-edge"].slots_in_use()
+        replay = ew.from_json(visited.handle_eastwest_json(req.to_json()))
+        assert isinstance(replay, ew.EWPrepared)
+        assert replay.prepared_ref == first.prepared_ref
+        assert visited.core.sites["v-edge"].slots_in_use() == used
+
+    def test_lossy_eastwest_establish_converges(self):
+        """Home saturated ⇒ every establish spills east-west over a lossy
+        peer link; retries + prepare_key idempotency must converge to
+        exactly-once without stranding visited guest state."""
+        from tests.test_federation import make_federation, saturate
+        clock, home, visited = make_federation(solicit="always")
+        saturate(home.core.sites["h-edge"], home.core.catalog.get("edge-tiny"))
+        real = home.peers["visited"]
+        home.peers["visited"] = LossyChannel(
+            real, clock, FaultPlan.uniform(0.10, seed=11), name="ew")
+        gw = NorthboundGateway(home)
+        ok = 0
+        for i in range(8):
+            client = SessionClient(
+                gw, default_asp(tier=QualityTier.BASIC),
+                invoker=f"ue-ew-{i}", subscribe_events=False, clock=clock,
+                retry=RetryPolicy(seed=100 + i), deadline_ms=30_000.0)
+            try:
+                client.establish()
+                ok += 1
+            except NorthboundError:
+                pass
+            visited.tick()
+        timers = home.core.timers
+        clock.advance(timers.tau_prep + timers.tau_com + 1.0)
+        home.core.coordinator.reap()
+        visited.core.coordinator.reap()
+        visited.tick()
+        assert ok >= 6                    # loss hurts, it must not wedge
+        committed_guests = sum(
+            1 for g in visited._guest_by_ref.values() if g.committed)
+        assert committed_guests == ok
+        assert len(visited._guest_by_ref) == committed_guests
+        assert visited.core.sites["v-edge"].slots_in_use() == ok
+
+
+# ----------------------------------------------------------------------
+# property tests: the safety invariant under seeded fault schedules
+# ----------------------------------------------------------------------
+class TestLossyControlPlaneProperties:
+    @settings(max_examples=6)
+    @given(st.integers(min_value=0, max_value=2 ** 16),
+           st.sampled_from([0.02, 0.08, 0.15]))
+    def test_established_exactly_once_or_fully_released(self, seed, loss):
+        """Under drop/delay/duplicate/reorder/corrupt on BOTH the
+        northbound and east-west paths: every offered session either
+        establishes exactly once (its slot accounted) or leaves zero
+        provisional leases and zero open charging after the sweeps."""
+        from repro.sim.scenarios import simulate_lossy_control_plane
+        r = simulate_lossy_control_plane(n_sessions=6, loss=loss, seed=seed)
+        assert r.established + r.failed == r.n_offered
+        assert r.orphaned_after_sweep == 0
+        assert r.charging_open == 0
+
+    def test_schedule_replays_deterministically_from_its_seed(self):
+        from repro.sim.scenarios import simulate_lossy_control_plane
+        a = simulate_lossy_control_plane(n_sessions=8, loss=0.1, seed=1234)
+        b = simulate_lossy_control_plane(n_sessions=8, loss=0.1, seed=1234)
+        assert (a.established, a.failed, a.causes, a.wire,
+                a.p99_establish_ms) == \
+            (b.established, b.failed, b.causes, b.wire, b.p99_establish_ms)
+
+    def test_transient_all_excluded_classifies_as_retryable_scarcity(self):
+        """A DISCOVER where every exclusion is transient (saturation,
+        dead/unreachable peers, open breakers) must classify as
+        COMPUTE_SCARCITY — retryable — not terminal NO_FEASIBLE_BINDING."""
+        from repro.core.discovery import Candidate, admissible_set
+        cands = [
+            Candidate(None, "h-edge", None, 0.0, None, False,
+                      "home:compute-saturated"),
+            Candidate(None, "v-edge", None, 0.0, None, False,
+                      "visited:offer-timeout"),
+            Candidate(None, "w-edge", None, 0.0, None, False,
+                      "west:domain-dead"),
+        ]
+        with pytest.raises(SessionError) as ei:
+            admissible_set(cands)
+        assert ei.value.cause is FailureCause.COMPUTE_SCARCITY
+        # one structurally-excluded candidate flips the class: relaxing
+        # the objectives is the only remediation retry cannot provide
+        cands.append(Candidate(None, "x-edge", None, 0.0, None, False,
+                               "sovereignty"))
+        with pytest.raises(SessionError) as ei:
+            admissible_set(cands)
+        assert ei.value.cause is FailureCause.NO_FEASIBLE_BINDING

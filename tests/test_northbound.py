@@ -227,7 +227,9 @@ class TestIdempotency:
 
     def test_commit_retry_after_failed_commit_is_structured(self, gw):
         """A COMMIT refused by the state machine must leave the gateway in
-        a state where the retry gets a structured error, not E_INTERNAL."""
+        a state where the retry gets a structured error, not E_INTERNAL —
+        and the retry re-reports the ORIGINAL failure cause (the response
+        may have been lost in flight), never a bogus out-of-order code."""
         sid, prep = self._prepare(gw)
         # let the provisional leases lapse: commit now fails cleanly
         gw.orch.clock.advance(10 * gw.orch.timers.tau_com)
@@ -237,7 +239,8 @@ class TestIdempotency:
         assert first_try.code == "E_DEADLINE"
         retry = send(gw, req)
         assert isinstance(retry, m.ErrorResponse)
-        assert retry.code == "E_BAD_REQUEST"     # ref gone, told so plainly
+        assert retry.code == "E_DEADLINE"        # same outcome, re-reported
+        assert "re-reports the original outcome" in retry.detail
 
     def test_key_reuse_with_different_payload_conflicts(self, gw):
         sid, prep = self._prepare(gw)
